@@ -1,0 +1,335 @@
+"""Distributed Eigenbench (paper §4.2, Figs. 10-13).
+
+Eigenbench [Hong et al., IISWC'10] as distributed by Siek & Wojciechowski:
+three arrays of reference-cell shared objects per node —
+
+* **hot**: shared by all clients (contended, TM-controlled),
+* **mild**: partitioned per client (TM-controlled, conflict-free),
+* **cold**: partitioned per client, accessed non-transactionally,
+
+with per-scenario read:write ratios, operation locality (probability of
+re-picking from a history window), and a fixed per-operation service time
+(the paper uses ~3 ms to model complex CF computations; scaled down here by
+default so the matrix fits CI — the *relative* framework ordering is what
+the reproduction validates).
+
+Frameworks under test (paper §4.1): Atomic RMI 2 (OptSVA-CF), Atomic RMI
+(SVA), Mutex/R-W locks × S2PL/2PL, GLock, and a TFA-style optimistic
+baseline standing in for HyFlow2. Threads stand in for client nodes;
+Registry nodes with configurable network delay stand in for hosts.
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import (AbortError, LockTransaction, Mode, Registry,
+                        SvaTransaction, TfaTransaction, Transaction, access)
+
+
+class RefCell:
+    """A reference cell whose operations cost ``op_time`` (CF-model work)."""
+
+    op_time: float = 0.0  # class-level; set by the harness
+
+    def __init__(self, value: int = 0):
+        self.value = value
+
+    @access(Mode.READ)
+    def read(self) -> int:
+        if RefCell.op_time:
+            time.sleep(RefCell.op_time)
+        return self.value
+
+    @access(Mode.WRITE)
+    def write(self, v: int) -> None:
+        if RefCell.op_time:
+            time.sleep(RefCell.op_time)
+        self.value = v
+
+
+@dataclass
+class EigenConfig:
+    nodes: int = 4
+    clients_per_node: int = 4
+    arrays_per_node: int = 10          # objects in each array type per node
+    txns_per_client: int = 5
+    hot_ops: int = 10
+    mild_ops: int = 0
+    read_pct: float = 0.9              # fraction of reads among ops
+    locality: float = 0.5
+    history: int = 5
+    op_time_ms: float = 0.3
+    network_delay_ms: float = 0.0
+    seed: int = 42
+
+
+@dataclass
+class Result:
+    framework: str
+    throughput_ops: float              # transactional shared-data ops / sec
+    aborts: int
+    retries: int
+    commits: int
+    abort_rate_pct: float
+    wall_s: float
+
+
+Step = Tuple[Any, str, Optional[int]]  # (shared_obj, "read"/"write", value)
+
+
+def _gen_plan(rng: random.Random, cfg: EigenConfig, hot: List, mild: List
+              ) -> List[Step]:
+    """One transaction's operation list (generated a priori: this is the
+    a-priori knowledge the versioning algorithms feed on)."""
+    steps: List[Step] = []
+    history: List[Any] = []
+
+    def pick(pool: List) -> Any:
+        if history and rng.random() < cfg.locality:
+            obj = rng.choice(history[-cfg.history:])
+        else:
+            obj = rng.choice(pool)
+        history.append(obj)
+        return obj
+
+    ops = (["hot"] * cfg.hot_ops) + (["mild"] * cfg.mild_ops)
+    rng.shuffle(ops)
+    for kind in ops:
+        pool = hot if kind == "hot" else mild
+        obj = pick(pool)
+        if rng.random() < cfg.read_pct:
+            steps.append((obj, "read", None))
+        else:
+            steps.append((obj, "write", rng.randrange(1 << 16)))
+    return steps
+
+
+def _plan_counts(steps: Sequence[Step]) -> Dict[Any, Tuple[int, int]]:
+    counts: Dict[Any, Tuple[int, int]] = {}
+    for obj, op, _ in steps:
+        r, w = counts.get(obj, (0, 0))
+        counts[obj] = (r + 1, w) if op == "read" else (r, w + 1)
+    return counts
+
+
+def _last_access_index(steps: Sequence[Step]) -> Dict[Any, int]:
+    last = {}
+    for i, (obj, _, _) in enumerate(steps):
+        last[obj] = i
+    return last
+
+
+# --------------------------------------------------------------------------- #
+# Per-framework executors: run one transaction given its op plan              #
+# --------------------------------------------------------------------------- #
+def run_optsva(reg: Registry, steps: List[Step], stats: Dict) -> None:
+    t = Transaction(reg)
+    counts = _plan_counts(steps)
+    proxies = {obj: t.accesses(obj, r, w, 0) for obj, (r, w) in counts.items()}
+
+    def body(t):
+        for obj, op, val in steps:
+            p = proxies[obj]
+            p.read() if op == "read" else p.write(val)
+
+    _run_pessimistic(t, body, stats)
+
+
+def run_sva(reg: Registry, steps: List[Step], stats: Dict) -> None:
+    t = SvaTransaction(reg)
+    counts = _plan_counts(steps)
+    proxies = {obj: t.accesses(obj, r + w) for obj, (r, w) in counts.items()}
+
+    def body(t):
+        for obj, op, val in steps:
+            p = proxies[obj]
+            p.read() if op == "read" else p.write(val)
+
+    _run_pessimistic(t, body, stats)
+
+
+def _run_pessimistic(t, body, stats: Dict) -> None:
+    try:
+        t.start(body)
+        stats["commits"] += 1
+    except AbortError:
+        stats["aborts"] += 1
+
+
+def make_lock_runner(kind: str, strict: bool) -> Callable:
+    def run(reg: Registry, steps: List[Step], stats: Dict) -> None:
+        t = LockTransaction(reg, kind=kind, strict=strict)
+        counts = _plan_counts(steps)
+        will_write = {obj: w > 0 for obj, (r, w) in counts.items()}
+        proxies = {obj: (t.writes(obj) if ww else t.reads(obj))
+                   for obj, ww in will_write.items()}
+        last = _last_access_index(steps)
+
+        def body(t):
+            for i, (obj, op, val) in enumerate(steps):
+                p = proxies[obj]
+                p.read() if op == "read" else p.write(val)
+                if not strict and last[obj] == i:
+                    t.done(p)   # programmer-determined last access (2PL)
+
+        t.start(body)
+        stats["commits"] += 1
+
+    return run
+
+
+def run_tfa(reg: Registry, steps: List[Step], stats: Dict) -> None:
+    t = TfaTransaction(reg)
+    proxies = {obj: t.accesses(obj) for obj in {s[0] for s in steps}}
+
+    def body(t):
+        for obj, op, val in steps:
+            p = proxies[obj]
+            p.read() if op == "read" else p.write(val)
+
+    t.start(body)
+    stats["commits"] += 1
+    stats["aborts"] += t.stats.aborts
+    stats["retries"] += t.stats.retries
+
+
+FRAMEWORKS: Dict[str, Callable] = {
+    "optsva-cf": run_optsva,                       # Atomic RMI 2
+    "sva": run_sva,                                # Atomic RMI
+    "tfa": run_tfa,                                # HyFlow2 stand-in
+    "mutex-s2pl": make_lock_runner("mutex", True),
+    "mutex-2pl": make_lock_runner("mutex", False),
+    "rw-s2pl": make_lock_runner("rw", True),
+    "rw-2pl": make_lock_runner("rw", False),
+    "glock": make_lock_runner("glock", True),
+}
+
+
+# --------------------------------------------------------------------------- #
+# Harness                                                                      #
+# --------------------------------------------------------------------------- #
+def run_benchmark(framework: str, cfg: EigenConfig) -> Result:
+    RefCell.op_time = cfg.op_time_ms / 1e3
+    reg = Registry()
+    nodes = [reg.add_node(f"n{i}", network_delay=cfg.network_delay_ms / 1e3)
+             for i in range(cfg.nodes)]
+    hot: List = []
+    mild_by_client: Dict[int, List] = {}
+    n_clients = cfg.nodes * cfg.clients_per_node
+    for ni, node in enumerate(nodes):
+        for i in range(cfg.arrays_per_node):
+            hot.append(reg.bind(f"hot-{ni}-{i}", RefCell(), node))
+    for ci in range(n_clients):
+        node = nodes[ci % cfg.nodes]
+        mild_by_client[ci] = [
+            reg.bind(f"mild-{ci}-{i}", RefCell(), node)
+            for i in range(cfg.arrays_per_node)]
+
+    runner = FRAMEWORKS[framework]
+    stats_per_client = [dict(commits=0, aborts=0, retries=0, ops=0)
+                        for _ in range(n_clients)]
+    # generate all plans up front (a-priori access sets)
+    plans: List[List[List[Step]]] = []
+    for ci in range(n_clients):
+        rng = random.Random((cfg.seed, framework, ci).__hash__())
+        plans.append([_gen_plan(rng, cfg, hot, mild_by_client[ci])
+                      for _ in range(cfg.txns_per_client)])
+
+    barrier = threading.Barrier(n_clients + 1)
+
+    def client(ci: int) -> None:
+        barrier.wait()
+        st = stats_per_client[ci]
+        for steps in plans[ci]:
+            runner(reg, steps, st)
+            st["ops"] += len(steps)
+
+    threads = [threading.Thread(target=client, args=(ci,))
+               for ci in range(n_clients)]
+    for th in threads:
+        th.start()
+    barrier.wait()
+    t0 = time.monotonic()
+    for th in threads:
+        th.join()
+    wall = time.monotonic() - t0
+    reg.shutdown()
+
+    commits = sum(s["commits"] for s in stats_per_client)
+    aborts = sum(s["aborts"] for s in stats_per_client)
+    retries = sum(s["retries"] for s in stats_per_client)
+    ops = sum(s["ops"] for s in stats_per_client)
+    attempted = commits + aborts + retries
+    return Result(framework=framework,
+                  throughput_ops=ops / wall,
+                  aborts=aborts, retries=retries, commits=commits,
+                  abort_rate_pct=100.0 * (aborts + retries) / max(attempted, 1),
+                  wall_s=wall)
+
+
+def sweep(frameworks: Sequence[str], cfg: EigenConfig, vary: str,
+          values: Sequence[Any]) -> List[Result]:
+    out = []
+    for v in values:
+        c = EigenConfig(**{**cfg.__dict__, vary: v})
+        for fw in frameworks:
+            r = run_benchmark(fw, c)
+            out.append((v, r))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--frameworks", default="all")
+    ap.add_argument("--scenario", default="9:1",
+                    help="read:write ratio, e.g. 9:1, 5:5, 1:9")
+    ap.add_argument("--sweep", default="none",
+                    choices=["none", "clients", "nodes", "nodes-mild"])
+    ap.add_argument("--clients-per-node", type=int, default=4)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--txns", type=int, default=5)
+    ap.add_argument("--op-ms", type=float, default=0.3)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale parameters (slow)")
+    args = ap.parse_args()
+
+    r, w = (int(x) for x in args.scenario.split(":"))
+    read_pct = r / (r + w)
+    fws = list(FRAMEWORKS) if args.frameworks == "all" \
+        else args.frameworks.split(",")
+    cfg = EigenConfig(nodes=args.nodes,
+                      clients_per_node=args.clients_per_node,
+                      txns_per_client=args.txns,
+                      read_pct=read_pct,
+                      op_time_ms=args.op_ms)
+    if args.full:
+        cfg = EigenConfig(nodes=16, clients_per_node=16, txns_per_client=10,
+                          read_pct=read_pct, op_time_ms=3.0)
+
+    print("framework,value,throughput_ops_s,abort_rate_pct,commits,aborts,retries")
+    if args.sweep == "none":
+        for fw in fws:
+            res = run_benchmark(fw, cfg)
+            print(f"{fw},-,{res.throughput_ops:.1f},{res.abort_rate_pct:.1f},"
+                  f"{res.commits},{res.aborts},{res.retries}")
+    else:
+        if args.sweep == "clients":
+            pairs = sweep(fws, cfg, "clients_per_node", [2, 4, 8, 16])
+        elif args.sweep == "nodes":
+            pairs = sweep(fws, cfg, "nodes", [2, 4, 8])
+        else:
+            cfg = EigenConfig(**{**cfg.__dict__, "mild_ops": cfg.hot_ops})
+            pairs = sweep(fws, cfg, "nodes", [2, 4, 8])
+        for v, res in pairs:
+            print(f"{res.framework},{v},{res.throughput_ops:.1f},"
+                  f"{res.abort_rate_pct:.1f},{res.commits},{res.aborts},"
+                  f"{res.retries}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Render EXPERIMENTS.md tables from results/dryrun artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def fmt_cell(d):
+    r = d["roofline"]
+    m = d["memory"]
+    peak = (m["peak_bytes"] or 0) / 2 ** 30
+    return (f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {peak:.2f} |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rdir = Path(args.dir)
+    rows, skips, errors = [], [], []
+    for f in sorted(rdir.glob("*.json")):
+        if "--" not in f.stem or f.stem.count("-") > f.stem.count("--") * 2 + 6:
+            pass
+        d = json.loads(f.read_text())
+        tagged = f.stem.split("--")[-1] not in ("single", "multi")
+        if tagged:
+            continue
+        if "error" in d:
+            errors.append(f"{d['arch']}×{d['shape']}×{d['mesh']}: {d['error']}")
+            continue
+        if "skipped" in d:
+            if d["mesh"] == args.mesh:
+                skips.append(f"{d['arch']} × {d['shape']}")
+            continue
+        if d["mesh"] != args.mesh:
+            continue
+        rows.append((d["arch"], d["shape"], fmt_cell(d)))
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s "
+          "| dominant | useful | roofline_frac | peak_GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for _, _, line in sorted(rows):
+        print(line)
+    print()
+    print(f"Skipped cells ({len(skips)}): " + "; ".join(skips))
+    if errors:
+        print("ERRORS:")
+        for e in errors:
+            print("  ", e)
+
+
+if __name__ == "__main__":
+    main()

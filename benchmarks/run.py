@@ -1,0 +1,182 @@
+"""Benchmark harness: one function per paper table/figure + roofline tables.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+``us_per_call`` is wall-clock microseconds per transaction (Eigenbench
+tables) or per step (step bench); ``derived`` carries the figure's metric
+(throughput, abort rate, roofline term...).
+
+Scaled-down parameters by default (CI-sized; ~minutes); ``--full`` runs
+paper-scale Eigenbench (16 "nodes" x 16 clients, 3 ms ops — slow).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+# --------------------------------------------------------------------------- #
+# Fig. 10: throughput vs client count (3 read:write ratios)                    #
+# --------------------------------------------------------------------------- #
+def table_fig10_throughput_vs_clients(full: bool = False) -> None:
+    import benchmarks.eigenbench as eb
+    frameworks = ["optsva-cf", "sva", "tfa", "rw-2pl", "rw-s2pl",
+                  "mutex-2pl", "mutex-s2pl", "glock"]
+    clients = [4, 8, 16] if not full else [4, 16, 32, 64]
+    for ratio, read_pct in (("9:1", 0.9), ("5:5", 0.5), ("1:9", 0.1)):
+        for cpn in clients:
+            cfg = eb.EigenConfig(
+                nodes=4, clients_per_node=cpn, arrays_per_node=10,
+                txns_per_client=3, hot_ops=10, read_pct=read_pct,
+                op_time_ms=3.0 if full else 0.5)
+            for fw in frameworks:
+                r = eb.run_benchmark(fw, cfg)
+                n_txn = r.commits
+                us = 1e6 * r.wall_s / max(n_txn, 1)
+                emit(f"fig10/{ratio}/clients={4*cpn}/{fw}", us,
+                     f"throughput={r.throughput_ops:.0f}ops/s;"
+                     f"abort_rate={r.abort_rate_pct:.1f}%")
+
+
+# --------------------------------------------------------------------------- #
+# Fig. 11: throughput vs node count (hot-array accesses)                       #
+# --------------------------------------------------------------------------- #
+def table_fig11_throughput_vs_nodes(full: bool = False) -> None:
+    import benchmarks.eigenbench as eb
+    frameworks = ["optsva-cf", "sva", "tfa", "rw-2pl", "glock"]
+    for ratio, read_pct in (("9:1", 0.9), ("5:5", 0.5), ("1:9", 0.1)):
+        for nodes in ([2, 4, 8] if not full else [4, 8, 16]):
+            cfg = eb.EigenConfig(
+                nodes=nodes, clients_per_node=4, arrays_per_node=5,
+                txns_per_client=3, hot_ops=10, read_pct=read_pct,
+                op_time_ms=3.0 if full else 0.5)
+            for fw in frameworks:
+                r = eb.run_benchmark(fw, cfg)
+                us = 1e6 * r.wall_s / max(r.commits, 1)
+                emit(f"fig11/{ratio}/nodes={nodes}/{fw}", us,
+                     f"throughput={r.throughput_ops:.0f}ops/s")
+
+
+# --------------------------------------------------------------------------- #
+# Fig. 12: + mild-array accesses (lower contention)                            #
+# --------------------------------------------------------------------------- #
+def table_fig12_with_mild_arrays(full: bool = False) -> None:
+    import benchmarks.eigenbench as eb
+    frameworks = ["optsva-cf", "sva", "tfa", "rw-2pl"]
+    for ratio, read_pct in (("9:1", 0.9), ("5:5", 0.5), ("1:9", 0.1)):
+        cfg = eb.EigenConfig(
+            nodes=4, clients_per_node=4, arrays_per_node=10,
+            txns_per_client=3, hot_ops=10, mild_ops=10, read_pct=read_pct,
+            op_time_ms=3.0 if full else 0.5)
+        for fw in frameworks:
+            r = eb.run_benchmark(fw, cfg)
+            us = 1e6 * r.wall_s / max(r.commits, 1)
+            emit(f"fig12/{ratio}/{fw}", us,
+                 f"throughput={r.throughput_ops:.0f}ops/s")
+
+
+# --------------------------------------------------------------------------- #
+# Fig. 13: abort rates                                                         #
+# --------------------------------------------------------------------------- #
+def table_fig13_abort_rates(full: bool = False) -> None:
+    import benchmarks.eigenbench as eb
+    for cpn in ([4, 8, 16] if not full else [4, 16, 48]):
+        for fw in ("optsva-cf", "sva", "tfa"):
+            cfg = eb.EigenConfig(
+                nodes=4, clients_per_node=cpn, arrays_per_node=10,
+                txns_per_client=3, hot_ops=10, read_pct=0.5,
+                op_time_ms=0.3)
+            r = eb.run_benchmark(fw, cfg)
+            us = 1e6 * r.wall_s / max(r.commits, 1)
+            emit(f"fig13/clients={4*cpn}/{fw}", us,
+                 f"abort_rate={r.abort_rate_pct:.1f}%")
+
+
+# --------------------------------------------------------------------------- #
+# Roofline tables from the dry-run artifacts (deliverable g)                   #
+# --------------------------------------------------------------------------- #
+def table_roofline() -> None:
+    rdir = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not rdir.exists():
+        emit("roofline/missing", 0.0, "run `python -m repro.launch.dryrun`")
+        return
+    for f in sorted(rdir.glob("*--single.json")):
+        d = json.loads(f.read_text())
+        if "skipped" in d or "error" in d:
+            continue
+        r = d["roofline"]
+        emit(f"roofline/{d['arch']}/{d['shape']}",
+             1e6 * max(r["compute_s"], r["memory_s"], r["collective_s"]),
+             f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+             f"useful={r['useful_ratio']:.3f};"
+             f"comp={r['compute_s']:.3f}s;mem={r['memory_s']:.3f}s;"
+             f"coll={r['collective_s']:.3f}s")
+
+
+# --------------------------------------------------------------------------- #
+# CPU step microbenchmark (sanity wall-clock numbers)                          #
+# --------------------------------------------------------------------------- #
+def bench_train_step() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.models import Backbone, LayerGroup, ModelConfig
+    from repro.optim import adamw
+    from repro.runtime.steps import (StepSettings, init_train_state,
+                                     make_train_step)
+
+    cfg = ModelConfig(name="bench", family="dense", d_model=128, n_heads=4,
+                      n_kv_heads=2, d_ff=512, vocab=1024,
+                      groups=(LayerGroup(("attn",), 4),))
+    bb = Backbone(cfg, compute_dtype=jnp.float32, remat=False)
+    settings = StepSettings(zero3=False, gather_weights=False, remat=False)
+    state = init_train_state(bb, jax.random.PRNGKey(0), settings)
+    step = jax.jit(make_train_step(bb, adamw.AdamWConfig(), settings),
+                   donate_argnums=(0,))
+    dcfg = DataConfig(vocab=1024, seq_len=128, global_batch=4)
+    batch = make_batch(dcfg, 0)
+    state, m = step(state, batch)          # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.monotonic()
+    n = 10
+    for i in range(1, n + 1):
+        state, m = step(state, make_batch(dcfg, i))
+    jax.block_until_ready(m["loss"])
+    us = (time.monotonic() - t0) / n * 1e6
+    emit("bench/train_step_cpu_9M", us, f"loss={float(m['loss']):.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tables", default="all",
+                    help="comma list: fig10,fig11,fig12,fig13,roofline,step")
+    args = ap.parse_args()
+    tables = (["fig10", "fig11", "fig12", "fig13", "roofline", "step"]
+              if args.tables == "all" else args.tables.split(","))
+    print("name,us_per_call,derived")
+    if "fig10" in tables:
+        table_fig10_throughput_vs_clients(args.full)
+    if "fig11" in tables:
+        table_fig11_throughput_vs_nodes(args.full)
+    if "fig12" in tables:
+        table_fig12_with_mild_arrays(args.full)
+    if "fig13" in tables:
+        table_fig13_abort_rates(args.full)
+    if "roofline" in tables:
+        table_roofline()
+    if "step" in tables:
+        bench_train_step()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Pytest path setup: make `repro` (src layout) and `benchmarks` importable
+regardless of how pytest is invoked. Deliberately does NOT set
+xla_force_host_platform_device_count — smoke tests must see 1 device;
+production-mesh tests spawn subprocesses that set it themselves.
+"""
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (os.path.join(ROOT, "src"), ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)

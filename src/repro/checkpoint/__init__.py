@@ -1,0 +1,2 @@
+from .store import AsyncCheckpointer, CheckpointStore
+__all__ = ["AsyncCheckpointer", "CheckpointStore"]

@@ -1,0 +1,4 @@
+"""One module per assigned architecture; each registers its ModelConfig.
+
+``repro.models.config.get_config(name)`` lazily imports all of these.
+"""

@@ -1,0 +1,131 @@
+"""Public API surface of the OptSVA-CF core (paper Figs. 7-9).
+
+Users annotate shared-object methods with an access mode, publish the
+object in a :class:`~repro.core.registry.Registry`, and run transactions
+through :class:`~repro.core.transaction.Transaction`.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+INF = math.inf
+
+
+class Mode(enum.Enum):
+    """Operation classification of the complex-object model (paper §2.5)."""
+
+    READ = "read"      # may view state / return value; never modifies state
+    WRITE = "write"    # may modify state; never views it
+    UPDATE = "update"  # may both view and modify state
+
+
+def access(mode: Mode) -> Callable:
+    """Method decorator declaring the access mode of a shared-object method.
+
+    Mirrors the ``@Access(Mode.READ)`` annotation of Atomic RMI 2 (Fig. 7)::
+
+        class Account:
+            @access(Mode.READ)
+            def balance(self): ...
+    """
+
+    def deco(fn: Callable) -> Callable:
+        fn.__access_mode__ = mode
+        return fn
+
+    return deco
+
+
+def method_mode(obj: Any, name: str) -> Mode:
+    """Resolve the declared access mode of ``obj.name``.
+
+    Raises ``TypeError`` for unannotated methods: in the CF model every
+    remotely callable operation must be classified (paper §2.5).
+    """
+    fn = getattr(type(obj), name, None)
+    if fn is None:
+        raise AttributeError(f"{type(obj).__name__} has no method {name!r}")
+    mode = getattr(fn, "__access_mode__", None)
+    if mode is None:
+        raise TypeError(
+            f"method {type(obj).__name__}.{name} lacks an @access(Mode.*) annotation"
+        )
+    return mode
+
+
+@dataclass
+class Suprema:
+    """A-priori upper bounds on per-object access counts (paper §2.2).
+
+    ``inf`` means "unknown"; the algorithm stays correct but releases the
+    object only at commit/abort instead of early.
+    """
+
+    reads: float = INF
+    writes: float = INF
+    updates: float = INF
+
+    @property
+    def total(self) -> float:
+        return self.reads + self.writes + self.updates
+
+    @property
+    def read_only(self) -> bool:
+        """True iff the transaction may only ever read this object."""
+        return self.writes == 0 and self.updates == 0
+
+    def validate(self) -> None:
+        for v, n in ((self.reads, "reads"), (self.writes, "writes"), (self.updates, "updates")):
+            if v != INF and (v < 0 or int(v) != v):
+                raise ValueError(f"supremum {n} must be a non-negative integer or inf, got {v}")
+
+
+class TransactionError(RuntimeError):
+    """Base class for transactional control-flow errors."""
+
+
+class AbortError(TransactionError):
+    """The transaction aborted (manually, by cascade, or forced)."""
+
+    def __init__(self, msg: str, *, forced: bool = False):
+        super().__init__(msg)
+        self.forced = forced
+
+
+class SupremumViolation(AbortError):
+    """An object was accessed more times than its declared supremum (paper §2.2)."""
+
+    def __init__(self, msg: str):
+        super().__init__(msg, forced=True)
+
+
+class RetrySignal(TransactionError):
+    """Raised by ``Transaction.retry()``; caught by ``start`` to re-run the atomic block."""
+
+
+class RemoteObjectFailure(TransactionError):
+    """Crash-stop remote object failure (paper §3.4)."""
+
+
+class IllegalState(TransactionError):
+    """API misuse (e.g. operating on a finished transaction)."""
+
+
+@dataclass
+class OpStats:
+    """Per-transaction operation statistics (used by benchmarks and tests)."""
+
+    reads: int = 0
+    writes: int = 0
+    updates: int = 0
+    waits: int = 0
+    aborts: int = 0
+    retries: int = 0
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def ops(self) -> int:
+        return self.reads + self.writes + self.updates

@@ -1,0 +1,79 @@
+"""Copy and log buffers for the complex-object model (paper §2.6).
+
+* :class:`CopyBuffer` — a deep copy of the entire object state. Creating one
+  requires the access condition (it views state); it then serves local reads
+  after release, and the checkpoint variant (``st``) restores state on abort.
+
+* :class:`LogBuffer` — records method invocations without touching the
+  object's state, which is what lets *pure writes* execute with **no prior
+  synchronization**. Applying the log replays the recorded calls against the
+  real object ("if a method was not previously executed, it is executed on
+  the original object at the time the log is being applied", §2.6).
+
+Both buffer types live on the object's home node (CF model: side effects of
+replay must occur where the object lives). In this in-process realization
+that is automatic; the ``home_node`` tag is kept for the distributed
+simulation and assertions.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Callable, List, Optional, Tuple
+
+
+class CopyBuffer:
+    """Full-state snapshot of a shared object."""
+
+    __slots__ = ("state", "instance", "home_node")
+
+    def __init__(self, obj: Any, instance: int, home_node: Optional[object] = None):
+        self.state = copy.deepcopy(obj)
+        self.instance = instance          # instance epoch observed at snapshot time
+        self.home_node = home_node
+
+    def call(self, method: str, args: tuple, kwargs: dict) -> Any:
+        """Execute ``method`` against the buffered copy (local read path)."""
+        return getattr(self.state, method)(*args, **kwargs)
+
+    def restore_into(self, target_holder: "StateHolder") -> None:
+        """Abort path: replace the live object state with the snapshot."""
+        target_holder.obj = copy.deepcopy(self.state)
+
+
+class LogBuffer:
+    """Method-invocation log for unsynchronized pure writes."""
+
+    __slots__ = ("entries", "home_node")
+
+    def __init__(self, home_node: Optional[object] = None):
+        self.entries: List[Tuple[str, tuple, dict]] = []
+        self.home_node = home_node
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def record(self, method: str, args: tuple, kwargs: dict) -> None:
+        """Log a write call. Pure writes return no value, so recording is
+        sufficient — the effects materialize at apply time."""
+        self.entries.append((method, args, kwargs))
+
+    def apply_to(self, obj: Any) -> None:
+        """Replay the log against the real object, then clear it."""
+        for method, args, kwargs in self.entries:
+            getattr(obj, method)(*args, **kwargs)
+        self.entries.clear()
+
+
+class StateHolder:
+    """Mutable cell holding the live state of a shared object.
+
+    Restores swap the referenced object rather than mutating in place so a
+    doomed transaction still holding the stale reference keeps reading the
+    invalid instance it observed (matching the paper's "invalid instance"
+    semantics) instead of silently seeing restored state.
+    """
+
+    __slots__ = ("obj",)
+
+    def __init__(self, obj: Any):
+        self.obj = obj

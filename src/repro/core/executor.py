@@ -1,0 +1,126 @@
+"""The executor thread (paper §3.3).
+
+OptSVA-CF calls for asynchronous tasks (read-only snapshotting, last-write
+log application). Spawning a thread per task is costly, so — exactly as in
+Atomic RMI 2 — each node runs one always-on executor thread to which
+transactions hand *tasks*: a ``condition`` plus ``code``. The executor runs
+the code only once the condition holds, re-evaluating whenever any version
+counter (``lv``/``ltv``) that can influence a condition changes.
+
+Task code never blocks (its only precondition IS the condition), so a single
+thread cannot deadlock; it can, however, become a throughput bottleneck under
+heavy asynchrony — the paper observes the same in §4.3, and ``workers > 1``
+is provided to explore beyond it (a beyond-paper knob; default stays 1,
+faithful).
+"""
+from __future__ import annotations
+
+import threading
+import traceback
+from collections import deque
+from typing import Callable, List, Optional
+
+from .api import TransactionError
+
+
+class Task:
+    """A unit of deferred work gated on a version-counter condition."""
+
+    __slots__ = ("condition", "code", "done", "error", "name")
+
+    def __init__(self, condition: Callable[[], bool], code: Callable[[], None],
+                 name: str = "task"):
+        self.condition = condition
+        self.code = code
+        self.done = threading.Event()
+        self.error: Optional[BaseException] = None
+        self.name = name
+
+    def join(self) -> None:
+        """Wait for completion; re-raise transactional errors in the caller."""
+        self.done.wait()
+        if self.error is not None:
+            if isinstance(self.error, TransactionError):
+                raise self.error
+            raise RuntimeError(f"executor task {self.name} failed") from self.error
+
+    def run_if_ready(self) -> bool:
+        if not self.condition():
+            return False
+        try:
+            self.code()
+        except BaseException as e:  # noqa: BLE001 - propagate via join()
+            self.error = e
+            if not isinstance(e, TransactionError):  # pragma: no cover
+                traceback.print_exc()
+        finally:
+            self.done.set()
+        return True
+
+
+class Executor:
+    """Per-node executor: queue of condition-gated tasks + wakeup signal."""
+
+    def __init__(self, name: str = "executor", workers: int = 1):
+        self._lock = threading.Lock()
+        self._wakeup = threading.Condition(self._lock)
+        self._pending: deque[Task] = deque()
+        self._stopping = False
+        self._threads: List[threading.Thread] = []
+        for i in range(max(1, workers)):
+            t = threading.Thread(target=self._loop, name=f"{name}-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    # Called by VersionHeader listeners on every lv/ltv/instance change.
+    def poke(self) -> None:
+        with self._lock:
+            self._wakeup.notify_all()
+
+    def submit(self, condition: Callable[[], bool], code: Callable[[], None],
+               name: str = "task") -> Task:
+        task = Task(condition, code, name)
+        with self._lock:
+            if self._stopping:
+                raise RuntimeError("executor is shut down")
+            self._pending.append(task)
+            self._wakeup.notify_all()
+        return task
+
+    def _loop(self) -> None:
+        while True:
+            with self._lock:
+                if self._stopping and not self._pending:
+                    return
+                task: Optional[Task] = None
+                # Scan for a ready task; preserve FIFO among non-ready ones.
+                for _ in range(len(self._pending)):
+                    cand = self._pending.popleft()
+                    try:
+                        ready = cand.condition()
+                    except BaseException as e:  # noqa: BLE001
+                        cand.error = e
+                        cand.done.set()
+                        continue
+                    if ready:
+                        task = cand
+                        break
+                    self._pending.append(cand)
+                if task is None:
+                    if self._stopping:
+                        return
+                    # Counter changes poke us; timeout is a liveness backstop.
+                    self._wakeup.wait(timeout=0.05)
+                    continue
+            task.run_if_ready()
+
+    def shutdown(self) -> None:
+        with self._lock:
+            self._stopping = True
+            self._wakeup.notify_all()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def pending_count(self) -> int:
+        with self._lock:
+            return len(self._pending)

@@ -1,0 +1,155 @@
+"""Nodes, the object registry, and shared-object containers (paper §3, Fig. 6).
+
+A :class:`Node` stands in for one network host/JVM: it *homes* shared
+objects, owns the node's single executor thread (§3.3), and can simulate
+network latency for calls arriving from other nodes. A :class:`Registry`
+is the RMI-registry analogue: it binds names to shared objects and lets
+clients ``locate`` them.
+
+Every operation on a :class:`SharedObject` executes on its home node (CF
+model) — here, in-process, the "home node" is an accounting entity that the
+fault-tolerance layer and the latency simulation key off.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+from .api import Mode, RemoteObjectFailure, method_mode
+from .buffers import StateHolder
+from .executor import Executor
+from .versioning import VersionHeader
+
+
+class Node:
+    """One simulated host: homes objects, runs one executor thread."""
+
+    def __init__(self, name: str, *, network_delay: float = 0.0,
+                 executor_workers: int = 1):
+        self.name = name
+        self.network_delay = network_delay
+        self.executor = Executor(name=f"exec-{name}", workers=executor_workers)
+        self.alive = True
+
+    def simulate_network(self, from_node: Optional["Node"]) -> None:
+        """Sleep for the configured one-way latency on cross-node calls."""
+        if self.network_delay > 0.0 and from_node is not self:
+            time.sleep(self.network_delay)
+
+    def crash(self) -> None:
+        """Crash-stop the node: all homed objects become unreachable."""
+        self.alive = False
+
+    def shutdown(self) -> None:
+        self.executor.shutdown()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Node({self.name})"
+
+
+class SharedObject:
+    """A shared object homed on a node, with its versioning header.
+
+    ``holder.obj`` is the live state; all transactional bookkeeping
+    (version counters, instance epoch) lives in ``header``.
+    """
+
+    def __init__(self, name: str, obj: Any, node: Node):
+        self.name = name
+        self.holder = StateHolder(obj)
+        self.node = node
+        self.header = VersionHeader(owner_node=node)
+        self.header.add_listener(node.executor.poke)
+        self.failed = False
+        # operation log fence for fault tolerance: last time a transaction
+        # holding this object talked to it (paper §3.4).
+        self.last_contact: float = time.monotonic()
+        self.holding_txn: Optional[object] = None
+        self._contact_lock = threading.Lock()
+
+    # -- direct (non-transactional) execution --------------------------------
+    def raw_call(self, method: str, args: tuple, kwargs: dict,
+                 from_node: Optional[Node] = None) -> Any:
+        """Execute a method on the live state at the home node."""
+        self.check_reachable()
+        self.node.simulate_network(from_node)
+        return getattr(self.holder.obj, method)(*args, **kwargs)
+
+    def mode_of(self, method: str) -> Mode:
+        return method_mode(self.holder.obj, method)
+
+    def check_reachable(self) -> None:
+        if self.failed or not self.node.alive:
+            raise RemoteObjectFailure(f"remote object {self.name!r} is unreachable")
+
+    def fail(self) -> None:
+        """Crash-stop this object (paper §3.4: removed from the system)."""
+        self.failed = True
+        with self.header.lock:
+            self.header._notify()
+
+    # -- fault-tolerance heartbeat -------------------------------------------
+    def touch(self, txn: object) -> None:
+        with self._contact_lock:
+            self.last_contact = time.monotonic()
+            self.holding_txn = txn
+
+    def clear_holder(self, txn: object) -> None:
+        with self._contact_lock:
+            if self.holding_txn is txn:
+                self.holding_txn = None
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"SharedObject({self.name}@{self.node.name}, {self.header!r})"
+
+
+class Registry:
+    """Name → shared object directory (the RMI-registry analogue)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._objects: Dict[str, SharedObject] = {}
+        self._nodes: Dict[str, Node] = {}
+
+    def add_node(self, name: str, **kw) -> Node:
+        with self._lock:
+            if name in self._nodes:
+                raise ValueError(f"node {name!r} already exists")
+            node = Node(name, **kw)
+            self._nodes[name] = node
+            return node
+
+    def node(self, name: str) -> Node:
+        return self._nodes[name]
+
+    @property
+    def nodes(self) -> Iterable[Node]:
+        return list(self._nodes.values())
+
+    def bind(self, name: str, obj: Any, node: Node) -> SharedObject:
+        with self._lock:
+            if name in self._objects:
+                raise ValueError(f"object {name!r} already bound")
+            shared = SharedObject(name, obj, node)
+            self._objects[name] = shared
+            return shared
+
+    def locate(self, name: str) -> SharedObject:
+        with self._lock:
+            try:
+                return self._objects[name]
+            except KeyError:
+                raise KeyError(f"no object bound under {name!r}") from None
+
+    def unbind(self, name: str) -> None:
+        with self._lock:
+            self._objects.pop(name, None)
+
+    def all_objects(self) -> Dict[str, SharedObject]:
+        with self._lock:
+            return dict(self._objects)
+
+    def shutdown(self) -> None:
+        for node in self.nodes:
+            node.shutdown()

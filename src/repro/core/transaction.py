@@ -1,0 +1,556 @@
+"""OptSVA-CF transactions (paper §2.8, API per Figs. 8-9).
+
+The transaction life cycle:
+
+1. *Preamble* — the client declares its access set with ``reads`` /
+   ``writes`` / ``updates`` / ``accesses``, optionally with suprema.
+2. *Start* — private versions are dispensed atomically for the whole access
+   set (global-order version-lock acquisition, §2.10.2); for every
+   *read-only* object an asynchronous buffering task is enqueued on the home
+   node's executor (§2.7, §2.8.1).
+3. *Operations* — dispatched by declared :class:`~repro.core.api.Mode`
+   through the rules of §2.8.2-§2.8.4 (buffering, log-writes without
+   synchronization, early release at suprema, asynchronous release on last
+   write).
+4. *Commit / abort* — §2.8.5-§2.8.6: join outstanding tasks, wait the
+   commit condition per object, apply stray logs, release, validate
+   instances, terminate (restoring state and bumping instance epochs on
+   abort, which is what drives cascading aborts).
+
+Implementation notes vs. the paper text (also see DESIGN.md):
+
+* §2.8.4 says the post-last-write clone goes to ``st``; that would clobber
+  the abort checkpoint, so we clone to the copy buffer ``buf`` (consistent
+  with §2.7 and the OptSVA original) — a typo in the paper.
+* "Invalid instance" marking is realized as an *instance epoch* on the
+  version header: an aborting transaction that restores state bumps the
+  epoch; any transaction that observed the prior epoch is doomed at its
+  next validity check. Restores (and epoch bumps) only happen for objects
+  the aborting transaction actually modified — restoring an unmodified
+  object would spuriously doom successors.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any, Callable, Dict, List, Optional, Union
+
+from .api import (
+    INF, AbortError, IllegalState, Mode, OpStats, RetrySignal, Suprema,
+    SupremumViolation, TransactionError,
+)
+from .buffers import CopyBuffer, LogBuffer
+from .executor import Task
+from .registry import Node, Registry, SharedObject
+
+_txn_ids = itertools.count(1)
+
+
+class ObjectAccess:
+    """Transaction-local bookkeeping for one shared object."""
+
+    __slots__ = (
+        "shared", "sup", "pv", "rc", "wc", "uc", "st", "buf", "log",
+        "seen_instance", "holds_access", "released", "release_task",
+        "modified", "lock",
+    )
+
+    def __init__(self, shared: SharedObject, sup: Suprema):
+        self.shared = shared
+        self.sup = sup
+        self.pv: int = 0
+        self.rc = self.wc = self.uc = 0
+        self.st: Optional[CopyBuffer] = None      # abort-restore checkpoint
+        self.buf: Optional[CopyBuffer] = None     # post-release local-read buffer
+        self.log = LogBuffer(home_node=shared.node)
+        self.seen_instance: Optional[int] = None  # epoch observed at checkpoint
+        self.holds_access = False                 # passed access condition
+        self.released = False                     # lv handed over (or task will)
+        self.release_task: Optional[Task] = None  # async buffer/apply task
+        self.modified = False                     # we touched live state
+        self.lock = threading.Lock()              # task <-> main thread
+
+    @property
+    def accessed_directly(self) -> bool:
+        return self.holds_access
+
+    def count_for(self, mode: Mode) -> int:
+        return {Mode.READ: self.rc, Mode.WRITE: self.wc, Mode.UPDATE: self.uc}[mode]
+
+    def sup_for(self, mode: Mode) -> float:
+        return {Mode.READ: self.sup.reads, Mode.WRITE: self.sup.writes,
+                Mode.UPDATE: self.sup.updates}[mode]
+
+    def all_suprema_met(self) -> bool:
+        return (self.rc == self.sup.reads and self.wc == self.sup.writes
+                and self.uc == self.sup.updates)
+
+    def writes_updates_done(self) -> bool:
+        return self.wc == self.sup.writes and self.uc == self.sup.updates
+
+
+class TxProxy:
+    """Client-side stub: forwards method calls through the transaction.
+
+    The Atomic RMI 2 proxy object injects OptSVA-CF concurrency control
+    around each method invocation (paper §3.1); here the injection point is
+    ``Transaction._invoke``.
+    """
+
+    __slots__ = ("_txn", "_shared")
+
+    def __init__(self, txn: "Transaction", shared: SharedObject):
+        object.__setattr__(self, "_txn", txn)
+        object.__setattr__(self, "_shared", shared)
+
+    def __getattr__(self, method: str) -> Callable[..., Any]:
+        txn: Transaction = object.__getattribute__(self, "_txn")
+        shared: SharedObject = object.__getattribute__(self, "_shared")
+
+        def call(*args: Any, **kwargs: Any) -> Any:
+            return txn._invoke(shared, method, args, kwargs)
+
+        call.__name__ = method
+        return call
+
+    def __repr__(self) -> str:  # pragma: no cover
+        shared = object.__getattribute__(self, "_shared")
+        return f"TxProxy({shared.name})"
+
+
+class Transaction:
+    """An OptSVA-CF transaction (Fig. 8 API)."""
+
+    def __init__(self, registry: Optional[Registry] = None, *,
+                 irrevocable: bool = False,
+                 client_node: Optional[Node] = None,
+                 wait_timeout: Optional[float] = None):
+        self.id = next(_txn_ids)
+        self.registry = registry
+        self.irrevocable = irrevocable
+        self.client_node = client_node
+        self.wait_timeout = wait_timeout
+        self.stats = OpStats()
+        self._accesses: Dict[SharedObject, ObjectAccess] = {}
+        self._order: List[ObjectAccess] = []
+        self._started = False
+        self._terminated = False
+        self._doomed = False
+
+    # ------------------------------------------------------------------ #
+    # Preamble (Fig. 8): declaring the access set with suprema.          #
+    # ------------------------------------------------------------------ #
+    def _declare(self, obj: Union[SharedObject, str], sup: Suprema) -> TxProxy:
+        if self._started:
+            raise IllegalState("access set must be declared before start()")
+        shared = self._resolve(obj)
+        sup.validate()
+        if shared in self._accesses:
+            raise IllegalState(f"object {shared.name!r} already declared")
+        acc = ObjectAccess(shared, sup)
+        self._accesses[shared] = acc
+        self._order.append(acc)
+        return TxProxy(self, shared)
+
+    def _resolve(self, obj: Union[SharedObject, str]) -> SharedObject:
+        if isinstance(obj, SharedObject):
+            return obj
+        if self.registry is None:
+            raise IllegalState("string lookup requires a registry")
+        return self.registry.locate(obj)
+
+    def reads(self, obj: Union[SharedObject, str], max_reads: float = INF) -> TxProxy:
+        return self._declare(obj, Suprema(reads=max_reads, writes=0, updates=0))
+
+    def writes(self, obj: Union[SharedObject, str], max_writes: float = INF) -> TxProxy:
+        return self._declare(obj, Suprema(reads=0, writes=max_writes, updates=0))
+
+    def updates(self, obj: Union[SharedObject, str], max_updates: float = INF) -> TxProxy:
+        return self._declare(obj, Suprema(reads=0, writes=0, updates=max_updates))
+
+    def accesses(self, obj: Union[SharedObject, str], max_reads: float = INF,
+                 max_writes: float = INF, max_updates: float = INF) -> TxProxy:
+        return self._declare(obj, Suprema(max_reads, max_writes, max_updates))
+
+    # ------------------------------------------------------------------ #
+    # Start (§2.8.1)                                                     #
+    # ------------------------------------------------------------------ #
+    def begin(self) -> None:
+        """Acquire private versions atomically; kick off read-only buffering."""
+        if self._started:
+            raise IllegalState("transaction already started")
+        self._started = True
+        self._terminated = False
+        from .versioning import dispense_versions
+        headers = [a.shared.header for a in self._order]
+        pvs = dispense_versions(headers)
+        for a, pv in zip(self._order, pvs):
+            a.pv = pv
+        # §2.7/§2.8.1: asynchronously snapshot-and-release read-only objects.
+        for a in self._order:
+            if a.sup.read_only and a.sup.reads > 0:
+                self._spawn_readonly_buffering(a)
+
+    def _cond_for(self, a: ObjectAccess) -> Callable[[], bool]:
+        """Access condition — or termination condition for irrevocable txns (§2.4)."""
+        h = a.shared.header
+        if self.irrevocable:
+            return lambda: h.termination_ready(a.pv)
+        return lambda: h.access_ready(a.pv)
+
+    def _spawn_readonly_buffering(self, a: ObjectAccess) -> None:
+        shared = a.shared
+
+        def code() -> None:
+            with shared.header.lock:
+                inst = shared.header.instance
+            with a.lock:
+                a.seen_instance = inst
+                a.buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+            # Snapshot taken: the object is immediately released (§2.7).
+            shared.header.release_to(a.pv)
+            with a.lock:
+                a.released = True
+
+        a.release_task = shared.node.executor.submit(
+            self._cond_for(a), code, name=f"ro-buffer:{shared.name}:T{self.id}")
+
+    # ------------------------------------------------------------------ #
+    # Operation dispatch                                                  #
+    # ------------------------------------------------------------------ #
+    def _invoke(self, shared: SharedObject, method: str, args: tuple,
+                kwargs: dict) -> Any:
+        if self._terminated:
+            raise IllegalState("transaction already terminated")
+        if not self._started:
+            raise IllegalState("transaction not started; call begin()/start()")
+        shared.check_reachable()
+        a = self._accesses[shared]
+        mode = shared.mode_of(method)
+        self._check_supremum(a, mode)
+        if mode is Mode.READ:
+            v = self._read(a, method, args, kwargs)
+            self.stats.reads += 1
+        elif mode is Mode.WRITE:
+            v = self._write(a, method, args, kwargs)
+            self.stats.writes += 1
+        else:
+            v = self._update(a, method, args, kwargs)
+            self.stats.updates += 1
+        # heartbeat: only an actual holder (past the access condition and
+        # not yet released) counts for the §3.4 failure detector
+        if a.holds_access and not a.released:
+            shared.touch(self)
+        elif a.released:
+            shared.clear_holder(self)
+        return v
+
+    def _check_supremum(self, a: ObjectAccess, mode: Mode) -> None:
+        if a.count_for(mode) + 1 > a.sup_for(mode):
+            self._force_abort(
+                f"supremum violation: {mode.value} #{a.count_for(mode) + 1} on "
+                f"{a.shared.name!r} exceeds bound {a.sup_for(mode)}",
+                exc=SupremumViolation)
+
+    # -- read (§2.8.2) -------------------------------------------------------
+    def _read(self, a: ObjectAccess, method: str, args: tuple, kwargs: dict) -> Any:
+        shared = a.shared
+        if a.sup.read_only:
+            # Wait for the asynchronous buffering task, read from the buffer.
+            assert a.release_task is not None
+            a.release_task.join()
+            self._validity_check()
+            a.rc += 1
+            return a.buf.call(method, args, kwargs)
+        if a.release_task is not None:
+            # Released asynchronously after last write: reads go to the buffer.
+            a.release_task.join()
+            self._validity_check()
+            a.rc += 1
+            return a.buf.call(method, args, kwargs)
+        if a.released and a.buf is not None:
+            # Released synchronously after last write/update.
+            self._validity_check()
+            a.rc += 1
+            return a.buf.call(method, args, kwargs)
+        if not a.holds_access:
+            self._wait_access_and_checkpoint(a)
+            self._apply_log_if_pending(a)
+        self._validity_check()
+        v = shared.raw_call(method, args, kwargs, from_node=self.client_node)
+        a.rc += 1
+        if a.all_suprema_met():   # last operation of any kind: release (§2.8.2)
+            self._release(a)
+        return v
+
+    # -- update (§2.8.3) -----------------------------------------------------
+    def _update(self, a: ObjectAccess, method: str, args: tuple, kwargs: dict) -> Any:
+        shared = a.shared
+        if not a.holds_access:
+            self._wait_access_and_checkpoint(a)
+            self._apply_log_if_pending(a)
+        self._validity_check()
+        v = shared.raw_call(method, args, kwargs, from_node=self.client_node)
+        a.uc += 1
+        a.modified = True
+        if a.writes_updates_done():
+            # No further writes/updates: buffer for trailing local reads, release.
+            with shared.header.lock:
+                inst = shared.header.instance
+            a.buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+            self._release(a)
+        return v
+
+    # -- write (§2.8.4) ------------------------------------------------------
+    def _write(self, a: ObjectAccess, method: str, args: tuple, kwargs: dict) -> Any:
+        shared = a.shared
+        if a.holds_access:
+            # Preceding reads/updates hold the object: operate directly.
+            self._validity_check()
+            v = shared.raw_call(method, args, kwargs, from_node=self.client_node)
+            a.wc += 1
+            a.modified = True
+            if a.writes_updates_done():
+                with shared.header.lock:
+                    inst = shared.header.instance
+                # Paper §2.8.4 says "cloned to st"; that must be buf (see module doc).
+                a.buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+                self._release(a)
+            return v
+        # No preceding reads/updates: log-buffer the write, no synchronization.
+        a.log.record(method, args, kwargs)
+        a.wc += 1
+        if a.wc == a.sup.writes and a.sup.updates == 0:
+            # Final write (and no updates will follow): asynchronous apply+release.
+            self._spawn_lastwrite_apply(a)
+        return None
+
+    def _spawn_lastwrite_apply(self, a: ObjectAccess) -> None:
+        shared = a.shared
+
+        def code() -> None:
+            with shared.header.lock:
+                inst = shared.header.instance
+            st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+            a.log.apply_to(shared.holder.obj)
+            buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+            with a.lock:
+                a.seen_instance = inst
+                a.st = st
+                a.buf = buf
+                a.modified = True
+                a.holds_access = True
+            shared.header.release_to(a.pv)
+            with a.lock:
+                a.released = True
+
+        a.release_task = shared.node.executor.submit(
+            self._cond_for(a), code, name=f"lw-apply:{shared.name}:T{self.id}")
+
+    # -- shared helpers --------------------------------------------------------
+    def _wait_access_and_checkpoint(self, a: ObjectAccess) -> None:
+        shared = a.shared
+        h = shared.header
+        self.stats.waits += 1
+        if self.irrevocable:
+            h.wait_termination(a.pv, timeout=self.wait_timeout)
+        else:
+            h.wait_access(a.pv, timeout=self.wait_timeout)
+        shared.check_reachable()
+        with h.lock:
+            inst = h.instance
+        a.seen_instance = inst
+        a.st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+        a.holds_access = True
+        shared.touch(self)
+
+    def _apply_log_if_pending(self, a: ObjectAccess) -> None:
+        if len(a.log):
+            a.log.apply_to(a.shared.holder.obj)
+            a.modified = True
+
+    def _release(self, a: ObjectAccess) -> None:
+        if not a.released:
+            a.shared.header.release_to(a.pv)
+            a.released = True
+
+    def _validity_check(self) -> None:
+        """Force an abort as soon as any observed instance was invalidated (§2.3)."""
+        for a in self._order:
+            with a.lock:
+                seen = a.seen_instance
+            if seen is not None and a.shared.header.instance != seen:
+                self._force_abort(
+                    f"object {a.shared.name!r} was invalidated by a cascading abort")
+
+    def _force_abort(self, msg: str, exc: type = AbortError) -> None:
+        self._do_abort()
+        self.stats.aborts += 1
+        err = exc(msg) if exc is SupremumViolation else exc(msg, forced=True)
+        raise err
+
+    # ------------------------------------------------------------------ #
+    # Commit (§2.8.5)                                                    #
+    # ------------------------------------------------------------------ #
+    def commit(self) -> None:
+        if self._terminated:
+            raise IllegalState("transaction already terminated")
+        if not self._started:
+            raise IllegalState("transaction not started")
+        # 1. Wait for extant asynchronous tasks.
+        task_error: Optional[BaseException] = None
+        for a in self._order:
+            if a.release_task is not None:
+                try:
+                    a.release_task.join()
+                except TransactionError as e:
+                    task_error = e
+        if task_error is not None:
+            self._do_abort()
+            self.stats.aborts += 1
+            raise AbortError(f"asynchronous task failed: {task_error}", forced=True)
+        # 2. Wait until the commit condition holds for every object.
+        for a in self._order:
+            a.shared.header.wait_termination(a.pv, timeout=self.wait_timeout)
+        # 3. Checkpoint untouched objects; apply left-over logs; release.
+        for a in self._order:
+            h = a.shared.header
+            if a.seen_instance is None:
+                with h.lock:
+                    a.seen_instance = h.instance
+                a.st = CopyBuffer(a.shared.holder.obj, a.seen_instance,
+                                  home_node=a.shared.node)
+            if len(a.log):
+                a.log.apply_to(a.shared.holder.obj)
+                a.modified = True
+            self._release(a)
+        # 4. Validity check: abort if anything we observed was invalidated.
+        doomed = any(
+            a.seen_instance is not None and a.shared.header.instance != a.seen_instance
+            for a in self._order)
+        if doomed:
+            self._do_abort()
+            self.stats.aborts += 1
+            raise AbortError("commit-time validation failed (cascading abort)",
+                             forced=True)
+        # 5. Terminate: advance ltv on every object.
+        for a in self._order:
+            a.shared.header.terminate_to(a.pv)
+            a.shared.clear_holder(self)
+        self._terminated = True
+
+    # ------------------------------------------------------------------ #
+    # Abort (§2.8.6) and retry                                            #
+    # ------------------------------------------------------------------ #
+    def abort(self) -> None:
+        """Manual abort (Fig. 9). Raises AbortError to unwind the atomic block."""
+        self._do_abort()
+        self.stats.aborts += 1
+        raise AbortError("transaction aborted manually", forced=False)
+
+    def retry(self) -> None:
+        """Manual retry: abort, then signal ``start`` to re-run the block."""
+        self._do_abort()
+        self.stats.retries += 1
+        raise RetrySignal("transaction retry requested")
+
+    def _do_abort(self) -> None:
+        if self._terminated:
+            return
+        # 1. Wait for extant tasks (they may still be mutating state).
+        for a in self._order:
+            if a.release_task is not None:
+                try:
+                    a.release_task.join()
+                except TransactionError:
+                    pass
+        # 2. Wait for the commit condition per object.
+        for a in self._order:
+            try:
+                a.shared.header.wait_termination(a.pv, timeout=self.wait_timeout)
+            except TimeoutError:
+                pass  # fault-tolerance path: predecessor crashed; monitor cleans up
+        # 3. Restore modified objects from their checkpoints, oldest-restore-wins.
+        for a in self._order:
+            h = a.shared.header
+            with a.lock:
+                seen, st, modified = a.seen_instance, a.st, a.modified
+            if st is not None and modified:
+                with h.lock:
+                    if h.instance == seen:
+                        # Not already restored to an older version: restore + invalidate.
+                        st.restore_into(a.shared.holder)
+                        h.instance += 1
+                        h._notify()
+        # 4. Release and terminate every object.
+        for a in self._order:
+            self._release(a)
+            a.shared.header.terminate_to(a.pv)
+            a.shared.clear_holder(self)
+        self._terminated = True
+
+    # ------------------------------------------------------------------ #
+    # start(): run an atomic block with commit/abort/retry handling       #
+    # ------------------------------------------------------------------ #
+    def start(self, body: Callable[["Transaction"], Any], *,
+              max_retries: int = 64) -> Any:
+        """Run ``body(self)``; commit on fall-through (Fig. 9 semantics).
+
+        ``retry()`` re-runs the block under a fresh transaction incarnation
+        (new private versions, same declared access set). Manual and forced
+        aborts propagate as :class:`AbortError` after rollback completes.
+        """
+        attempts = 0
+        while True:
+            attempts += 1
+            if not self._started:
+                self.begin()
+            try:
+                result = body(self)
+            except RetrySignal:
+                if attempts > max_retries:
+                    raise AbortError("retry limit exceeded", forced=True) from None
+                self._reincarnate()
+                continue
+            except AbortError:
+                raise  # rollback already performed by abort()/_force_abort
+            except BaseException:
+                # Any exception escaping the block — including remote-object
+                # failures (§3.4) — aborts the transaction (§3.2).
+                if not self._terminated:
+                    self._do_abort()
+                    self.stats.aborts += 1
+                raise
+            if not self._terminated:
+                self.commit()
+            return result
+
+    def _reincarnate(self) -> None:
+        """Rebuild per-object records for a retry: fresh versions, same set."""
+        fresh: List[ObjectAccess] = []
+        mapping: Dict[SharedObject, ObjectAccess] = {}
+        for a in self._order:
+            na = ObjectAccess(a.shared, a.sup)
+            fresh.append(na)
+            mapping[a.shared] = na
+        self._order = fresh
+        self._accesses = mapping
+        self._started = False
+        self._terminated = False
+        self.begin()
+
+    # -- context-manager sugar -------------------------------------------------
+    def __enter__(self) -> "Transaction":
+        if not self._started:
+            self.begin()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            if not self._terminated:
+                self.commit()
+            return False
+        if not self._terminated and not isinstance(exc, TransactionError):
+            self._do_abort()
+            self.stats.aborts += 1
+        return False

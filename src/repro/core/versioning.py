@@ -1,0 +1,143 @@
+"""Versioning concurrency control primitives (paper §2.1, §2.3).
+
+Every shared object carries a :class:`VersionHeader`:
+
+* ``gv``  — the private-version dispenser. A starting transaction, holding
+  the object's version lock, takes ``pv = gv + 1`` and increments ``gv``.
+  Dispensing under per-object locks acquired in a *global order* makes the
+  assignment atomic across the access set and yields properties (a)-(d) of
+  §2.1 and deadlock freedom (§2.10.2).
+* ``lv``  — the local version: the pv of the transaction that most recently
+  *released* the object (early release, commit, or abort).
+* ``ltv`` — the local terminal version: the pv of the transaction that most
+  recently *terminated* (committed or aborted) on the object.
+* ``instance`` — the object-instance epoch. An aborting transaction that
+  restores the object's state bumps this counter; any transaction that
+  observed the previous instance is thereby *invalidated* ("marks each
+  object in its access set as an invalid instance", §2.3) and will be
+  forced to abort at its next validity check.
+
+Conditions (paper §2.1, §2.3):
+
+* access condition:  ``pv - 1 == lv``
+* commit/termination condition: ``pv - 1 == ltv``
+
+Irrevocable transactions replace every access-condition wait with a
+termination-condition wait (§2.4), so they never observe early-released
+(and hence potentially revocable) state.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Callable, List, Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .executor import Executor
+
+_header_ids = itertools.count(1)
+
+
+class VersionHeader:
+    """Concurrency-control state attached to one shared object."""
+
+    __slots__ = (
+        "uid", "lock", "cond", "gv", "lv", "ltv", "instance",
+        "_listeners", "owner_node",
+    )
+
+    def __init__(self, owner_node: Optional[object] = None):
+        self.uid: int = next(_header_ids)      # global order for start-time locking
+        self.lock = threading.RLock()          # the object's "version lock"
+        self.cond = threading.Condition(self.lock)
+        self.gv: int = 0
+        self.lv: int = 0
+        self.ltv: int = 0
+        self.instance: int = 0
+        self._listeners: List[Callable[[], None]] = []
+        self.owner_node = owner_node
+
+    # -- version dispensing -------------------------------------------------
+    def dispense(self) -> int:
+        """Take the next private version. Caller must hold ``lock``."""
+        self.gv += 1
+        return self.gv
+
+    # -- counter updates ----------------------------------------------------
+    def _notify(self) -> None:
+        self.cond.notify_all()
+        for fn in list(self._listeners):
+            fn()
+
+    def release_to(self, pv: int) -> None:
+        """Set ``lv = pv`` (early release / release-at-termination)."""
+        with self.lock:
+            if self.lv < pv:
+                self.lv = pv
+            self._notify()
+
+    def terminate_to(self, pv: int) -> None:
+        """Set ``ltv = pv`` (commit/abort). Implies release."""
+        with self.lock:
+            if self.lv < pv:
+                self.lv = pv
+            if self.ltv < pv:
+                self.ltv = pv
+            self._notify()
+
+    def bump_instance(self) -> None:
+        """Invalidate the current instance (abort restored older state)."""
+        with self.lock:
+            self.instance += 1
+            self._notify()
+
+    # -- conditions -----------------------------------------------------------
+    def access_ready(self, pv: int) -> bool:
+        return pv - 1 == self.lv
+
+    def termination_ready(self, pv: int) -> bool:
+        return pv - 1 == self.ltv
+
+    def wait_access(self, pv: int, *, timeout: Optional[float] = None) -> None:
+        """Block until the access condition ``pv - 1 == lv`` holds."""
+        with self.lock:
+            if not self.cond.wait_for(lambda: self.lv >= pv - 1, timeout=timeout):
+                raise TimeoutError(f"access condition timed out (pv={pv}, lv={self.lv})")
+
+    def wait_termination(self, pv: int, *, timeout: Optional[float] = None) -> None:
+        """Block until the commit condition ``pv - 1 == ltv`` holds."""
+        with self.lock:
+            if not self.cond.wait_for(lambda: self.ltv >= pv - 1, timeout=timeout):
+                raise TimeoutError(f"commit condition timed out (pv={pv}, ltv={self.ltv})")
+
+    def add_listener(self, fn: Callable[[], None]) -> None:
+        """Register a counter-change listener (used by the executor, §3.3)."""
+        with self.lock:
+            self._listeners.append(fn)
+
+    def remove_listener(self, fn: Callable[[], None]) -> None:
+        with self.lock:
+            try:
+                self._listeners.remove(fn)
+            except ValueError:
+                pass
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"VersionHeader(uid={self.uid}, gv={self.gv}, lv={self.lv}, "
+                f"ltv={self.ltv}, inst={self.instance})")
+
+
+def dispense_versions(headers: List[VersionHeader]) -> List[int]:
+    """Atomically dispense private versions for an access set (paper §2.10.2).
+
+    Locks the per-object version locks in the global ``uid`` order,
+    dispenses, then unlocks — eliminating circular waits during start.
+    """
+    ordered = sorted(headers, key=lambda h: h.uid)
+    for h in ordered:
+        h.lock.acquire()
+    try:
+        return [h.dispense() for h in headers]
+    finally:
+        for h in reversed(ordered):
+            h.lock.release()

@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, Pipeline, make_batch
+__all__ = ["DataConfig", "Pipeline", "make_batch"]

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute paths.
+
+Each kernel ships as <name>_kernel.py / flash_attention.py (pl.pallas_call +
+BlockSpec), with ops.py jitted wrappers and ref.py pure-jnp oracles.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,138 @@
+"""Flash attention forward Pallas kernel (TPU target).
+
+Online-softmax attention tiled for VMEM: grid ``(B·Hq, nq, nk)`` with the
+kv dimension innermost so the running (m, l, acc) scratch — which lives in
+VMEM — persists across kv blocks of one query block. Heads are folded into
+the grid's batch dimension; GQA is handled in the kv ``index_map`` (query
+head ``h`` reads kv head ``h // group``), so KV is never materialized
+repeated. Block shapes are multiples of the (8, 128) TPU tile; the MXU sees
+``[block_q, hd] × [hd, block_k]`` and ``[block_q, block_k] × [block_k, hd]``
+matmuls with fp32 accumulation via ``preferred_element_type``.
+
+Causal/window masking and gemma-style logit soft-capping happen on the
+fp32 scores inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MASK_VALUE = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                block_q: int, block_k: int, nk: int, causal: bool,
+                window: Optional[int], logit_cap: Optional[float],
+                q_offset: int, sm_scale: float, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, -jnp.inf)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32)                      # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                      # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    valid = k_pos < kv_len
+    dpos = q_pos - k_pos
+    if causal:
+        valid &= dpos >= 0
+    if window is not None:
+        valid &= dpos < window
+    s = jnp.where(valid, s, MASK_VALUE)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None]) * valid.astype(jnp.float32)
+    alpha = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_new))
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1)
+    acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_s[...] /
+                    jnp.maximum(l_s[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           logit_cap: Optional[float] = None,
+                           q_offset: int = 0,
+                           block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B,Sq,Hq,hd]; k,v: [B,Skv,Hkv,hd] -> [B,Sq,Hq,hd]."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    group = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+
+    # Fold heads into the batch/grid dimension.
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
+    nq, nk = Sq_p // block_q, Skv_p // block_k
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        # GQA: query head bh % Hq maps to kv head (bh % Hq) // group
+        b = bh // Hq
+        h = bh % Hq
+        return (b * Hkv + h // group, ki, 0)
+
+    kernel = functools.partial(
+        _fwd_kernel, block_q=block_q, block_k=block_k, nk=nk, causal=causal,
+        window=window, logit_cap=logit_cap, q_offset=q_offset,
+        sm_scale=1.0 / (hd ** 0.5), kv_len=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max m
+            pltpu.VMEM((block_q,), jnp.float32),       # running sum l
+            pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :Sq].reshape(B, Hq, Sq, hd).transpose(0, 2, 1, 3)
+    return out

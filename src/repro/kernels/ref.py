@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantics of record: kernels are validated against these
+functions with ``assert_allclose`` over shape/dtype sweeps in
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+MASK_VALUE = -1e30
+RGLRU_C = 8.0
+
+
+# --------------------------------------------------------------------------- #
+# Flash attention oracle                                                       #
+# --------------------------------------------------------------------------- #
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        logit_cap: Optional[float] = None,
+                        q_offset: int = 0) -> jax.Array:
+    """Full-materialization attention. q: [B,Sq,H,hd]; k,v: [B,Skv,Hkv,hd]."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    dpos = q_pos[:, None] - kv_pos[None, :]
+    valid = jnp.ones((Sq, Skv), bool)
+    if causal:
+        valid &= dpos >= 0
+    if window is not None:
+        valid &= dpos < window
+    s = jnp.where(valid[None, None, None], s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RWKV-6 WKV recurrence oracle                                                 #
+# --------------------------------------------------------------------------- #
+def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array, state: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential WKV. r,k,v,w: [B,T,H,hd]; u: [H,hd]; state: [B,H,hd,hd].
+
+    y_t = (S + (u⊙k_t) v_tᵀ)ᵀ r_t ;  S ← diag(w_t) S + k_t v_tᵀ
+    Returns (y [B,T,H,hd] fp32, final state fp32).
+    """
+    r, k, v, w = (a.astype(jnp.float32) for a in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    state = state.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # [B,H,hd]
+        kv = kt[..., :, None] * vt[..., None, :]   # [B,H,hd,hd]
+        y = jnp.einsum("bhkv,bhk->bhv", s + u[..., :, None] * kv, rt)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    # vmem_kernel scope: this scan is the Pallas rwkv6 kernel on TPU
+    with jax.named_scope("vmem_kernel_rwkv6"):
+        state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU oracle                                                                #
+# --------------------------------------------------------------------------- #
+def rglru_scan_ref(x: jax.Array, a_log: jax.Array, gate_r: jax.Array,
+                   gate_i: jax.Array, h0: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential RG-LRU. x, gate_r, gate_i: [B,T,W]; a_log: [W]; h0: [B,W].
+
+    a_t = exp(-c·softplus(Λ)·r_t);  h_t = a_t h + sqrt(1-a_t²)(i_t ⊙ x_t)
+    Returns (h sequence [B,T,W] fp32, final h fp32).
+    """
+    x = x.astype(jnp.float32)
+    decay = jax.nn.softplus(a_log.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, rt, it = inp
+        a = jnp.exp(-RGLRU_C * decay * rt)
+        h = a * h + jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 0.0)) * (it * xt)
+        return h, h
+
+    xs = (x.transpose(1, 0, 2),
+          gate_r.astype(jnp.float32).transpose(1, 0, 2),
+          gate_i.astype(jnp.float32).transpose(1, 0, 2))
+    # vmem_kernel scope: this scan is the Pallas rglru kernel on TPU
+    with jax.named_scope("vmem_kernel_rglru"):
+        h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), h

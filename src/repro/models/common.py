@@ -1,0 +1,96 @@
+"""Shared model building blocks: norms, RoPE, activations, initializers."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32 accumulation, cast back to input dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE                                                                        #
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float, rotary_pct: float = 1.0
+               ) -> Tuple[int, jax.Array]:
+    """Return (#rotary dims, inverse frequencies [rot/2])."""
+    rot = int(head_dim * rotary_pct)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return rot, inv
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """Rotary embedding. ``x``: [..., S, H, hd]; ``positions``: [..., S]."""
+    hd = x.shape[-1]
+    rot, inv = rope_freqs(hd, theta, rotary_pct)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]  # [..., S, rot/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]  # broadcast over heads
+    cos = cos[..., :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# Initialization                                                              #
+# --------------------------------------------------------------------------- #
+def dense_init(key: jax.Array, shape: Tuple[int, ...], in_axis: int = -2,
+               dtype=jnp.float32) -> jax.Array:
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def stable_cross_entropy(logits: jax.Array, labels: jax.Array,
+                         final_cap: Optional[float] = None) -> jax.Array:
+    """Mean token cross-entropy; fp32 logsumexp; optional final softcap."""
+    logits = logits.astype(jnp.float32)
+    logits = softcap(logits, final_cap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def gqa_repeat(kv: jax.Array, n_heads: int) -> jax.Array:
+    """Broadcast KV heads to query heads: [..., n_kv, hd] -> [..., n_heads, hd]."""
+    n_kv = kv.shape[-2]
+    if n_kv == n_heads:
+        return kv
+    rep = n_heads // n_kv
+    return jnp.repeat(kv, rep, axis=-2)

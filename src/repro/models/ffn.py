@@ -1,0 +1,89 @@
+"""Feed-forward layers: gated MLPs and capacity-based MoE.
+
+The MoE dispatch uses scatter-into-capacity-buffers (tokens routed into an
+``[E, C, D]`` buffer by top-k index + intra-expert position), batched expert
+einsums, and gather-combine. Under the production mesh the expert axis is
+sharded over ``model`` (expert parallelism); XLA materializes the token
+exchange as all-to-all-style collectives. Tokens overflowing an expert's
+capacity are dropped (standard capacity-factor routing); the router keeps
+an auxiliary load-balancing loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def gated_mlp(params: Dict, x: jax.Array, kind: str) -> jax.Array:
+    """SwiGLU / GeGLU / GELU MLP. x: [..., D]."""
+    if kind in ("swiglu", "geglu"):
+        gate = x @ params["w_gate"]
+        up = x @ params["w_up"]
+        act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)
+        return (act * up) @ params["w_down"]
+    hidden = jax.nn.gelu(x @ params["w_gate"] + params.get("b_gate", 0.0))
+    out = hidden @ params["w_down"]
+    if "b_down" in params:
+        out = out + params["b_down"]
+    return out
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    cap = int(n_tokens * top_k / n_experts * capacity_factor)
+    return max(cap, top_k, 8)
+
+
+def moe_mlp(params: Dict, x: jax.Array, cfg: ModelConfig,
+            shard=lambda a, name: a) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routed MoE. x: [B, S, D] -> (y, aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    router_logits = (xt.astype(jnp.float32) @
+                     params["router"].astype(jnp.float32))       # [T, E]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)        # renormalize
+
+    # ---- intra-expert positions via cumulative one-hot ----------------------
+    C = moe_capacity(T, E, K, cfg.capacity_factor)
+    flat_idx = gate_idx.reshape(-1)                              # [T*K]
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)        # [T*K, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1                         # running count
+    pos_in_e = jnp.take_along_axis(pos, flat_idx[:, None], axis=1)[:, 0]
+    keep = pos_in_e < C                                          # capacity drop
+    safe_pos = jnp.where(keep, pos_in_e, 0)
+
+    # ---- dispatch: scatter tokens into [E, C, D] ----------------------------
+    src = jnp.repeat(xt, K, axis=0)                              # [T*K, D]
+    src = jnp.where(keep[:, None], src, 0)
+    buf = jnp.zeros((E, C, D), dtype=x.dtype)
+    buf = buf.at[flat_idx, safe_pos].add(src, mode="drop")
+    buf = shard(buf, "moe_buf")  # EP: expert axis over "model"
+
+    # ---- expert computation (batched over experts) ---------------------------
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])    # [E, C, D]
+    out_buf = shard(out_buf, "moe_buf")
+
+    # ---- combine: gather + weight ------------------------------------------
+    gathered = out_buf[flat_idx, safe_pos]                       # [T*K, D]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weights = gate_vals.reshape(-1)[:, None].astype(gathered.dtype)
+    y = jnp.sum((gathered * weights).reshape(T, K, D), axis=1)
+
+    # ---- auxiliary load-balancing loss (Switch-style) ------------------------
+    density = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * E
+
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,92 @@
+"""Partition plan: TP-alignment padding and sharding rules.
+
+Real checkpoints have head counts and vocab sizes that do not divide the
+production mesh's 16-way ``model`` axis (qwen2's 28 query / 4 KV heads,
+whisper's 51865 vocab). The plan resolves this the way MaxText/vLLM do:
+
+* query heads are zero-padded up to a multiple of TP (zero ``wq/wo`` slices
+  contribute exactly nothing — the padded model is *functionally identical*,
+  a property tested in ``tests/test_models.py``);
+* KV heads are replicated up to TP when fewer (each replica serves the same
+  query group — again exact);
+* the vocab is zero-padded to a multiple of 128 and masked out in the loss.
+
+The *useful-FLOPs ratio* in the roofline table (MODEL_FLOPS / HLO_FLOPs)
+keeps this padding honest.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from .config import ModelConfig
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclass(frozen=True)
+class PartitionPlan:
+    """Mesh-derived padding/replication decisions for one model."""
+
+    tp: int = 1                  # size of the "model" mesh axis
+    vocab_align: int = 128
+
+    def eff_heads(self, cfg: ModelConfig) -> int:
+        return _round_up(cfg.n_heads, self.tp)
+
+    def eff_kv_heads(self, cfg: ModelConfig) -> int:
+        """TP-aligned KV head count, chosen so replication stays *exact*.
+
+        Exactness requires the padded model's query-group mapping
+        ``i // G_new`` to address a replica of the original head
+        ``i // G_orig``. Consecutive replication by ``rep`` is exact iff
+        ``rep`` divides ``G_orig`` and no query padding is needed;
+        otherwise we fall back to one KV head per query head (G_new = 1),
+        which is always exact at the cost of a fatter KV cache (the
+        roofline table carries that cost honestly).
+        """
+        kv, h, tp = cfg.n_kv_heads, cfg.n_heads, self.tp
+        if kv % tp == 0:
+            return kv
+        g_orig = h // kv
+        rep = _round_up(kv, tp) // kv
+        if h % tp == 0 and g_orig % rep == 0:
+            return kv * rep                      # consecutive replication
+        return self.eff_heads(cfg)               # per-query KV (G_new = 1)
+
+    def kv_replication(self, cfg: ModelConfig) -> int:
+        return self.eff_kv_heads(cfg) // cfg.n_kv_heads
+
+    def kv_graft_map(self, cfg: ModelConfig):
+        """For checkpoint loading/tests: ``map[j]`` = original kv head index
+        whose weights fill padded slot ``j`` (None = zero slot for padded
+        query heads)."""
+        kv = cfg.n_kv_heads
+        h = cfg.n_heads
+        eff_kv = self.eff_kv_heads(cfg)
+        g_orig = h // kv
+        if eff_kv == kv:
+            return list(range(kv))
+        if eff_kv == self.eff_heads(cfg):        # per-query KV
+            return [i // g_orig if i < h else None for i in range(eff_kv)]
+        rep = eff_kv // kv                       # consecutive replication
+        return [j // rep for j in range(eff_kv)]
+
+    def eff_vocab(self, cfg: ModelConfig) -> int:
+        return _round_up(cfg.vocab, max(self.vocab_align, self.tp))
+
+    def eff_rwkv_heads(self, cfg: ModelConfig) -> int:
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return _round_up(h, self.tp)
+
+    def check(self, cfg: ModelConfig) -> None:
+        assert cfg.d_model % self.tp == 0, (cfg.name, "d_model % tp")
+        assert cfg.d_ff % self.tp == 0, (cfg.name, "d_ff % tp")
+        if cfg.moe_d_ff:
+            assert cfg.moe_d_ff % self.tp == 0
+
+
+IDENTITY_PLAN = PartitionPlan(tp=1, vocab_align=1)

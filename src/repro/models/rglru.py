@@ -1,0 +1,49 @@
+"""RG-LRU recurrent blocks (Griffin / RecurrentGemma).
+
+The recurrence (per channel, gates block-diagonal over heads):
+
+    r_t = σ(W_a x_t + b_a)          recurrence gate
+    i_t = σ(W_x x_t + b_x)          input gate
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+wrapped in the Griffin recurrent block: two input branches (recurrent branch
+with a short causal conv1d; gate branch with GELU), elementwise merge, output
+projection. The scan runs through ``repro.kernels.ops.rglru_scan``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0  # Griffin's fixed decay temperature
+
+
+def causal_conv1d(params: Dict, x: jax.Array, conv_state: jax.Array,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: [B,T,W]; conv_state: [B,K-1,W]."""
+    w = params["conv_w"]                       # [K, W]
+    K = w.shape[0]
+    xin = jnp.concatenate([conv_state, x], axis=1)   # [B, T+K-1, W]
+    out = sum(xin[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    out = out + params["conv_b"]
+    new_state = xin[:, -(K - 1):, :] if K > 1 else conv_state
+    return out.astype(x.dtype), new_state
+
+
+def recurrent_block(params: Dict, x: jax.Array, conv_state: jax.Array,
+                    h_state: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Griffin recurrent block. x: [B,T,D] -> (y, conv_state, h_state)."""
+    from repro.kernels import ops as kops
+
+    branch = x @ params["w_in"]                # [B,T,W] recurrent branch
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    branch, conv_state = causal_conv1d(params, branch, conv_state)
+    r = jax.nn.sigmoid(branch @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(branch @ params["w_x"] + params["b_x"])
+    y, h_state = kops.rglru_scan(branch, params["a_log"], r, i, h_state)
+    y = y.astype(x.dtype) * gate
+    return y @ params["w_out"], conv_state, h_state

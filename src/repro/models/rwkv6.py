@@ -1,0 +1,83 @@
+"""RWKV-6 ("Finch") blocks: data-dependent-decay linear attention.
+
+Time mixing maintains a per-head matrix state ``S ∈ R^{hd×hd}``:
+
+    y_t = (S_{t-1} + (u ⊙ k_t) v_tᵀ)ᵀ r_t
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+with *data-dependent* decay ``w_t = exp(-exp(w0 + A_w tanh(x̃_t B_w)))`` —
+the Finch contribution — plus LoRA-style data-dependent token-shift (ddlerp).
+The sequence recurrence runs through ``repro.kernels.ops.rwkv6_scan`` (a
+chunked Pallas kernel on TPU; a ``lax.scan`` fallback elsewhere).
+
+State is O(1) in sequence length, which is why rwkv6 serves the ``long_500k``
+cell that full-attention archs must skip.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm
+
+
+def _lora(x, a, b):
+    """LoRA modulation: tanh(x @ a) @ b."""
+    return jnp.tanh(x @ a) @ b
+
+
+def _ddlerp(x, x_prev, mu, a, b):
+    """Finch data-dependent lerp between x_t and x_{t-1}."""
+    base = x_prev + (x - x_prev) * mu
+    mix = mu + _lora(base, a, b)
+    return x_prev + (x - x_prev) * mix
+
+
+def time_mix(params: Dict, x: jax.Array, shift_state: jax.Array,
+             wkv_state: jax.Array, n_heads: int, head_dim: int,
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """RWKV-6 attention analogue.
+
+    x: [B,T,D]; shift_state: [B,D] (x_{-1}); wkv_state: [B,H,hd,hd].
+    Returns (y, new_shift_state, new_wkv_state).
+    """
+    from repro.kernels import ops as kops
+
+    B, T, D = x.shape
+    H, hd = n_heads, head_dim
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+
+    names = ("r", "k", "v", "g", "w")
+    mixed = {
+        n: _ddlerp(x, x_prev, params[f"mu_{n}"], params["dd_a"],
+                   params[f"dd_b_{n}"])
+        for n in names
+    }
+    r = (mixed["r"] @ params["w_r"]).reshape(B, T, H, hd)
+    k = (mixed["k"] @ params["w_k"]).reshape(B, T, H, hd)
+    v = (mixed["v"] @ params["w_v"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(mixed["g"] @ params["w_g"])
+    # data-dependent decay (the Finch mechanism)
+    w_raw = params["w0"] + _lora(mixed["w"], params["wd_a"], params["wd_b"])
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32))).reshape(B, T, H, hd)
+
+    y, wkv_state = kops.rwkv6_scan(r, k, v, w, params["u"].reshape(H, hd),
+                                   wkv_state)
+    # per-head group norm; note H may be TP-padded so H*hd >= D
+    y = y.reshape(B, T, H, hd)
+    y = rms_norm(y, params["ln_x"].reshape(H, hd), eps=1e-5)
+    y = y.reshape(B, T, H * hd) * g
+    return y @ params["w_o"], x[:, -1, :], wkv_state
+
+
+def channel_mix(params: Dict, x: jax.Array, shift_state: jax.Array,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """RWKV-6 FFN analogue (squared-ReLU with receptance gate)."""
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x_prev + (x - x_prev) * params["mu_k"]
+    xr = x_prev + (x - x_prev) * params["mu_r"]
+    rgate = jax.nn.sigmoid(xr @ params["w_rgate"])
+    hidden = jnp.square(jax.nn.relu(xk @ params["w_in"]))
+    return rgate * (hidden @ params["w_out"]), x[:, -1, :]

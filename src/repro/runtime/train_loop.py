@@ -1,0 +1,185 @@
+"""The training runtime: loop, fault tolerance, stragglers, elasticity.
+
+The control plane runs on the transactional store (``repro.txstore``):
+
+* every step commits (params, opt, cursor) as one write transaction —
+  readers can never observe a torn step;
+* checkpoints are taken by an irrevocable read-only transaction (snapshot
+  happens asynchronously per paper §2.7) and written by a background
+  thread (``AsyncCheckpointer``) — the trainer never blocks on disk;
+* crash/restart resumes from the newest atomic checkpoint + the stateless
+  data pipeline cursor;
+* stragglers are detected by a step-time EWMA z-test; mitigation is a
+  pluggable policy (on a real cluster: re-slice the batch / evict the
+  slow host — here: recorded + surfaced);
+* elastic rescale re-device_puts state under new shardings inside a store
+  transaction, so concurrent readers see the old or the new sharding,
+  never a mix.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import AsyncCheckpointer, CheckpointStore
+from repro.data.pipeline import DataConfig, Pipeline, make_batch
+from repro.models.backbone import Backbone
+from repro.optim import adamw
+from repro.runtime.steps import (StepSettings, init_train_state,
+                                 make_train_step)
+from repro.txstore.store import VersionedStateStore
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    straggler_zscore: float = 4.0
+    straggler_warmup: int = 10
+    keep_ckpts: int = 3
+
+
+@dataclass
+class StragglerStats:
+    ewma: float = 0.0
+    ewvar: float = 0.0
+    n: int = 0
+    events: List[Dict[str, float]] = field(default_factory=list)
+
+    def observe(self, dt: float, step: int, z_thresh: float,
+                warmup: int) -> bool:
+        self.n += 1
+        if self.n == 1:
+            self.ewma = dt
+            return False
+        # z against the PRE-update statistics (the outlier must not be
+        # allowed to widen the band it is tested against); sd floored at
+        # 5% of the mean so warm, uniform phases don't fire on jitter.
+        sd = max(np.sqrt(self.ewvar), 0.05 * self.ewma, 1e-9)
+        z = (dt - self.ewma) / sd
+        hit = self.n > warmup and z > z_thresh
+        if hit:
+            self.events.append({"step": step, "dt": dt, "z": float(z)})
+        else:
+            # stragglers are excluded from the running statistics
+            alpha = 0.1
+            delta = dt - self.ewma
+            self.ewma += alpha * delta
+            self.ewvar = (1 - alpha) * (self.ewvar + alpha * delta * delta)
+        return hit
+
+
+class Trainer:
+    def __init__(self, bb: Backbone, opt_cfg: adamw.AdamWConfig,
+                 data_cfg: DataConfig, tcfg: TrainerConfig,
+                 settings: StepSettings = StepSettings(),
+                 *, mesh=None, state_shardings=None,
+                 straggler_hook: Optional[Callable[[Dict], None]] = None):
+        self.bb = bb
+        self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
+        self.tcfg = tcfg
+        self.settings = settings
+        self.mesh = mesh
+        self.state_shardings = state_shardings
+        self.straggler_hook = straggler_hook
+
+        self.store = VersionedStateStore()
+        self.ckpt = CheckpointStore(tcfg.ckpt_dir)
+        self.async_ckpt = AsyncCheckpointer(
+            self.ckpt, on_done=self._on_ckpt_done)
+        self.straggler = StragglerStats()
+        self.metrics_log: List[Dict[str, float]] = []
+
+        step_fn = make_train_step(bb, opt_cfg, settings)
+        if mesh is not None and state_shardings is not None:
+            self._step = jax.jit(step_fn, in_shardings=(state_shardings, None),
+                                 donate_argnums=(0,))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------ #
+    def _on_ckpt_done(self, step: int, path: str) -> None:
+        self.store.record_checkpoint(step, path)
+        self.ckpt.gc(self.tcfg.keep_ckpts)
+
+    def init_or_restore(self, seed: int = 0) -> Dict[str, Any]:
+        """Fresh init, or resume from the newest checkpoint (crash restart)."""
+        latest = self.ckpt.latest_step()
+        template = jax.eval_shape(
+            lambda k: init_train_state(self.bb, k, self.settings),
+            jax.random.PRNGKey(seed))
+        if latest is not None:
+            zeros = jax.tree_util.tree_map(
+                lambda s: np.zeros(s.shape, s.dtype), template)
+            state, step = self.ckpt.restore(zeros, latest,
+                                            shardings=self.state_shardings)
+            self.start_step = step
+            print(f"[trainer] resumed from checkpoint step {step}")
+        else:
+            state = init_train_state(self.bb, jax.random.PRNGKey(seed),
+                                     self.settings)
+            self.start_step = 0
+        self.store.commit_step(None, None, self.start_step)  # cursor only
+        return state
+
+    # ------------------------------------------------------------------ #
+    def run(self, state: Dict[str, Any], *, crash_at: Optional[int] = None
+            ) -> Dict[str, Any]:
+        pipe = Pipeline(self.data_cfg, start_step=self.start_step)
+        for step in range(self.start_step, self.tcfg.total_steps):
+            batch = next(pipe)
+            t0 = time.monotonic()
+            if crash_at is not None and step == crash_at:
+                raise RuntimeError(f"injected crash at step {step}")
+            state, metrics = self._step(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            if self.straggler.observe(step=step, dt=dt,
+                                      z_thresh=self.tcfg.straggler_zscore,
+                                      warmup=self.tcfg.straggler_warmup):
+                ev = self.straggler.events[-1]
+                print(f"[straggler] step {step}: {dt*1e3:.1f}ms "
+                      f"(z={ev['z']:.1f}) — mitigation hook invoked")
+                if self.straggler_hook:
+                    self.straggler_hook(ev)
+            self.metrics_log.append({"step": step, "loss": loss, "dt": dt})
+            # control-plane commit: one write txn over (params, opt, cursor)
+            self.store.commit_step(state["params"], state["opt"], step + 1)
+            if (step + 1) % self.tcfg.ckpt_every == 0:
+                # irrevocable read-only txn -> consistent async snapshot;
+                # materialize to host NOW (the copy-buffer copy): the live
+                # device buffers are donated into the next step
+                snap = self.store.snapshot(("params", "opt", "data_cursor"))
+                host = jax.device_get({"params": snap["params"],
+                                       "opt": snap["opt"]})
+                self.async_ckpt.submit(host, snap["data_cursor"])
+            if (step + 1) % self.tcfg.log_every == 0:
+                print(f"[train] step {step+1}: loss={loss:.4f} "
+                      f"({dt*1e3:.0f}ms/step)")
+        self.async_ckpt.drain()
+        return state
+
+    def shutdown(self) -> None:
+        self.async_ckpt.stop()
+        self.store.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# Elastic rescale                                                              #
+# --------------------------------------------------------------------------- #
+def rescale_state(state: Any, new_shardings: Any) -> Any:
+    """Re-place every leaf under the new mesh's shardings (elastic event).
+
+    On a real cluster this runs after re-forming the mesh with the surviving
+    hosts; the transactional store serializes it against readers so nobody
+    observes a half-resharded tree.
+    """
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, s), state, new_shardings)

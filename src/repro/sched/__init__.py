@@ -1,0 +1,2 @@
+from .suprema import StepAccessPlan, release_points, step_suprema
+__all__ = ["StepAccessPlan", "release_points", "step_suprema"]

@@ -1,0 +1,2 @@
+from .store import StateCell, VersionedStateStore
+__all__ = ["StateCell", "VersionedStateStore"]

@@ -1,0 +1,55 @@
+"""Guard the assigned-architecture configs against drift: every field the
+assignment specifies must match exactly."""
+import pytest
+
+from repro.models import get_config
+
+SPEC = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab, family)
+    "chameleon-34b": (48, 8192, 64, 8, 22016, 65536, "vlm"),
+    "gemma2-2b": (26, 2304, 8, 4, 9216, 256000, "dense"),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064, "dense"),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064, "dense"),
+    "qwen3-4b": (36, 2560, 32, 8, 9728, 151936, "dense"),
+    "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536, "ssm"),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768, "moe"),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936, "moe"),
+    "whisper-tiny": (8, 384, 6, 6, 1536, 51865, "audio"),   # 4 enc + 4 dec
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000, "hybrid"),
+}
+
+
+@pytest.mark.parametrize("arch", list(SPEC))
+def test_config_matches_assignment(arch):
+    L, d, h, kv, ff, vocab, family = SPEC[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == L, (arch, cfg.n_layers)
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab == vocab
+    assert cfg.family == family
+
+
+def test_moe_specs():
+    mx = get_config("mixtral-8x22b")
+    assert (mx.n_experts, mx.top_k) == (8, 2)
+    assert mx.attn_window == 4096                  # SWA
+    q3 = get_config("qwen3-moe-235b-a22b")
+    assert (q3.n_experts, q3.top_k) == (128, 8)
+    assert q3.qk_norm
+
+
+def test_feature_flags():
+    g2 = get_config("gemma2-2b")
+    assert g2.attn_logit_softcap == 50.0 and g2.final_logit_softcap == 30.0
+    assert g2.groups[0].pattern == ("local", "attn")   # alternating
+    assert get_config("qwen2-7b").qkv_bias
+    assert get_config("qwen3-4b").qk_norm
+    assert get_config("phi4-mini-3.8b").rotary_pct == 0.75
+    rg = get_config("recurrentgemma-9b")
+    assert rg.groups[0].pattern == ("rec", "rec", "local")  # 1:2 attn:rec
+    assert get_config("whisper-tiny").enc_seq == 1500
+    assert get_config("rwkv6-3b").sub_quadratic
+    assert not get_config("chameleon-34b").sub_quadratic

@@ -1,0 +1,408 @@
+"""OptSVA-CF core behaviour tests (paper §2)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (AbortError, Mode, Registry, RemoteObjectFailure,
+                        Suprema, SupremumViolation, Transaction, access)
+
+
+class Account:
+    def __init__(self, balance=0):
+        self.bal = balance
+
+    @access(Mode.READ)
+    def balance(self):
+        return self.bal
+
+    @access(Mode.UPDATE)
+    def deposit(self, v):
+        self.bal += v
+
+    @access(Mode.UPDATE)
+    def withdraw(self, v):
+        self.bal -= v
+
+    @access(Mode.WRITE)
+    def set(self, v):
+        self.bal = v
+
+
+@pytest.fixture()
+def reg():
+    r = Registry()
+    r.add_node("n1")
+    r.add_node("n2")
+    yield r
+    r.shutdown()
+
+
+def bind(reg, name, bal=0, node="n1"):
+    return reg.bind(name, Account(bal), reg.node(node))
+
+
+# --------------------------------------------------------------------------- #
+# Basic semantics                                                              #
+# --------------------------------------------------------------------------- #
+def test_fig9_transfer_with_manual_abort(reg):
+    A = bind(reg, "A", 1000)
+    B = bind(reg, "B", 500, "n2")
+    t = Transaction(reg)
+    a = t.accesses(A, 1, 0, 1)
+    b = t.updates(B, 1)
+
+    def body(t):
+        a.withdraw(100)
+        b.deposit(100)
+        if a.balance() < 0:
+            t.abort()
+
+    t.start(body)
+    assert A.holder.obj.bal == 900 and B.holder.obj.bal == 600
+
+
+def test_manual_abort_restores_state(reg):
+    A = bind(reg, "A", 10)
+    t = Transaction(reg)
+    a = t.updates(A, 2)
+
+    def body(t):
+        a.deposit(5)
+        t.abort()
+
+    with pytest.raises(AbortError):
+        t.start(body)
+    assert A.holder.obj.bal == 10
+
+
+def test_exception_in_body_aborts_and_restores(reg):
+    A = bind(reg, "A", 10)
+    t = Transaction(reg)
+    a = t.updates(A, 2)
+
+    def body(t):
+        a.deposit(5)
+        raise ValueError("user bug")
+
+    with pytest.raises(ValueError):
+        t.start(body)
+    assert A.holder.obj.bal == 10
+    # object is released: a successor can proceed
+    t2 = Transaction(reg)
+    a2 = t2.updates(A, 1)
+    t2.start(lambda _t: a2.deposit(1))
+    assert A.holder.obj.bal == 11
+
+
+def test_supremum_violation_forces_abort(reg):
+    A = bind(reg, "A", 0)
+    t = Transaction(reg)
+    a = t.updates(A, 1)
+
+    def body(t):
+        a.deposit(1)
+        a.deposit(1)  # exceeds ub=1
+
+    with pytest.raises(SupremumViolation):
+        t.start(body)
+    assert A.holder.obj.bal == 0
+
+
+def test_undeclared_suprema_default_to_infinity(reg):
+    A = bind(reg, "A", 0)
+    t = Transaction(reg)
+    a = t.updates(A)
+    t.start(lambda _t: [a.deposit(1) for _ in range(10)])
+    assert A.holder.obj.bal == 10
+
+
+def test_version_ordering_single_object(reg):
+    """Transactions access an object strictly in start order."""
+    A = bind(reg, "A", 0)
+    order = []
+
+    def worker(i):
+        t = Transaction(reg)
+        a = t.updates(A, 1)
+
+        def body(t):
+            a.deposit(1)
+            order.append(i)
+
+        t.start(body)
+
+    # sequential starts guarantee pv order == i order
+    ts = []
+    for i in range(5):
+        th = threading.Thread(target=worker, args=(i,))
+        ts.append(th)
+        th.start()
+        time.sleep(0.02)
+    for th in ts:
+        th.join()
+    assert A.holder.obj.bal == 5
+
+
+# --------------------------------------------------------------------------- #
+# Early release (§2.2) and asynchronous buffering (§2.7)                       #
+# --------------------------------------------------------------------------- #
+def test_early_release_lets_successor_in_before_commit(reg):
+    A = bind(reg, "A", 0)
+    events = []
+    gate = threading.Event()
+
+    def t_i():
+        t = Transaction(reg)
+        a = t.updates(A, 1)
+
+        def body(t):
+            a.deposit(1)            # reaches supremum -> early release
+            events.append("i-released")
+            gate.wait(5)            # hold commit open
+        t.start(body)
+        events.append("i-committed")
+
+    def t_j():
+        time.sleep(0.05)
+        t = Transaction(reg)
+        a = t.updates(A, 1)
+        t.start(lambda _t: (a.deposit(1), events.append("j-accessed")))
+        events.append("j-committed")
+
+    ti = threading.Thread(target=t_i)
+    tj = threading.Thread(target=t_j)
+    ti.start(); tj.start()
+    time.sleep(0.5)
+    assert "j-accessed" in events and "i-committed" not in events
+    gate.set()
+    ti.join(); tj.join()
+    # commit order follows version order (ltv ordering)
+    assert events.index("i-committed") < events.index("j-committed")
+    assert A.holder.obj.bal == 2
+
+
+def test_readonly_buffering_releases_before_first_read(reg):
+    """§2.7: a read-only object is snapshotted+released at txn start, so a
+    writer can take and modify it while the reader still reads the old
+    snapshot (the writer's *commit* still serializes after the reader's)."""
+    A = bind(reg, "A", 7)
+    t = Transaction(reg)
+    a = t.reads(A, 2)
+    got = []
+    writer_done = []
+
+    def writer():
+        t2 = Transaction(reg)
+        a2 = t2.writes(A, 1)
+        t2.start(lambda _t: a2.set(99))   # commit waits for reader's ltv
+        writer_done.append(True)
+
+    wt = threading.Thread(target=writer)
+
+    def body(t):
+        time.sleep(0.15)     # executor buffers + releases the read-only obj
+        wt.start()
+        time.sleep(0.15)     # writer's async apply fires on the released obj
+        # live state may already be 99 while our snapshot still reads 7
+        got.append(a.balance())
+        got.append(a.balance())
+
+    t.start(body)
+    wt.join(timeout=10)
+    assert got == [7, 7]             # snapshot isolation for the reader
+    assert writer_done == [True]
+    assert A.holder.obj.bal == 99    # writer's effect applied
+
+
+def test_write_only_log_buffer_no_synchronization(reg):
+    """§2.8.4: pure writes execute on the log buffer without waiting, even
+    while a predecessor still holds the object."""
+    A = bind(reg, "A", 1)
+    holder_started = threading.Event()
+    release_holder = threading.Event()
+    w_done = threading.Event()
+
+    def holder():
+        t = Transaction(reg)
+        a = t.accesses(A, 2, 0, 1)
+
+        def body(t):
+            a.deposit(1)
+            holder_started.set()
+            release_holder.wait(5)
+        t.start(body)
+
+    th = threading.Thread(target=holder)
+    th.start()
+    holder_started.wait(5)
+
+    # the write call itself must return immediately (log buffer, no sync)
+    t = Transaction(reg)
+    a = t.writes(A, 1)
+    t.begin()
+    t0 = time.monotonic()
+    a.set(42)
+    assert time.monotonic() - t0 < 0.2, "pure write must not synchronize"
+    release_holder.set()
+    th.join()
+    t.commit()                       # apply happens at/before commit
+    assert A.holder.obj.bal == 42
+
+
+# --------------------------------------------------------------------------- #
+# Aborts and cascades (§2.3)                                                   #
+# --------------------------------------------------------------------------- #
+def test_cascading_abort(reg):
+    A = bind(reg, "A", 100)
+    res = {}
+    sync = threading.Event()
+
+    def t_i():
+        t = Transaction(reg)
+        a = t.updates(A, 1)
+
+        def body(t):
+            a.deposit(50)   # early release (dirty value escapes)
+            sync.wait(5)    # wait until T_j consumed it
+            t.abort()
+        try:
+            t.start(body)
+        except AbortError:
+            res["i"] = "aborted"
+
+    def t_j():
+        time.sleep(0.05)
+        t = Transaction(reg)
+        a = t.updates(A, 1)
+        try:
+            t.start(lambda _t: (a.deposit(7), sync.set()))
+            res["j"] = "committed"
+        except AbortError as e:
+            res["j"] = "forced" if e.forced else "manual"
+
+    ti = threading.Thread(target=t_i)
+    tj = threading.Thread(target=t_j)
+    ti.start(); tj.start(); ti.join(); tj.join()
+    assert res == {"i": "aborted", "j": "forced"}
+    assert A.holder.obj.bal == 100  # both rolled back
+
+
+def test_irrevocable_never_cascades(reg):
+    """§2.4: an irrevocable txn waits for termination, never reads early-
+    released state, and hence commits even when the predecessor aborts."""
+    A = bind(reg, "A", 100)
+    res = {}
+    consumed = threading.Event()
+
+    def t_i():
+        t = Transaction(reg)
+        a = t.updates(A, 1)
+
+        def body(t):
+            a.deposit(50)          # early release
+            time.sleep(0.3)
+            t.abort()
+        try:
+            t.start(body)
+        except AbortError:
+            res["i"] = "aborted"
+
+    def t_j():
+        time.sleep(0.05)
+        t = Transaction(reg, irrevocable=True)
+        a = t.updates(A, 1)
+        try:
+            t.start(lambda _t: a.deposit(7))
+            res["j"] = "committed"
+        except AbortError:
+            res["j"] = "aborted"
+
+    ti = threading.Thread(target=t_i)
+    tj = threading.Thread(target=t_j)
+    ti.start(); tj.start(); ti.join(); tj.join()
+    assert res == {"i": "aborted", "j": "committed"}
+    assert A.holder.obj.bal == 107  # only T_j's effect survives
+
+
+def test_abort_free_when_no_manual_aborts(reg):
+    """§2.4: 'if no transaction manually aborts, no transaction ever
+    aborts' — stress it."""
+    objs = [bind(reg, f"O{i}", 0) for i in range(4)]
+    aborts = []
+
+    def worker(i):
+        import random
+        rng = random.Random(i)
+        for _ in range(5):
+            picks = rng.sample(objs, 2)
+            t = Transaction(reg)
+            ps = [t.updates(o, 1) for o in picks]
+            try:
+                t.start(lambda _t: [p.deposit(1) for p in ps])
+            except AbortError:
+                aborts.append(i)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert aborts == []
+    assert sum(o.holder.obj.bal for o in objs) == 8 * 5 * 2
+
+
+def test_retry_reruns_block(reg):
+    A = bind(reg, "A", 0)
+    attempts = []
+    t = Transaction(reg)
+    a = t.updates(A, 1)
+
+    def body(t):
+        attempts.append(1)
+        a.deposit(1)
+        if len(attempts) < 3:
+            t.retry()
+
+    t.start(body)
+    assert len(attempts) == 3
+    assert A.holder.obj.bal == 1  # only the committed incarnation persists
+
+
+def test_remote_failure_aborts_and_releases(reg):
+    A = bind(reg, "A", 0)
+    B = bind(reg, "B", 0)
+    B.fail()
+    t = Transaction(reg)
+    a = t.updates(A, 1)
+    b = t.updates(B, 1)
+    with pytest.raises(RemoteObjectFailure):
+        t.start(lambda _t: (a.deposit(1), b.deposit(1)))
+    assert A.holder.obj.bal == 0   # rolled back
+    # A must be released for successors
+    t2 = Transaction(reg)
+    a2 = t2.updates(A, 1)
+    t2.start(lambda _t: a2.deposit(5))
+    assert A.holder.obj.bal == 5
+
+
+def test_deadlock_freedom_under_inverse_orders(reg):
+    """§2.10.2: global-order version locking prevents circular waits."""
+    A = bind(reg, "A", 0)
+    B = bind(reg, "B", 0, "n2")
+    done = []
+
+    def w(first, second, i):
+        for _ in range(10):
+            t = Transaction(reg)
+            p1 = t.updates(first, 1)
+            p2 = t.updates(second, 1)
+            t.start(lambda _t: (p1.deposit(1), p2.deposit(1)))
+        done.append(i)
+
+    t1 = threading.Thread(target=w, args=(A, B, 0))
+    t2 = threading.Thread(target=w, args=(B, A, 1))
+    t1.start(); t2.start()
+    t1.join(timeout=30); t2.join(timeout=30)
+    assert done == [0, 1] or done == [1, 0]
+    assert A.holder.obj.bal == 20 and B.holder.obj.bal == 20

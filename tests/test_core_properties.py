@@ -1,0 +1,178 @@
+"""Property-based tests (hypothesis) for system invariants.
+
+Invariants checked over randomized schedules:
+
+1. **Conservation** — concurrent transfers never create or destroy money
+   (serializability witness for commutative updates).
+2. **Abort-freedom** — without manual aborts, no transaction ever aborts
+   (paper §2.4), under any interleaving.
+3. **Snapshot equivalence** — the final state of a random committed
+   schedule equals replaying the committed transactions in their version
+   order (versioning = agreed serialization order).
+4. **Version-counter monotonicity** — lv/ltv never decrease, ltv ≤ lv.
+"""
+import threading
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Mode, Registry, Transaction, access
+
+
+class Cell:
+    def __init__(self, v=0):
+        self.v = v
+
+    @access(Mode.READ)
+    def get(self):
+        return self.v
+
+    @access(Mode.UPDATE)
+    def add(self, d):
+        self.v += d
+
+    @access(Mode.WRITE)
+    def put(self, v):
+        self.v = v
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, 3), st.integers(-5, 5)),
+    min_size=1, max_size=12))
+def test_conservation_under_concurrent_transfers(transfers):
+    reg = Registry()
+    node = reg.add_node("n")
+    cells = [reg.bind(f"c{i}", Cell(100), node) for i in range(4)]
+
+    def run_transfer(src, dst, amt):
+        if src == dst:
+            return
+        t = Transaction(reg)
+        ps = t.updates(cells[src], 1)
+        pd = t.updates(cells[dst], 1)
+        t.start(lambda _t: (ps.add(-amt), pd.add(amt)))
+
+    threads = [threading.Thread(target=run_transfer, args=tr)
+               for tr in transfers]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    total = sum(c.holder.obj.v for c in cells)
+    reg.shutdown()
+    assert total == 400
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.lists(st.tuples(st.integers(0, 2), st.sampled_from(
+    ["read", "add", "put"])), min_size=1, max_size=5),
+    min_size=1, max_size=6))
+def test_abort_freedom_random_schedules(txn_plans):
+    reg = Registry()
+    node = reg.add_node("n")
+    cells = [reg.bind(f"c{i}", Cell(0), node) for i in range(3)]
+    failures = []
+
+    def run_one(plan):
+        counts = {}
+        for idx, op in plan:
+            r, w, u = counts.get(idx, (0, 0, 0))
+            if op == "read":
+                counts[idx] = (r + 1, w, u)
+            elif op == "put":
+                counts[idx] = (r, w + 1, u)
+            else:
+                counts[idx] = (r, w, u + 1)
+        t = Transaction(reg)
+        proxies = {idx: t.accesses(cells[idx], *c)
+                   for idx, c in counts.items()}
+
+        def body(t):
+            for idx, op in plan:
+                p = proxies[idx]
+                if op == "read":
+                    p.get()
+                elif op == "put":
+                    p.put(7)
+                else:
+                    p.add(1)
+
+        try:
+            t.start(body)
+        except BaseException as e:  # noqa: BLE001
+            failures.append(repr(e))
+
+    threads = [threading.Thread(target=run_one, args=(p,)) for p in txn_plans]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    reg.shutdown()
+    assert failures == []
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 9)),
+                min_size=1, max_size=8))
+def test_serialization_matches_version_order(writes):
+    """Concurrent single-object writers end with the last-versioned value."""
+    reg = Registry()
+    node = reg.add_node("n")
+    cell = reg.bind("c", Cell(0), node)
+    order = []
+    lock = threading.Lock()
+
+    def writer(val):
+        t = Transaction(reg)
+        p = t.writes(cell, 1)
+        t.begin()
+        with lock:
+            order.append((t._order[0].pv, val))
+        p.put(val)
+        t.commit()
+
+    threads = [threading.Thread(target=writer, args=(v,)) for _, v in writes]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    expected = max(order)[1]  # value written by the highest private version
+    got = cell.holder.obj.v
+    reg.shutdown()
+    assert got == expected
+
+
+def test_version_counters_monotonic():
+    reg = Registry()
+    node = reg.add_node("n")
+    cell = reg.bind("c", Cell(0), node)
+    samples = []
+    stop = threading.Event()
+
+    def sampler():
+        h = cell.header
+        while not stop.is_set():
+            samples.append((h.lv, h.ltv))
+
+    st_thread = threading.Thread(target=sampler)
+    st_thread.start()
+
+    def worker():
+        for _ in range(20):
+            t = Transaction(reg)
+            p = t.updates(cell, 1)
+            t.start(lambda _t: p.add(1))
+
+    ws = [threading.Thread(target=worker) for _ in range(4)]
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    stop.set()
+    st_thread.join()
+    reg.shutdown()
+    lvs = [s[0] for s in samples]
+    ltvs = [s[1] for s in samples]
+    assert all(a <= b for a, b in zip(lvs, lvs[1:]))
+    assert all(a <= b for a, b in zip(ltvs, ltvs[1:]))
+    assert all(ltv <= lv for lv, ltv in samples)

@@ -1,0 +1,159 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Flash attention                                                              #
+# --------------------------------------------------------------------------- #
+FLASH_CASES = [
+    # (B, Sq, Skv, Hq, Hkv, hd, causal, window, cap, dtype)
+    (1, 64, 64, 4, 4, 32, True, None, None, jnp.float32),
+    (2, 96, 96, 4, 2, 32, True, None, None, jnp.float32),     # GQA
+    (2, 64, 64, 8, 1, 16, True, None, None, jnp.float32),     # MQA
+    (1, 80, 80, 4, 2, 32, True, 16, None, jnp.float32),       # window
+    (1, 64, 64, 4, 2, 32, True, None, 30.0, jnp.float32),     # softcap
+    (1, 64, 64, 4, 2, 32, False, None, None, jnp.float32),    # non-causal
+    (1, 72, 72, 4, 2, 24, True, 32, 50.0, jnp.float32),       # ragged+both
+    (2, 64, 64, 4, 2, 32, True, None, None, jnp.bfloat16),    # bf16
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_oracle(case):
+    B, Sq, Skv, Hq, Hkv, hd, causal, window, cap, dtype = case
+    q = rand(0, (B, Sq, Hq, hd), dtype)
+    k = rand(1, (B, Skv, Hkv, hd), dtype)
+    v = rand(2, (B, Skv, Hkv, hd), dtype)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   logit_cap=cap)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              logit_cap=cap, impl="pallas",
+                              block_q=32, block_k=32)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_flash_attention_jnp_fallback_matches_oracle():
+    from repro.models.attention import flash_attention_jnp
+    q = rand(0, (2, 100, 4, 32), jnp.float32)
+    k = rand(1, (2, 100, 2, 32), jnp.float32)
+    v = rand(2, (2, 100, 2, 32), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=24,
+                                   logit_cap=20.0)
+    got = flash_attention_jnp(q, k, v, causal=True, window=24,
+                              logit_cap=20.0, q_chunk=32, kv_chunk=48)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_decode_offset():
+    """Single query at position q_offset against a longer KV."""
+    q = rand(0, (2, 1, 4, 32), jnp.float32)
+    k = rand(1, (2, 40, 2, 32), jnp.float32)
+    v = rand(2, (2, 40, 2, 32), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=39)
+    got = ops.flash_attention(q, k, v, causal=True, q_offset=39,
+                              impl="pallas", block_q=8, block_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+# --------------------------------------------------------------------------- #
+# RWKV-6                                                                       #
+# --------------------------------------------------------------------------- #
+RWKV_CASES = [
+    (1, 32, 2, 16, 16, jnp.float32),
+    (2, 50, 4, 32, 16, jnp.float32),   # T not divisible by block
+    (2, 64, 1, 8, 64, jnp.float32),
+    (1, 33, 2, 16, 8, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES)
+def test_rwkv6_scan_matches_oracle(case):
+    B, T, H, hd, block_t, dtype = case
+    r = rand(0, (B, T, H, hd), dtype)
+    k = rand(1, (B, T, H, hd), dtype)
+    v = rand(2, (B, T, H, hd), dtype)
+    w = jax.nn.sigmoid(rand(3, (B, T, H, hd), jnp.float32)).astype(dtype)
+    u = rand(4, (H, hd), jnp.float32)
+    s0 = rand(5, (B, H, hd, hd), jnp.float32)
+    y_ref, s_ref = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    y, s = ops.rwkv6_scan(r, k, v, w, u, s0, impl="pallas", block_t=block_t)
+    atol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=atol, rtol=atol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               atol=atol, rtol=atol)
+
+
+def test_rwkv6_state_chaining():
+    """Running two half-sequences with state round-trip == one full run."""
+    B, T, H, hd = 1, 40, 2, 16
+    args = [rand(i, (B, T, H, hd), jnp.float32) for i in range(3)]
+    w = jax.nn.sigmoid(rand(3, (B, T, H, hd), jnp.float32))
+    u = rand(4, (H, hd), jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd))
+    y_full, s_full = ref.rwkv6_scan_ref(*args, w, u, s0)
+    half = T // 2
+    y1, s1 = ops.rwkv6_scan(*(a[:, :half] for a in args), w[:, :half], u, s0,
+                            impl="pallas", block_t=8)
+    y2, s2 = ops.rwkv6_scan(*(a[:, half:] for a in args), w[:, half:], u, s1,
+                            impl="pallas", block_t=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=2e-4, rtol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU                                                                       #
+# --------------------------------------------------------------------------- #
+RGLRU_CASES = [
+    (1, 32, 64, 16, 32, jnp.float32),
+    (2, 50, 96, 16, 32, jnp.float32),    # ragged T and W
+    (2, 64, 128, 64, 128, jnp.float32),
+    (1, 33, 48, 8, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES)
+def test_rglru_scan_matches_oracle(case):
+    B, T, W, bt, bw, dtype = case
+    x = rand(0, (B, T, W), dtype)
+    alog = rand(1, (W,), jnp.float32)
+    gr = jax.nn.sigmoid(rand(2, (B, T, W), jnp.float32)).astype(dtype)
+    gi = jax.nn.sigmoid(rand(3, (B, T, W), jnp.float32)).astype(dtype)
+    h0 = rand(4, (B, W), jnp.float32)
+    y_ref, h_ref = ref.rglru_scan_ref(x, alog, gr, gi, h0)
+    y, h = ops.rglru_scan(x, alog, gr, gi, h0, impl="pallas",
+                          block_t=bt, block_w=bw)
+    atol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=atol, rtol=atol)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=atol, rtol=atol)
+
+
+def test_rglru_decay_bounds():
+    """Property: with σ gates in (0,1), |h| stays bounded by a geometric sum."""
+    B, T, W = 1, 200, 8
+    x = jnp.ones((B, T, W))
+    alog = jnp.zeros((W,))              # softplus(0) ≈ 0.693 decay base
+    gr = jnp.full((B, T, W), 0.5)
+    gi = jnp.full((B, T, W), 1.0)
+    y, h = ref.rglru_scan_ref(x, alog, gr, gi, jnp.zeros((B, W)))
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.max(jnp.abs(y))) < 10.0
