@@ -51,6 +51,11 @@ class RefCell:
             time.sleep(RefCell.op_time)
         self.value = v
 
+    def __tx_snapshot__(self) -> "RefCell":
+        # O(1) snapshot protocol: the state is one immutable int, so a
+        # shallow clone replaces the deepcopy on every checkpoint/buffer.
+        return RefCell(self.value)
+
 
 @dataclass
 class EigenConfig:
@@ -77,6 +82,7 @@ class Result:
     commits: int
     abort_rate_pct: float
     wall_s: float
+    waits: int = 0                     # actual blocking waits, all frameworks
 
 
 Step = Tuple[Any, str, Optional[int]]  # (shared_obj, "read"/"write", value)
@@ -159,6 +165,8 @@ def _run_pessimistic(t, body, stats: Dict) -> None:
         stats["commits"] += 1
     except AbortError:
         stats["aborts"] += 1
+    finally:
+        stats["waits"] += t.stats.waits
 
 
 def make_lock_runner(kind: str, strict: bool) -> Callable:
@@ -179,6 +187,7 @@ def make_lock_runner(kind: str, strict: bool) -> Callable:
 
         t.start(body)
         stats["commits"] += 1
+        stats["waits"] += t.stats.waits
 
     return run
 
@@ -196,6 +205,7 @@ def run_tfa(reg: Registry, steps: List[Step], stats: Dict) -> None:
     stats["commits"] += 1
     stats["aborts"] += t.stats.aborts
     stats["retries"] += t.stats.retries
+    stats["waits"] += t.stats.waits
 
 
 FRAMEWORKS: Dict[str, Callable] = {
@@ -231,7 +241,7 @@ def run_benchmark(framework: str, cfg: EigenConfig) -> Result:
             for i in range(cfg.arrays_per_node)]
 
     runner = FRAMEWORKS[framework]
-    stats_per_client = [dict(commits=0, aborts=0, retries=0, ops=0)
+    stats_per_client = [dict(commits=0, aborts=0, retries=0, ops=0, waits=0)
                         for _ in range(n_clients)]
     # generate all plans up front (a-priori access sets)
     plans: List[List[List[Step]]] = []
@@ -264,12 +274,13 @@ def run_benchmark(framework: str, cfg: EigenConfig) -> Result:
     aborts = sum(s["aborts"] for s in stats_per_client)
     retries = sum(s["retries"] for s in stats_per_client)
     ops = sum(s["ops"] for s in stats_per_client)
+    waits = sum(s["waits"] for s in stats_per_client)
     attempted = commits + aborts + retries
     return Result(framework=framework,
                   throughput_ops=ops / wall,
                   aborts=aborts, retries=retries, commits=commits,
                   abort_rate_pct=100.0 * (aborts + retries) / max(attempted, 1),
-                  wall_s=wall)
+                  wall_s=wall, waits=waits)
 
 
 def sweep(frameworks: Sequence[str], cfg: EigenConfig, vary: str,
@@ -311,12 +322,13 @@ def main() -> None:
         cfg = EigenConfig(nodes=16, clients_per_node=16, txns_per_client=10,
                           read_pct=read_pct, op_time_ms=3.0)
 
-    print("framework,value,throughput_ops_s,abort_rate_pct,commits,aborts,retries")
+    print("framework,value,throughput_ops_s,abort_rate_pct,commits,aborts,"
+          "retries,waits")
     if args.sweep == "none":
         for fw in fws:
             res = run_benchmark(fw, cfg)
             print(f"{fw},-,{res.throughput_ops:.1f},{res.abort_rate_pct:.1f},"
-                  f"{res.commits},{res.aborts},{res.retries}")
+                  f"{res.commits},{res.aborts},{res.retries},{res.waits}")
     else:
         if args.sweep == "clients":
             pairs = sweep(fws, cfg, "clients_per_node", [2, 4, 8, 16])
@@ -328,7 +340,7 @@ def main() -> None:
         for v, res in pairs:
             print(f"{res.framework},{v},{res.throughput_ops:.1f},"
                   f"{res.abort_rate_pct:.1f},{res.commits},{res.aborts},"
-                  f"{res.retries}")
+                  f"{res.retries},{res.waits}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""Render EXPERIMENTS.md tables from results/dryrun artifacts.
+"""Render EXPERIMENTS.md tables from results/dryrun artifacts, and persist
+benchmark runs as BENCH_*.json points of the per-PR perf trajectory.
 
     PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
 """
@@ -6,7 +7,30 @@ from __future__ import annotations
 
 import argparse
 import json
+import platform
+import sys
+import time
 from pathlib import Path
+
+
+def write_bench_json(path, rows, meta=None) -> None:
+    """Write one BENCH_*.json trajectory point.
+
+    ``rows`` is a list of dicts (at minimum ``name``/``us_per_call``/
+    ``derived`` mirroring the CSV contract); ``meta`` carries run context.
+    """
+    payload = {
+        "meta": {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            **(meta or {}),
+        },
+        "rows": rows,
+    }
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+    # status to stderr: stdout carries the name,us_per_call,derived CSV
+    print(f"wrote {path} ({len(rows)} rows)", file=sys.stderr, flush=True)
 
 
 def fmt_cell(d):

@@ -102,6 +102,71 @@ def table_fig13_abort_rates(full: bool = False) -> None:
 
 
 # --------------------------------------------------------------------------- #
+# Scheduler-overhead microbench (PR1): op_time=0 isolates framework cost       #
+# --------------------------------------------------------------------------- #
+def bench_scheduler_overhead(full: bool = False,
+                             out: str = "BENCH_PR1.json") -> None:
+    """Per-transaction framework overhead with zero-cost operations.
+
+    Two regimes: *contended* (all clients on a small hot array, write-heavy —
+    long version chains, many gated executor tasks) and *uncontended*
+    (per-client mild arrays only — no blocking at all). ``optsva-cf`` is
+    additionally run against the seed poll-and-scan executor replica
+    (``benchmarks.seed_executor``) so the scheduling-core win is measured
+    in-repo; results land in ``BENCH_PR1.json``.
+    """
+    import benchmarks.eigenbench as eb
+    import benchmarks.seed_executor as seed
+    from benchmarks.report import write_bench_json
+
+    txns = 12 if full else 8
+    repeats = 7 if full else 5            # thread-scheduling noise: use medians
+    configs = {
+        "contended": eb.EigenConfig(
+            nodes=2, clients_per_node=8, arrays_per_node=4,
+            txns_per_client=txns, hot_ops=10, read_pct=0.1,
+            op_time_ms=0.0),
+        "uncontended": eb.EigenConfig(
+            nodes=2, clients_per_node=8, arrays_per_node=8,
+            txns_per_client=txns, hot_ops=0, mild_ops=10, read_pct=0.5,
+            op_time_ms=0.0),
+    }
+    frameworks = ["optsva-cf", "sva", "rw-2pl"]
+
+    def median_us(fw, cfg):
+        # Return the median run itself so us_per_call and the derived
+        # stats (throughput/waits/aborts) come from the same run.
+        runs = [eb.run_benchmark(fw, cfg) for _ in range(repeats)]
+        runs.sort(key=lambda r: r.wall_s / max(r.commits, 1))
+        r = runs[len(runs) // 2]
+        return 1e6 * r.wall_s / max(r.commits, 1), r
+
+    json_rows = []
+    for cname, cfg in configs.items():
+        for fw in frameworks:
+            us, r = median_us(fw, cfg)
+            derived = (f"throughput={r.throughput_ops:.0f}ops/s;"
+                       f"waits={r.waits};aborts={r.aborts}")
+            row = {"name": f"sched/{cname}/{fw}", "us_per_call": round(us, 1),
+                   "derived": derived, "commits": r.commits, "waits": r.waits}
+            if fw == "optsva-cf":
+                with seed.patched():
+                    seed_us, _ = median_us(fw, cfg)
+                gain = 100.0 * (1.0 - us / seed_us) if seed_us else 0.0
+                derived += (f";seed_us={seed_us:.1f};"
+                            f"improvement={gain:.1f}%")
+                row.update(seed_us_per_call=round(seed_us, 1),
+                           improvement_pct=round(gain, 1), derived=derived)
+            emit(row["name"], us, derived)
+            json_rows.append(row)
+    write_bench_json(out, json_rows, meta={
+        "bench": "scheduler_overhead", "pr": 1, "op_time_ms": 0.0,
+        "txns_per_client": txns,
+        "note": ("seed_us = identical run under the seed poll-and-scan "
+                 "executor replica (benchmarks.seed_executor)")})
+
+
+# --------------------------------------------------------------------------- #
 # Roofline tables from the dry-run artifacts (deliverable g)                   #
 # --------------------------------------------------------------------------- #
 def table_roofline() -> None:
@@ -159,11 +224,16 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--tables", default="all",
-                    help="comma list: fig10,fig11,fig12,fig13,roofline,step")
+                    help="comma list: sched,fig10,fig11,fig12,fig13,"
+                         "roofline,step")
+    ap.add_argument("--bench-out", default="BENCH_PR1.json",
+                    help="JSON trajectory point for the sched table")
     args = ap.parse_args()
-    tables = (["fig10", "fig11", "fig12", "fig13", "roofline", "step"]
+    tables = (["sched", "fig10", "fig11", "fig12", "fig13", "roofline", "step"]
               if args.tables == "all" else args.tables.split(","))
     print("name,us_per_call,derived")
+    if "sched" in tables:
+        bench_scheduler_overhead(args.full, out=args.bench_out)
     if "fig10" in tables:
         table_fig10_throughput_vs_clients(args.full)
     if "fig11" in tables:

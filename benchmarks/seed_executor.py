@@ -1,0 +1,155 @@
+"""Seed-executor replica: the pre-PR1 polling scheduler, kept ONLY as the
+benchmark baseline for ``bench_scheduler_overhead``.
+
+Reproduces the seed repo's ``Executor`` dispatch faithfully at the same API
+surface the event-driven executor now exposes (``submit(header, kind, pv,
+code, name)``):
+
+* one pending deque; every wakeup scans it O(pending) for a ready task;
+* readiness is re-evaluated via the header condition each scan;
+* wakeups arrive as counter-change *broadcasts* — a listener registered on
+  every header this executor has tasks for pokes it on any lv/ltv/instance
+  change, regardless of whether any parked condition is affected;
+* a 50 ms ``wait(timeout=...)`` liveness backstop covers lost pokes.
+
+``patched()`` swaps this class in for the real executor inside
+``repro.core.registry`` so an identical Eigenbench run isolates exactly the
+scheduling-core difference.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import traceback
+from collections import deque
+from typing import Callable, List, Optional
+
+from repro.core.api import TransactionError
+from repro.core.versioning import VersionHeader
+
+
+class _PollTask:
+    __slots__ = ("condition", "code", "done", "error", "name")
+
+    def __init__(self, condition: Callable[[], bool], code: Callable[[], None],
+                 name: str):
+        self.condition = condition
+        self.code = code
+        self.done = threading.Event()
+        self.error: Optional[BaseException] = None
+        self.name = name
+
+    def join(self) -> None:
+        self.done.wait()
+        if self.error is not None:
+            if isinstance(self.error, TransactionError):
+                raise self.error
+            raise RuntimeError(f"executor task {self.name} failed") from self.error
+
+    def run_if_ready(self) -> bool:
+        if not self.condition():
+            return False
+        try:
+            self.code()
+        except BaseException as e:  # noqa: BLE001 - propagate via join()
+            self.error = e
+            if not isinstance(e, TransactionError):
+                traceback.print_exc()
+        finally:
+            self.done.set()
+        return True
+
+
+class PollingExecutor:
+    """The seed's poll-and-scan executor behind the new submit signature."""
+
+    def __init__(self, name: str = "executor", workers: int = 1):
+        self._lock = threading.Lock()
+        self._wakeup = threading.Condition(self._lock)
+        self._pending: deque[_PollTask] = deque()
+        self._stopping = False
+        self._listened: set = set()
+        self._threads: List[threading.Thread] = []
+        for i in range(max(1, workers)):
+            t = threading.Thread(target=self._loop, name=f"{name}-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def poke(self) -> None:
+        with self._lock:
+            self._wakeup.notify_all()
+
+    def _ensure_listener(self, header: VersionHeader) -> None:
+        # Seed behavior: every shared object's header broadcast-pokes its
+        # node executor on any counter change.
+        with self._lock:
+            if header in self._listened:
+                return
+            self._listened.add(header)
+        header.add_listener(self.poke)
+
+    def submit(self, header: VersionHeader, kind: str, pv: int,
+               code: Callable[[], None], name: str = "task") -> _PollTask:
+        if kind == "termination":
+            condition = lambda: header.termination_ready(pv)  # noqa: E731
+        else:
+            condition = lambda: header.access_ready(pv)       # noqa: E731
+        self._ensure_listener(header)
+        task = _PollTask(condition, code, name)
+        with self._lock:
+            if self._stopping:
+                raise RuntimeError("executor is shut down")
+            self._pending.append(task)
+            self._wakeup.notify_all()
+        return task
+
+    def _loop(self) -> None:
+        while True:
+            with self._lock:
+                if self._stopping and not self._pending:
+                    return
+                task: Optional[_PollTask] = None
+                # Scan for a ready task; preserve FIFO among non-ready ones.
+                for _ in range(len(self._pending)):
+                    cand = self._pending.popleft()
+                    try:
+                        ready = cand.condition()
+                    except BaseException as e:  # noqa: BLE001
+                        cand.error = e
+                        cand.done.set()
+                        continue
+                    if ready:
+                        task = cand
+                        break
+                    self._pending.append(cand)
+                if task is None:
+                    if self._stopping:
+                        return
+                    # Counter changes poke us; timeout is a liveness backstop.
+                    self._wakeup.wait(timeout=0.05)
+                    continue
+            task.run_if_ready()
+
+    def shutdown(self) -> None:
+        with self._lock:
+            self._stopping = True
+            self._wakeup.notify_all()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def pending_count(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+
+@contextlib.contextmanager
+def patched():
+    """Run Eigenbench with nodes built on the seed polling executor."""
+    import repro.core.registry as registry
+
+    orig = registry.Executor
+    registry.Executor = PollingExecutor
+    try:
+        yield
+    finally:
+        registry.Executor = orig

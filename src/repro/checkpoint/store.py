@@ -130,8 +130,10 @@ class AsyncCheckpointer:
         self.on_done = on_done
         self._lock = threading.Lock()
         self._pending: Optional[Tuple[Params, int]] = None
+        self._busy = False                 # a save is in flight on the thread
         self._stop = threading.Event()
         self._wake = threading.Event()
+        self._idle = threading.Condition(self._lock)
         self.saved: List[int] = []
         self.errors: List[str] = []
         self._thread = threading.Thread(target=self._loop, daemon=True,
@@ -149,6 +151,7 @@ class AsyncCheckpointer:
             self._wake.clear()
             with self._lock:
                 job, self._pending = self._pending, None
+                self._busy = job is not None
             if job is None:
                 continue
             tree, step = job
@@ -159,17 +162,21 @@ class AsyncCheckpointer:
                     self.on_done(step, path)
             except BaseException as e:  # noqa: BLE001
                 self.errors.append(repr(e))
+            finally:
+                with self._lock:
+                    self._busy = False
+                    self._idle.notify_all()
 
     def drain(self, timeout: float = 60.0) -> None:
-        import time
-        t0 = time.monotonic()
-        while time.monotonic() - t0 < timeout:
-            with self._lock:
-                if self._pending is None:
-                    return
-            self._wake.set()
-            import time as _t
-            _t.sleep(0.05)
+        """Block until every submitted snapshot is fully on disk — i.e. no
+        job is pending AND no save is in flight (a drain that returns while
+        the last save is mid-write lets callers observe the previous
+        LATEST pointer)."""
+        self._wake.set()
+        with self._lock:
+            self._idle.wait_for(
+                lambda: self._pending is None and not self._busy,
+                timeout=timeout)
 
     def stop(self) -> None:
         self.drain()

@@ -1,11 +1,23 @@
-"""The executor thread (paper §3.3).
+"""The executor thread (paper §3.3) — event-driven (DESIGN.md §1.3).
 
 OptSVA-CF calls for asynchronous tasks (read-only snapshotting, last-write
 log application). Spawning a thread per task is costly, so — exactly as in
 Atomic RMI 2 — each node runs one always-on executor thread to which
-transactions hand *tasks*: a ``condition`` plus ``code``. The executor runs
-the code only once the condition holds, re-evaluating whenever any version
-counter (``lv``/``ltv``) that can influence a condition changes.
+transactions hand *tasks*. A task is gated on one version-counter condition
+of one :class:`~repro.core.versioning.VersionHeader`: ``(header, kind, pv)``
+with ``kind`` either ``"access"`` (``lv >= pv - 1``) or ``"termination"``
+(``ltv >= pv - 1``).
+
+Dispatch is O(woken tasks), with no scan and no timed polling: ``submit``
+parks the task directly on the header's waiter queue; when the counter
+reaches the threshold the header's drain enqueues the task on this
+executor's ready-queue and the worker thread runs it **unconditionally** —
+the gating conditions are monotonic, so a task woken by its header can
+never become un-ready again (this also closes the seed's task-loss hazard,
+where a ready task re-checked outside the lock could be silently dropped).
+Per task the condition is evaluated at most twice: once at submit (already
+satisfied → straight to the ready-queue) and once as the heap-top
+comparison that wakes it.
 
 Task code never blocks (its only precondition IS the condition), so a single
 thread cannot deadlock; it can, however, become a throughput bottleneck under
@@ -18,19 +30,18 @@ from __future__ import annotations
 import threading
 import traceback
 from collections import deque
-from typing import Callable, List, Optional
+from typing import List, Optional, Callable
 
 from .api import TransactionError
+from .versioning import VersionHeader
 
 
 class Task:
     """A unit of deferred work gated on a version-counter condition."""
 
-    __slots__ = ("condition", "code", "done", "error", "name")
+    __slots__ = ("code", "done", "error", "name")
 
-    def __init__(self, condition: Callable[[], bool], code: Callable[[], None],
-                 name: str = "task"):
-        self.condition = condition
+    def __init__(self, code: Callable[[], None], name: str = "task"):
         self.code = code
         self.done = threading.Event()
         self.error: Optional[BaseException] = None
@@ -44,9 +55,9 @@ class Task:
                 raise self.error
             raise RuntimeError(f"executor task {self.name} failed") from self.error
 
-    def run_if_ready(self) -> bool:
-        if not self.condition():
-            return False
+    def run(self) -> None:
+        """Execute unconditionally: the gating condition held when this task
+        was enqueued, and monotonicity means it still holds."""
         try:
             self.code()
         except BaseException as e:  # noqa: BLE001 - propagate via join()
@@ -55,64 +66,68 @@ class Task:
                 traceback.print_exc()
         finally:
             self.done.set()
-        return True
 
 
 class Executor:
-    """Per-node executor: queue of condition-gated tasks + wakeup signal."""
+    """Per-node executor consuming a ready-queue fed by header callbacks."""
 
-    def __init__(self, name: str = "executor", workers: int = 1):
+    def __init__(self, name: str = "executor", workers: int = 1,
+                 inline_ready: bool = True):
         self._lock = threading.Lock()
         self._wakeup = threading.Condition(self._lock)
-        self._pending: deque[Task] = deque()
+        self._ready: deque[Task] = deque()
+        self._inline_ready = inline_ready
         self._stopping = False
+        self._dead = False                 # workers joined; nothing drains
         self._threads: List[threading.Thread] = []
         for i in range(max(1, workers)):
             t = threading.Thread(target=self._loop, name=f"{name}-{i}", daemon=True)
             t.start()
             self._threads.append(t)
 
-    # Called by VersionHeader listeners on every lv/ltv/instance change.
-    def poke(self) -> None:
+    def _enqueue(self, task: Task) -> None:
         with self._lock:
-            self._wakeup.notify_all()
+            if self._dead:
+                # Workers are gone: fail the task instead of parking it on a
+                # queue nobody drains (join() would hang forever).
+                task.error = RuntimeError("executor is shut down")
+                task.done.set()
+                return
+            self._ready.append(task)
+            self._wakeup.notify()
 
-    def submit(self, condition: Callable[[], bool], code: Callable[[], None],
-               name: str = "task") -> Task:
-        task = Task(condition, code, name)
+    def submit(self, header: VersionHeader, kind: str, pv: int,
+               code: Callable[[], None], name: str = "task") -> Task:
+        """Submit ``code`` gated on ``(header, kind, pv)``.
+
+        If the condition is not yet satisfied the task parks on the header's
+        waiter queue and the releasing transaction's drain enqueues it on the
+        ready-queue. If it already holds, the task runs *inline* on the
+        submitting thread: the work (snapshot / log apply) must complete
+        before the object can be released anyway, and two context switches
+        through the executor thread are pure scheduling overhead — the
+        asynchrony of §2.7/§2.8.4 buys overlap only while the gate is
+        closed. (``inline_ready=False`` restores strict asynchrony.)"""
         with self._lock:
             if self._stopping:
                 raise RuntimeError("executor is shut down")
-            self._pending.append(task)
-            self._wakeup.notify_all()
+        task = Task(code, name)
+        if not header.park(kind, pv, lambda: self._enqueue(task)):
+            if self._inline_ready:
+                task.run()
+            else:
+                self._enqueue(task)
         return task
 
     def _loop(self) -> None:
         while True:
             with self._lock:
-                if self._stopping and not self._pending:
-                    return
-                task: Optional[Task] = None
-                # Scan for a ready task; preserve FIFO among non-ready ones.
-                for _ in range(len(self._pending)):
-                    cand = self._pending.popleft()
-                    try:
-                        ready = cand.condition()
-                    except BaseException as e:  # noqa: BLE001
-                        cand.error = e
-                        cand.done.set()
-                        continue
-                    if ready:
-                        task = cand
-                        break
-                    self._pending.append(cand)
-                if task is None:
+                while not self._ready:
                     if self._stopping:
                         return
-                    # Counter changes poke us; timeout is a liveness backstop.
-                    self._wakeup.wait(timeout=0.05)
-                    continue
-            task.run_if_ready()
+                    self._wakeup.wait()
+                task = self._ready.popleft()
+            task.run()
 
     def shutdown(self) -> None:
         with self._lock:
@@ -120,7 +135,17 @@ class Executor:
             self._wakeup.notify_all()
         for t in self._threads:
             t.join(timeout=5.0)
+        # A header callback racing shutdown may have enqueued after the
+        # workers exited; fail those tasks so joiners unblock.
+        with self._lock:
+            self._dead = True
+            leftovers = list(self._ready)
+            self._ready.clear()
+        for task in leftovers:
+            task.error = RuntimeError("executor is shut down")
+            task.done.set()
 
     def pending_count(self) -> int:
+        """Tasks sitting in the ready-queue (parked tasks live on headers)."""
         with self._lock:
-            return len(self._pending)
+            return len(self._ready)

@@ -78,11 +78,8 @@ class TransactionMonitor:
             # Invalidate: the crashed txn (if merely slow) and anyone who read
             # its early-released state must abort when they next check.
             h.instance += 1
-            # Self-release: advance both counters past the crashed holder.
-            pv = acc.pv if acc is not None else h.lv + 1
-            if h.lv < pv:
-                h.lv = pv
-            if h.ltv < pv:
-                h.ltv = pv
-            h._notify()
+            # Self-release: advance both counters past the crashed holder,
+            # collecting the waiters this unblocks.
+            woken = h.advance_locked(acc.pv)
+        h.fire_callbacks(woken)  # outside the version lock
         self.rollbacks.append(shared.name)

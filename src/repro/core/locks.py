@@ -23,7 +23,11 @@ from .registry import Node, Registry, SharedObject
 
 
 class RWLock:
-    """Writer-preferring reader-writer lock."""
+    """Writer-preferring reader-writer lock.
+
+    ``acquire_*`` return True iff the caller actually blocked, so callers
+    can report real waits (not mere acquisition counts) in their stats.
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -33,11 +37,14 @@ class RWLock:
         self._writer = False
         self._writers_waiting = 0
 
-    def acquire_read(self) -> None:
+    def acquire_read(self) -> bool:
         with self._lock:
+            waited = False
             while self._writer or self._writers_waiting:
+                waited = True
                 self._readers_ok.wait()
             self._readers += 1
+            return waited
 
     def release_read(self) -> None:
         with self._lock:
@@ -45,19 +52,29 @@ class RWLock:
             if self._readers == 0:
                 self._writers_ok.notify()
 
-    def acquire_write(self) -> None:
+    def acquire_write(self) -> bool:
         with self._lock:
             self._writers_waiting += 1
+            waited = False
             while self._writer or self._readers:
+                waited = True
                 self._writers_ok.wait()
             self._writers_waiting -= 1
             self._writer = True
+            return waited
 
     def release_write(self) -> None:
         with self._lock:
             self._writer = False
-            self._writers_ok.notify()
-            self._readers_ok.notify_all()
+            # Writer preference: hand off to a waiting writer if there is
+            # one; only when no writer waits may readers be woken. Waking
+            # both classes at once lets a reader slip in whenever it wins
+            # the race to the monitor before the writer re-evaluates,
+            # breaking the preference invariant under simultaneous wakeup.
+            if self._writers_waiting:
+                self._writers_ok.notify()
+            else:
+                self._readers_ok.notify_all()
 
 
 class _LockTable:
@@ -148,20 +165,28 @@ class LockTransaction:
             return
         self._started = True
         if self.kind == "glock":
-            GLOBAL_LOCK.acquire()
+            if not GLOBAL_LOCK.acquire(blocking=False):
+                self.stats.waits += 1
+                GLOBAL_LOCK.acquire()
             return
-        # Deadlock avoidance: acquire in global header-uid order.
+        # Deadlock avoidance: acquire in global header-uid order. A wait is
+        # counted only when the lock was actually contended, so the
+        # Eigenbench `waits` column is comparable across frameworks.
         for shared, will_write in sorted(self._declared, key=lambda p: p[0].header.uid):
-            self.stats.waits += 1
             if self.kind == "mutex":
-                LOCK_TABLE.mutex(shared).acquire()
+                m = LOCK_TABLE.mutex(shared)
+                if not m.acquire(blocking=False):
+                    self.stats.waits += 1
+                    m.acquire()
                 self._held[shared] = "write"
             else:
                 if will_write:
-                    LOCK_TABLE.rw(shared).acquire_write()
+                    if LOCK_TABLE.rw(shared).acquire_write():
+                        self.stats.waits += 1
                     self._held[shared] = "write"
                 else:
-                    LOCK_TABLE.rw(shared).acquire_read()
+                    if LOCK_TABLE.rw(shared).acquire_read():
+                        self.stats.waits += 1
                     self._held[shared] = "read"
 
     def _invoke(self, shared: SharedObject, method: str, args: tuple,

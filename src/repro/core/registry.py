@@ -60,7 +60,6 @@ class SharedObject:
         self.holder = StateHolder(obj)
         self.node = node
         self.header = VersionHeader(owner_node=node)
-        self.header.add_listener(node.executor.poke)
         self.failed = False
         # operation log fence for fault tolerance: last time a transaction
         # holding this object talked to it (paper §3.4).
@@ -84,10 +83,12 @@ class SharedObject:
             raise RemoteObjectFailure(f"remote object {self.name!r} is unreachable")
 
     def fail(self) -> None:
-        """Crash-stop this object (paper §3.4: removed from the system)."""
+        """Crash-stop this object (paper §3.4: removed from the system).
+
+        Wakes nobody: reachability is checked on the operation path, not in
+        any wait condition, and the monitor's self-rollback (not this flag)
+        is what eventually advances the counters blocked waiters need."""
         self.failed = True
-        with self.header.lock:
-            self.header._notify()
 
     # -- fault-tolerance heartbeat -------------------------------------------
     def touch(self, txn: object) -> None:

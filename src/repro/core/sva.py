@@ -117,12 +117,13 @@ class SvaTransaction:
             raise SupremumViolation(
                 f"access #{a.count + 1} on {shared.name!r} exceeds supremum {a.ub}")
         if not a.holds_access:
-            self.stats.waits += 1
             h = shared.header
             if self.irrevocable:
-                h.wait_termination(a.pv, timeout=self.wait_timeout)
+                blocked = h.wait_termination(a.pv, timeout=self.wait_timeout)
             else:
-                h.wait_access(a.pv, timeout=self.wait_timeout)
+                blocked = h.wait_access(a.pv, timeout=self.wait_timeout)
+            if blocked:
+                self.stats.waits += 1
             shared.check_reachable()
             with h.lock:
                 a.seen_instance = h.instance
@@ -153,7 +154,8 @@ class SvaTransaction:
         if self._terminated:
             raise IllegalState("transaction already terminated")
         for a in self._order:
-            a.shared.header.wait_termination(a.pv, timeout=self.wait_timeout)
+            if a.shared.header.wait_termination(a.pv, timeout=self.wait_timeout):
+                self.stats.waits += 1
         doomed = any(
             a.seen_instance is not None
             and a.shared.header.instance != a.seen_instance
@@ -195,7 +197,6 @@ class SvaTransaction:
                     if h.instance == a.seen_instance:
                         a.st.restore_into(a.shared.holder)
                         h.instance += 1
-                        h._notify()
         for a in self._order:
             if not a.released:
                 a.shared.header.release_to(a.pv)

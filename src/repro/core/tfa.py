@@ -11,7 +11,6 @@ pessimistic approach avoids (§2.4, Fig. 13).
 """
 from __future__ import annotations
 
-import copy
 import itertools
 import random
 import threading
@@ -19,6 +18,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from .api import Mode, OpStats, TransactionError
+from .buffers import snapshot_state
 from .registry import Node, Registry, SharedObject
 
 _txn_ids = itertools.count(1)
@@ -138,7 +138,10 @@ class TfaTransaction:
             self._validate_read_set()
             self.rv = CLOCK.read()
         shared.check_reachable()
-        local = copy.deepcopy(shared.holder.obj)
+        # DF model: the state is fetched to the client. Uses the snapshot
+        # protocol (buffers.snapshot_state) so the optimistic baseline pays
+        # the same per-object copy cost as the pessimistic frameworks.
+        local = snapshot_state(shared.holder.obj)
         self._workspace[shared] = (local, version)
         self._read_set[shared] = version
         return local
@@ -172,8 +175,10 @@ class TfaTransaction:
         try:
             for shared in sorted(self._write_set, key=lambda s: s.header.uid):
                 meta = META.get(shared)
-                if not meta.lock.acquire(timeout=1.0):
-                    raise TfaAbort(f"commit lock timeout on {shared.name}")
+                if not meta.lock.acquire(blocking=False):
+                    self.stats.waits += 1        # actually contended
+                    if not meta.lock.acquire(timeout=1.0):
+                        raise TfaAbort(f"commit lock timeout on {shared.name}")
                 meta.owner = self.id
                 locked.append(meta)
             self._validate_read_set()

@@ -191,12 +191,10 @@ class Transaction:
             if a.sup.read_only and a.sup.reads > 0:
                 self._spawn_readonly_buffering(a)
 
-    def _cond_for(self, a: ObjectAccess) -> Callable[[], bool]:
-        """Access condition — or termination condition for irrevocable txns (§2.4)."""
-        h = a.shared.header
-        if self.irrevocable:
-            return lambda: h.termination_ready(a.pv)
-        return lambda: h.access_ready(a.pv)
+    @property
+    def _gate_kind(self) -> str:
+        """Access gate — or termination gate for irrevocable txns (§2.4)."""
+        return "termination" if self.irrevocable else "access"
 
     def _spawn_readonly_buffering(self, a: ObjectAccess) -> None:
         shared = a.shared
@@ -213,7 +211,8 @@ class Transaction:
                 a.released = True
 
         a.release_task = shared.node.executor.submit(
-            self._cond_for(a), code, name=f"ro-buffer:{shared.name}:T{self.id}")
+            shared.header, self._gate_kind, a.pv, code,
+            name=f"ro-buffer:{shared.name}:T{self.id}")
 
     # ------------------------------------------------------------------ #
     # Operation dispatch                                                  #
@@ -345,17 +344,19 @@ class Transaction:
                 a.released = True
 
         a.release_task = shared.node.executor.submit(
-            self._cond_for(a), code, name=f"lw-apply:{shared.name}:T{self.id}")
+            shared.header, self._gate_kind, a.pv, code,
+            name=f"lw-apply:{shared.name}:T{self.id}")
 
     # -- shared helpers --------------------------------------------------------
     def _wait_access_and_checkpoint(self, a: ObjectAccess) -> None:
         shared = a.shared
         h = shared.header
-        self.stats.waits += 1
         if self.irrevocable:
-            h.wait_termination(a.pv, timeout=self.wait_timeout)
+            blocked = h.wait_termination(a.pv, timeout=self.wait_timeout)
         else:
-            h.wait_access(a.pv, timeout=self.wait_timeout)
+            blocked = h.wait_access(a.pv, timeout=self.wait_timeout)
+        if blocked:
+            self.stats.waits += 1
         shared.check_reachable()
         with h.lock:
             inst = h.instance
@@ -411,7 +412,8 @@ class Transaction:
             raise AbortError(f"asynchronous task failed: {task_error}", forced=True)
         # 2. Wait until the commit condition holds for every object.
         for a in self._order:
-            a.shared.header.wait_termination(a.pv, timeout=self.wait_timeout)
+            if a.shared.header.wait_termination(a.pv, timeout=self.wait_timeout):
+                self.stats.waits += 1
         # 3. Checkpoint untouched objects; apply left-over logs; release.
         for a in self._order:
             h = a.shared.header
@@ -481,7 +483,6 @@ class Transaction:
                         # Not already restored to an older version: restore + invalidate.
                         st.restore_into(a.shared.holder)
                         h.instance += 1
-                        h._notify()
         # 4. Release and terminate every object.
         for a in self._order:
             self._release(a)

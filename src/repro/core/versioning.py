@@ -25,36 +25,63 @@ Conditions (paper §2.1, §2.3):
 Irrevocable transactions replace every access-condition wait with a
 termination-condition wait (§2.4), so they never observe early-released
 (and hence potentially revocable) state.
+
+Wakeups are **event-driven and targeted** (DESIGN.md §1.2): both conditions
+are monotonic single-variable threshold predicates (``lv >= pv - 1`` resp.
+``ltv >= pv - 1``; the counters only grow), so each header keeps two waiter
+min-heaps keyed on the threshold — access waiters on ``lv``, termination
+waiters on ``ltv``. ``release_to``/``terminate_to`` pop exactly the waiters
+whose threshold the new counter value satisfies and fire their callbacks
+(after dropping the version lock, so callbacks may take other locks).
+There is no broadcast: a counter change on header A never evaluates a
+condition parked on header B, and a change that satisfies no waiter costs
+one heap-top comparison. ``instance`` bumps wake nobody — no condition
+mentions the epoch; doomed transactions discover it at their next validity
+check, exactly as in the seed semantics.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 import threading
-from typing import Callable, List, Optional, TYPE_CHECKING
-
-if TYPE_CHECKING:  # pragma: no cover
-    from .executor import Executor
+from typing import Callable, List, Optional
 
 _header_ids = itertools.count(1)
+_waiter_seq = itertools.count()
+
+# Waiter heap entry: [threshold, seq, callback]; callback is set to None to
+# cancel in place (lazy deletion — the drain discards cancelled entries).
+_ACCESS = "access"
+_TERMINATION = "termination"
 
 
 class VersionHeader:
     """Concurrency-control state attached to one shared object."""
 
     __slots__ = (
-        "uid", "lock", "cond", "gv", "lv", "ltv", "instance",
-        "_listeners", "owner_node",
+        "uid", "lock", "gv", "lv", "ltv", "instance",
+        "_access_waiters", "_term_waiters", "_listeners",
+        "cond_evals", "wakeups", "owner_node",
     )
 
     def __init__(self, owner_node: Optional[object] = None):
         self.uid: int = next(_header_ids)      # global order for start-time locking
         self.lock = threading.RLock()          # the object's "version lock"
-        self.cond = threading.Condition(self.lock)
         self.gv: int = 0
         self.lv: int = 0
         self.ltv: int = 0
         self.instance: int = 0
+        self._access_waiters: List[list] = []  # heap on lv threshold
+        self._term_waiters: List[list] = []    # heap on ltv threshold
+        # Optional counter-change listeners (seed-era broadcast hook; kept
+        # for the benchmark's seed-executor replica, unused otherwise).
         self._listeners: List[Callable[[], None]] = []
+        # Instrumentation: how many times a waiter condition was evaluated
+        # (at park time + one heap-top comparison per drain) and how many
+        # waiters were actually woken. The targeting regression test pins
+        # these: releasing another header must not evaluate ours.
+        self.cond_evals: int = 0
+        self.wakeups: int = 0
         self.owner_node = owner_node
 
     # -- version dispensing -------------------------------------------------
@@ -63,18 +90,58 @@ class VersionHeader:
         self.gv += 1
         return self.gv
 
-    # -- counter updates ----------------------------------------------------
-    def _notify(self) -> None:
-        self.cond.notify_all()
-        for fn in list(self._listeners):
-            fn()
+    # -- waiter parking -----------------------------------------------------
+    def park(self, kind: str, pv: int, callback: Callable[[], None]) -> bool:
+        """Register ``callback`` to fire once the ``kind`` condition for
+        ``pv`` holds. Returns ``False`` if the condition already holds (the
+        callback is NOT invoked — the caller runs the work itself), ``True``
+        if the waiter was parked. Monotonicity guarantees the callback fires
+        exactly once, when the counter first reaches the threshold."""
+        threshold = pv - 1
+        with self.lock:
+            self.cond_evals += 1
+            if kind == _ACCESS:
+                if self.lv >= threshold:
+                    return False
+                heap = self._access_waiters
+            else:
+                if self.ltv >= threshold:
+                    return False
+                heap = self._term_waiters
+            heapq.heappush(heap, [threshold, next(_waiter_seq), callback])
+            return True
 
+    def _drain_ready_locked(self) -> List[Callable[[], None]]:
+        """Pop every waiter whose threshold is now satisfied. Caller holds
+        ``lock``; returned callbacks must be fired after dropping it."""
+        fire: List[Callable[[], None]] = []
+        for heap, counter in ((self._access_waiters, self.lv),
+                              (self._term_waiters, self.ltv)):
+            while heap:
+                self.cond_evals += 1
+                if heap[0][0] > counter:
+                    break
+                entry = heapq.heappop(heap)
+                if entry[2] is not None:       # skip cancelled waiters
+                    self.wakeups += 1
+                    fire.append(entry[2])
+        return fire
+
+    def _fire(self, callbacks: List[Callable[[], None]]) -> None:
+        for cb in callbacks:
+            cb()
+        if self._listeners:
+            for fn in list(self._listeners):
+                fn()
+
+    # -- counter updates ----------------------------------------------------
     def release_to(self, pv: int) -> None:
         """Set ``lv = pv`` (early release / release-at-termination)."""
         with self.lock:
             if self.lv < pv:
                 self.lv = pv
-            self._notify()
+            fire = self._drain_ready_locked()
+        self._fire(fire)
 
     def terminate_to(self, pv: int) -> None:
         """Set ``ltv = pv`` (commit/abort). Implies release."""
@@ -83,35 +150,90 @@ class VersionHeader:
                 self.lv = pv
             if self.ltv < pv:
                 self.ltv = pv
-            self._notify()
+            fire = self._drain_ready_locked()
+        self._fire(fire)
+
+    def advance_locked(self, pv: int) -> List[Callable[[], None]]:
+        """Advance both counters to ``pv`` while the caller already holds
+        ``lock`` (fault-tolerance self-rollback, §3.4). Returns the ready
+        callbacks; the caller MUST fire them via :meth:`fire_callbacks`
+        after dropping the lock."""
+        if self.lv < pv:
+            self.lv = pv
+        if self.ltv < pv:
+            self.ltv = pv
+        return self._drain_ready_locked()
+
+    def fire_callbacks(self, callbacks: List[Callable[[], None]]) -> None:
+        """Fire drained waiter callbacks (outside the version lock)."""
+        self._fire(callbacks)
 
     def bump_instance(self) -> None:
-        """Invalidate the current instance (abort restored older state)."""
+        """Invalidate the current instance (abort restored older state).
+
+        Wakes nobody: no wait condition involves the epoch."""
         with self.lock:
             self.instance += 1
-            self._notify()
 
     # -- conditions -----------------------------------------------------------
     def access_ready(self, pv: int) -> bool:
-        return pv - 1 == self.lv
+        return pv - 1 <= self.lv
 
     def termination_ready(self, pv: int) -> bool:
-        return pv - 1 == self.ltv
+        return pv - 1 <= self.ltv
 
-    def wait_access(self, pv: int, *, timeout: Optional[float] = None) -> None:
-        """Block until the access condition ``pv - 1 == lv`` holds."""
+    def _wait(self, kind: str, pv: int, timeout: Optional[float]) -> bool:
+        """Block until the ``kind`` condition for ``pv`` holds.
+
+        Returns True iff the caller actually blocked (a real wait, used for
+        the per-framework wait statistics). Raises ``TimeoutError`` on
+        timeout expiry."""
+        ev = threading.Event()
+        wake = ev.set                          # one bound method: identity key
+        if not self.park(kind, pv, wake):
+            return False
+        if ev.wait(timeout):
+            return True
+        # Timed out: cancel the parked waiter. If it fired in the race
+        # window the wait actually succeeded.
         with self.lock:
-            if not self.cond.wait_for(lambda: self.lv >= pv - 1, timeout=timeout):
-                raise TimeoutError(f"access condition timed out (pv={pv}, lv={self.lv})")
+            heap = self._access_waiters if kind == _ACCESS else self._term_waiters
+            for entry in heap:
+                if entry[2] is wake:
+                    # Remove eagerly: a stuck version chain (e.g. a crashed
+                    # predecessor with no monitor) sees repeated timed-out
+                    # retries, and lazily-cancelled entries would pile up in
+                    # a heap whose threshold is never reached. The timeout
+                    # path is rare, so O(n) removal is fine.
+                    heap.remove(entry)
+                    heapq.heapify(heap)
+                    break
+            else:
+                return True                    # already drained: we won
+        counter = self.lv if kind == _ACCESS else self.ltv
+        raise TimeoutError(
+            f"{kind} condition timed out (pv={pv}, counter={counter})")
 
-    def wait_termination(self, pv: int, *, timeout: Optional[float] = None) -> None:
-        """Block until the commit condition ``pv - 1 == ltv`` holds."""
+    def wait_access(self, pv: int, *, timeout: Optional[float] = None) -> bool:
+        """Block until the access condition ``pv - 1 == lv`` holds.
+        Returns True iff the caller actually blocked."""
+        return self._wait(_ACCESS, pv, timeout)
+
+    def wait_termination(self, pv: int, *, timeout: Optional[float] = None) -> bool:
+        """Block until the commit condition ``pv - 1 == ltv`` holds.
+        Returns True iff the caller actually blocked."""
+        return self._wait(_TERMINATION, pv, timeout)
+
+    def waiter_counts(self) -> tuple:
+        """(access, termination) waiters currently parked (for tests)."""
         with self.lock:
-            if not self.cond.wait_for(lambda: self.ltv >= pv - 1, timeout=timeout):
-                raise TimeoutError(f"commit condition timed out (pv={pv}, ltv={self.ltv})")
+            return (sum(1 for e in self._access_waiters if e[2] is not None),
+                    sum(1 for e in self._term_waiters if e[2] is not None))
 
+    # -- seed-era listener hooks (benchmark baseline replica only) ----------
     def add_listener(self, fn: Callable[[], None]) -> None:
-        """Register a counter-change listener (used by the executor, §3.3)."""
+        """Register a counter-change listener. The event-driven executor no
+        longer uses these; the seed-executor benchmark shim does."""
         with self.lock:
             self._listeners.append(fn)
 

@@ -67,6 +67,11 @@ class StateCell:
         # jax arrays are immutable: snapshot = reference copy of the pytree
         return StateCell(self.value, self.version)
 
+    def __tx_snapshot__(self) -> "StateCell":
+        # Snapshot protocol (buffers.py): same reference-copy rationale, but
+        # O(1) with no deepcopy dispatch on the checkpoint/read-buffer path.
+        return StateCell(self.value, self.version)
+
 
 class VersionedStateStore:
     """Named state cells + transaction factories for the runtime actors."""

@@ -13,7 +13,11 @@ Invariants checked over randomized schedules:
 """
 import threading
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Mode, Registry, Transaction, access
 

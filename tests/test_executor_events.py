@@ -1,0 +1,179 @@
+"""Event-driven scheduling regression tests (DESIGN.md §1.2-§1.3).
+
+Guards the properties the waiter-queue refactor bought:
+
+* wakeup latency — a gated task runs promptly after its release, well under
+  the seed executor's 50 ms polling backstop;
+* targeting — a release on header A never evaluates conditions parked on
+  header B (counted via ``VersionHeader.cond_evals``);
+* no task loss — a task woken by its header runs unconditionally, so
+  ``join()`` can never hang on a dropped-but-ready task;
+* timeout waits still work (the fault-tolerance path depends on them).
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import Mode, Registry, Transaction, access
+from repro.core.executor import Executor
+from repro.core.versioning import VersionHeader
+
+
+# --------------------------------------------------------------------------- #
+# Direct header/executor level                                                 #
+# --------------------------------------------------------------------------- #
+def test_gated_task_wakes_well_under_polling_backstop():
+    ex = Executor(name="t-ex")
+    h = VersionHeader()
+    h.dispense()            # pv 1 (the predecessor)
+    pv = h.dispense()       # pv 2: gated on lv >= 1
+    ran_at = []
+    task = ex.submit(h, "access", pv, lambda: ran_at.append(time.monotonic()))
+    time.sleep(0.05)        # give a buggy impl the chance to run it early
+    assert not ran_at, "task must stay parked until its release"
+    t0 = time.monotonic()
+    h.release_to(1)         # satisfies pv-1 == lv
+    task.join()
+    latency = ran_at[0] - t0
+    # Seed executor's liveness backstop was 50 ms; event wakeup is ~free.
+    assert latency < 0.02, f"wakeup took {latency * 1e3:.1f} ms"
+    ex.shutdown()
+
+
+def test_release_targets_only_this_headers_waiters():
+    ex = Executor(name="t-ex")
+    ha, hb = VersionHeader(), VersionHeader()
+    for h in (ha, hb):
+        h.dispense(); h.dispense()          # pv 2 gated on lv >= 1
+    done = {"a": threading.Event(), "b": threading.Event()}
+    ex.submit(ha, "access", 2, done["a"].set)
+    ex.submit(hb, "access", 2, done["b"].set)
+    evals_b_after_park = hb.cond_evals
+    ha.release_to(1)
+    assert done["a"].wait(2.0)
+    # Releasing A must not have evaluated (nor woken) B's waiter.
+    assert hb.cond_evals == evals_b_after_park
+    assert hb.wakeups == 0
+    assert hb.waiter_counts() == (1, 0)
+    hb.release_to(1)
+    assert done["b"].wait(2.0)
+    ex.shutdown()
+
+
+def test_already_satisfied_condition_runs_immediately():
+    ex = Executor(name="t-ex")
+    h = VersionHeader()
+    pv = h.dispense()                       # pv 1: lv >= 0 already holds
+    task = ex.submit(h, "access", pv, lambda: None)
+    task.join()                             # must not hang (no poke needed)
+    ex.shutdown()
+
+
+def test_woken_task_never_lost_join_terminates():
+    """Seed hazard: a ready task re-checked outside the lock could be
+    dropped silently, hanging join() forever. Now a woken task runs
+    unconditionally; hammer the race window."""
+    ex = Executor(name="t-ex")
+    tasks = []
+    for _ in range(50):
+        h = VersionHeader()
+        h.dispense(); pv = h.dispense()
+        t = ex.submit(h, "access", pv, lambda: None)
+        # Release from another thread to race the executor's dequeue.
+        threading.Thread(target=h.release_to, args=(1,)).start()
+        tasks.append(t)
+    deadline = time.monotonic() + 10.0
+    for t in tasks:
+        assert t.done.wait(max(0.0, deadline - time.monotonic())), \
+            "gated task was lost"
+    ex.shutdown()
+
+
+def test_termination_gate_and_counters():
+    ex = Executor(name="t-ex")
+    h = VersionHeader()
+    h.dispense(); pv = h.dispense()
+    fired = threading.Event()
+    ex.submit(h, "termination", pv, fired.set)
+    h.release_to(1)                         # lv only: termination not met
+    assert not fired.wait(0.05)
+    h.terminate_to(1)
+    assert fired.wait(2.0)
+    ex.shutdown()
+
+
+def test_blocking_wait_timeout_still_raises():
+    h = VersionHeader()
+    h.dispense(); pv = h.dispense()
+    with pytest.raises(TimeoutError):
+        h.wait_access(pv, timeout=0.05)
+    # the timed-out waiter must have been cancelled, not leaked
+    assert h.waiter_counts() == (0, 0)
+    # and a later release must not crash on the cancelled entry
+    h.release_to(1)
+
+
+def test_blocking_wait_reports_whether_it_blocked():
+    h = VersionHeader()
+    pv1 = h.dispense()
+    assert h.wait_access(pv1) is False      # lv >= 0 already
+    pv2 = h.dispense()
+    releaser = threading.Timer(0.02, h.release_to, args=(pv1,))
+    releaser.start()
+    assert h.wait_access(pv2, timeout=2.0) is True
+    releaser.join()
+
+
+# --------------------------------------------------------------------------- #
+# Full-transaction level                                                       #
+# --------------------------------------------------------------------------- #
+class Cell:
+    def __init__(self, v=0):
+        self.v = v
+
+    @access(Mode.READ)
+    def get(self):
+        return self.v
+
+    @access(Mode.WRITE)
+    def put(self, v):
+        self.v = v
+
+
+def test_transaction_wakeup_latency_under_old_backstop():
+    """A successor's gated last-write apply must fire promptly on release,
+    not after the seed's 50 ms poll tick."""
+    reg = Registry()
+    node = reg.add_node("n")
+    c = reg.bind("c", Cell(0), node)
+    holder_in = threading.Event()
+    release_holder = threading.Event()
+
+    def holder():
+        t = Transaction(reg)
+        p = t.writes(c, 1)
+
+        def body(t):
+            holder_in.set()
+            release_holder.wait(5)
+            p.put(1)            # last write: early release fires here
+
+        t.start(body)
+
+    th = threading.Thread(target=holder)
+    th.start()
+    assert holder_in.wait(5)
+
+    t2 = Transaction(reg)
+    p2 = t2.writes(c, 1)
+    t2.begin()
+    p2.put(42)                  # log-buffered; spawns gated apply task
+    t0 = time.monotonic()
+    release_holder.set()        # holder's last op triggers early release
+    t2.commit()                 # joins the apply task, waits termination
+    elapsed = time.monotonic() - t0
+    th.join()
+    assert c.holder.obj.v == 42
+    assert elapsed < 0.045, f"commit after release took {elapsed * 1e3:.1f} ms"
+    reg.shutdown()

@@ -1,0 +1,118 @@
+"""Snapshot-protocol tests (DESIGN.md §1.4): __tx_snapshot__/__tx_restore__
+with deepcopy fallback, and the invalid-instance swap semantics on restore.
+"""
+import pytest
+
+from repro.core import AbortError, Mode, Registry, Transaction, access
+from repro.core.buffers import (CopyBuffer, StateHolder, restore_state,
+                                snapshot_state)
+
+
+class PlainCell:
+    """No protocol: exercises the deepcopy fallback."""
+
+    def __init__(self, v):
+        self.v = v
+
+    @access(Mode.READ)
+    def get(self):
+        return self.v
+
+    @access(Mode.UPDATE)
+    def add(self, d):
+        self.v += d
+
+
+class ProtoCell(PlainCell):
+    """Protocol snapshots, with counters proving the protocol is used."""
+
+    snapshots = 0
+    restores = 0
+
+    def __tx_snapshot__(self):
+        ProtoCell.snapshots += 1
+        return ProtoCell(self.v)
+
+    def __tx_restore__(self):
+        ProtoCell.restores += 1
+        return ProtoCell(self.v)
+
+
+@pytest.fixture(autouse=True)
+def _reset_counters():
+    ProtoCell.snapshots = ProtoCell.restores = 0
+
+
+def test_snapshot_state_prefers_protocol():
+    c = ProtoCell(3)
+    s = snapshot_state(c)
+    assert ProtoCell.snapshots == 1
+    assert s.v == 3 and s is not c
+    c.v = 9
+    assert s.v == 3                       # independent
+
+
+def test_snapshot_state_fallback_deepcopy():
+    c = PlainCell([1, 2])
+    s = snapshot_state(c)
+    assert s.v == [1, 2] and s.v is not c.v
+
+
+def test_restore_swaps_fresh_object_into_holder():
+    holder = StateHolder(ProtoCell(5))
+    stale = holder.obj
+    buf = CopyBuffer(holder.obj, instance=0)
+    holder.obj.v = 77                     # "transaction" mutates live state
+    buf.restore_into(holder)
+    assert holder.obj.v == 5
+    # invalid-instance semantics: the stale reference keeps its state and
+    # is NOT the restored object
+    assert stale is not holder.obj and stale.v == 77
+    # the buffer stays independent of the restored live object
+    holder.obj.v = 123
+    assert buf.state.v == 5
+    assert ProtoCell.restores >= 1
+
+
+def test_restore_state_defaults_to_snapshot_protocol():
+    class SnapOnly:
+        def __init__(self, v):
+            self.v = v
+
+        def __tx_snapshot__(self):
+            return SnapOnly(self.v)
+
+    s = SnapOnly(4)
+    r = restore_state(s)
+    assert r.v == 4 and r is not s
+
+
+def test_abort_restores_protocol_object_end_to_end():
+    reg = Registry()
+    node = reg.add_node("n")
+    shared = reg.bind("c", ProtoCell(10), node)
+    t = Transaction(reg)
+    p = t.updates(shared, 2)
+
+    def body(t):
+        p.add(5)
+        t.abort()
+
+    with pytest.raises(AbortError):
+        t.start(body)
+    assert shared.holder.obj.v == 10
+    assert ProtoCell.snapshots >= 1       # checkpoint used the protocol
+    reg.shutdown()
+
+
+def test_refcell_and_statecell_implement_protocol():
+    from benchmarks.eigenbench import RefCell
+    from repro.txstore.store import StateCell
+
+    r = RefCell(7)
+    rs = r.__tx_snapshot__()
+    assert rs.value == 7 and rs is not r
+
+    c = StateCell({"k": 1}, version=3)
+    cs = c.__tx_snapshot__()
+    assert cs.version == 3 and cs.value is c.value  # reference copy (immutables)
