@@ -15,8 +15,13 @@ the reproduction validates).
 
 Frameworks under test (paper §4.1): Atomic RMI 2 (OptSVA-CF), Atomic RMI
 (SVA), Mutex/R-W locks × S2PL/2PL, GLock, and a TFA-style optimistic
-baseline standing in for HyFlow2. Threads stand in for client nodes;
-Registry nodes with configurable network delay stand in for hosts.
+baseline standing in for HyFlow2. Threads stand in for client nodes.
+
+Two transports (``--transport``): ``inproc`` — Registry nodes with
+*simulated* network delay stand in for hosts; ``tcp`` — each node is a real
+server subprocess (``repro.net``, DESIGN.md §3.1) and every operation is an
+honest RPC to its home node (``network_delay_ms`` is ignored: latency is
+real). Only ``optsva-cf`` runs over TCP.
 """
 from __future__ import annotations
 
@@ -32,29 +37,36 @@ from repro.core import (AbortError, LockTransaction, Mode, Registry,
 
 
 class RefCell:
-    """A reference cell whose operations cost ``op_time`` (CF-model work)."""
+    """A reference cell whose operations cost ``op_time`` (CF-model work).
 
-    op_time: float = 0.0  # class-level; set by the harness
+    ``op_time`` is carried per instance (with the class attribute as the
+    in-process default) so that cells shipped to a TCP node server burn
+    their service time *on the home node* — the CF model's point.
+    """
 
-    def __init__(self, value: int = 0):
+    op_time: float = 0.0  # class-level default; set by the in-proc harness
+
+    def __init__(self, value: int = 0, op_time: Optional[float] = None):
         self.value = value
+        if op_time is not None:
+            self.op_time = op_time
 
     @access(Mode.READ)
     def read(self) -> int:
-        if RefCell.op_time:
-            time.sleep(RefCell.op_time)
+        if self.op_time:
+            time.sleep(self.op_time)
         return self.value
 
     @access(Mode.WRITE)
     def write(self, v: int) -> None:
-        if RefCell.op_time:
-            time.sleep(RefCell.op_time)
+        if self.op_time:
+            time.sleep(self.op_time)
         self.value = v
 
     def __tx_snapshot__(self) -> "RefCell":
         # O(1) snapshot protocol: the state is one immutable int, so a
         # shallow clone replaces the deepcopy on every checkpoint/buffer.
-        return RefCell(self.value)
+        return RefCell(self.value, self.op_time or None)
 
 
 @dataclass
@@ -223,14 +235,21 @@ FRAMEWORKS: Dict[str, Callable] = {
 # --------------------------------------------------------------------------- #
 # Harness                                                                      #
 # --------------------------------------------------------------------------- #
-def run_benchmark(framework: str, cfg: EigenConfig) -> Result:
+#: frameworks whose concurrency control runs over the TCP transport —
+#: OptSVA-CF is the paper's system; the baselines poke at in-process state
+#: (``holder.obj``) and stay in-proc.
+TCP_FRAMEWORKS = ("optsva-cf",)
+
+
+def _build_inproc(cfg: EigenConfig):
+    """In-process topology: Registry nodes with simulated network delay."""
     RefCell.op_time = cfg.op_time_ms / 1e3
     reg = Registry()
     nodes = [reg.add_node(f"n{i}", network_delay=cfg.network_delay_ms / 1e3)
              for i in range(cfg.nodes)]
+    n_clients = cfg.nodes * cfg.clients_per_node
     hot: List = []
     mild_by_client: Dict[int, List] = {}
-    n_clients = cfg.nodes * cfg.clients_per_node
     for ni, node in enumerate(nodes):
         for i in range(cfg.arrays_per_node):
             hot.append(reg.bind(f"hot-{ni}-{i}", RefCell(), node))
@@ -239,6 +258,63 @@ def run_benchmark(framework: str, cfg: EigenConfig) -> Result:
         mild_by_client[ci] = [
             reg.bind(f"mild-{ci}-{i}", RefCell(), node)
             for i in range(cfg.arrays_per_node)]
+    return reg, hot, mild_by_client, lambda: reg.shutdown()
+
+
+def _build_tcp(cfg: EigenConfig):
+    """Real-wire topology: one server subprocess per node, honest latency.
+
+    Cells are shipped once at bind time and live on their home node; the
+    per-operation service time burns *there* (CF delegation), and
+    ``network_delay_ms`` is ignored — the wire is real.
+    """
+    import sys
+    from pathlib import Path
+
+    from repro.net.spawn import spawn_cluster
+
+    repo_root = str(Path(__file__).resolve().parents[1])
+    # Use the canonical module's RefCell: when this file runs as __main__
+    # (python benchmarks/eigenbench.py or python -m benchmarks.eigenbench),
+    # the locally defined class would pickle as __main__.RefCell, which the
+    # server process cannot import. Direct script invocation also lacks the
+    # repo root on sys.path — add it so the package import resolves.
+    if repo_root not in sys.path:
+        sys.path.insert(0, repo_root)
+    from benchmarks.eigenbench import RefCell as Cell
+    handles = spawn_cluster(cfg.nodes, extra_paths=[repo_root])
+    reg = Registry()
+    remote_nodes = [reg.connect(h.address) for h in handles]
+    op_time = cfg.op_time_ms / 1e3
+    n_clients = cfg.nodes * cfg.clients_per_node
+    hot: List = []
+    mild_by_client: Dict[int, List] = {}
+    for ni, rn in enumerate(remote_nodes):
+        for i in range(cfg.arrays_per_node):
+            hot.append(rn.bind(f"hot-{ni}-{i}", Cell(0, op_time or None)))
+    for ci in range(n_clients):
+        rn = remote_nodes[ci % cfg.nodes]
+        mild_by_client[ci] = [
+            rn.bind(f"mild-{ci}-{i}", Cell(0, op_time or None))
+            for i in range(cfg.arrays_per_node)]
+
+    def teardown() -> None:
+        reg.shutdown()
+        for h in handles:
+            h.stop()
+
+    return reg, hot, mild_by_client, teardown
+
+
+def run_benchmark(framework: str, cfg: EigenConfig,
+                  transport: str = "inproc") -> Result:
+    if transport == "tcp" and framework not in TCP_FRAMEWORKS:
+        raise ValueError(
+            f"framework {framework!r} does not run over TCP "
+            f"(supported: {', '.join(TCP_FRAMEWORKS)})")
+    build = _build_tcp if transport == "tcp" else _build_inproc
+    reg, hot, mild_by_client, teardown = build(cfg)
+    n_clients = cfg.nodes * cfg.clients_per_node
 
     runner = FRAMEWORKS[framework]
     stats_per_client = [dict(commits=0, aborts=0, retries=0, ops=0, waits=0)
@@ -268,7 +344,7 @@ def run_benchmark(framework: str, cfg: EigenConfig) -> Result:
     for th in threads:
         th.join()
     wall = time.monotonic() - t0
-    reg.shutdown()
+    teardown()
 
     commits = sum(s["commits"] for s in stats_per_client)
     aborts = sum(s["aborts"] for s in stats_per_client)
@@ -284,12 +360,12 @@ def run_benchmark(framework: str, cfg: EigenConfig) -> Result:
 
 
 def sweep(frameworks: Sequence[str], cfg: EigenConfig, vary: str,
-          values: Sequence[Any]) -> List[Result]:
+          values: Sequence[Any], transport: str = "inproc") -> List[Result]:
     out = []
     for v in values:
         c = EigenConfig(**{**cfg.__dict__, vary: v})
         for fw in frameworks:
-            r = run_benchmark(fw, c)
+            r = run_benchmark(fw, c, transport=transport)
             out.append((v, r))
     return out
 
@@ -299,6 +375,10 @@ def main() -> None:
     ap.add_argument("--frameworks", default="all")
     ap.add_argument("--scenario", default="9:1",
                     help="read:write ratio, e.g. 9:1, 5:5, 1:9")
+    ap.add_argument("--transport", default="inproc",
+                    choices=["inproc", "tcp"],
+                    help="inproc: simulated nodes in one process; tcp: one "
+                         "real server subprocess per node, honest wire")
     ap.add_argument("--sweep", default="none",
                     choices=["none", "clients", "nodes", "nodes-mild"])
     ap.add_argument("--clients-per-node", type=int, default=4)
@@ -311,8 +391,10 @@ def main() -> None:
 
     r, w = (int(x) for x in args.scenario.split(":"))
     read_pct = r / (r + w)
-    fws = list(FRAMEWORKS) if args.frameworks == "all" \
-        else args.frameworks.split(",")
+    if args.frameworks == "all":
+        fws = list(TCP_FRAMEWORKS if args.transport == "tcp" else FRAMEWORKS)
+    else:
+        fws = args.frameworks.split(",")
     cfg = EigenConfig(nodes=args.nodes,
                       clients_per_node=args.clients_per_node,
                       txns_per_client=args.txns,
@@ -326,17 +408,20 @@ def main() -> None:
           "retries,waits")
     if args.sweep == "none":
         for fw in fws:
-            res = run_benchmark(fw, cfg)
+            res = run_benchmark(fw, cfg, transport=args.transport)
             print(f"{fw},-,{res.throughput_ops:.1f},{res.abort_rate_pct:.1f},"
                   f"{res.commits},{res.aborts},{res.retries},{res.waits}")
     else:
         if args.sweep == "clients":
-            pairs = sweep(fws, cfg, "clients_per_node", [2, 4, 8, 16])
+            pairs = sweep(fws, cfg, "clients_per_node", [2, 4, 8, 16],
+                          transport=args.transport)
         elif args.sweep == "nodes":
-            pairs = sweep(fws, cfg, "nodes", [2, 4, 8])
+            pairs = sweep(fws, cfg, "nodes", [2, 4, 8],
+                          transport=args.transport)
         else:
             cfg = EigenConfig(**{**cfg.__dict__, "mild_ops": cfg.hot_ops})
-            pairs = sweep(fws, cfg, "nodes", [2, 4, 8])
+            pairs = sweep(fws, cfg, "nodes", [2, 4, 8],
+                          transport=args.transport)
         for v, res in pairs:
             print(f"{res.framework},{v},{res.throughput_ops:.1f},"
                   f"{res.abort_rate_pct:.1f},{res.commits},{res.aborts},"

@@ -167,6 +167,71 @@ def bench_scheduler_overhead(full: bool = False,
 
 
 # --------------------------------------------------------------------------- #
+# Transport-overhead bench (PR2): in-proc vs real TCP wire                     #
+# --------------------------------------------------------------------------- #
+def bench_transport_overhead(full: bool = False,
+                             out: str = "BENCH_PR2.json") -> None:
+    """Per-transaction cost of the real wire (``repro.net``), honestly.
+
+    The same Eigenbench schedule (read-dominated 9:1 — the paper's
+    headline scenario — plus a 5:5 mixed one) runs twice: ``inproc``
+    (simulated nodes, zero-latency calls) and ``tcp`` (one real server
+    subprocess per node, every operation an RPC to its home node). The
+    delta is the wire: framing + syscalls + delegation round-trips.
+    Results land in ``BENCH_PR2.json`` as this PR's trajectory point.
+    """
+    import benchmarks.eigenbench as eb
+    from benchmarks.report import write_bench_json
+
+    txns = 6 if full else 4
+    repeats = 5 if full else 3
+    configs = {
+        "9:1": eb.EigenConfig(
+            nodes=2, clients_per_node=4, arrays_per_node=4,
+            txns_per_client=txns, hot_ops=10, read_pct=0.9,
+            op_time_ms=0.0),
+        "5:5": eb.EigenConfig(
+            nodes=2, clients_per_node=4, arrays_per_node=4,
+            txns_per_client=txns, hot_ops=10, read_pct=0.5,
+            op_time_ms=0.0),
+    }
+
+    def median_us(cfg, transport):
+        runs = [eb.run_benchmark("optsva-cf", cfg, transport=transport)
+                for _ in range(repeats)]
+        runs.sort(key=lambda r: r.wall_s / max(r.commits, 1))
+        r = runs[len(runs) // 2]
+        return 1e6 * r.wall_s / max(r.commits, 1), r
+
+    json_rows = []
+    for cname, cfg in configs.items():
+        inproc_us, r_in = median_us(cfg, "inproc")
+        tcp_us, r_tcp = median_us(cfg, "tcp")
+        overhead = tcp_us - inproc_us
+        factor = tcp_us / inproc_us if inproc_us else 0.0
+        for transport, us, r in (("inproc", inproc_us, r_in),
+                                 ("tcp", tcp_us, r_tcp)):
+            derived = (f"throughput={r.throughput_ops:.0f}ops/s;"
+                       f"aborts={r.aborts};waits={r.waits}")
+            if transport == "tcp":
+                derived += (f";wire_overhead_us={overhead:.1f};"
+                            f"slowdown={factor:.2f}x")
+            emit(f"transport/{cname}/{transport}", us, derived)
+            json_rows.append({
+                "name": f"transport/{cname}/{transport}",
+                "us_per_call": round(us, 1), "derived": derived,
+                "commits": r.commits, "aborts": r.aborts, "waits": r.waits})
+        json_rows[-1].update(wire_overhead_us=round(overhead, 1),
+                             slowdown=round(factor, 2))
+    write_bench_json(out, json_rows, meta={
+        "bench": "transport_overhead", "pr": 2, "op_time_ms": 0.0,
+        "txns_per_client": txns,
+        "note": ("tcp = one node-server subprocess per registry node "
+                 "(repro.net), honest wire; inproc = simulated nodes. "
+                 "us_per_call is wall-clock per committed transaction.")})
+
+
+# --------------------------------------------------------------------------- #
 # Roofline tables from the dry-run artifacts (deliverable g)                   #
 # --------------------------------------------------------------------------- #
 def table_roofline() -> None:
@@ -224,16 +289,21 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--tables", default="all",
-                    help="comma list: sched,fig10,fig11,fig12,fig13,"
-                         "roofline,step")
+                    help="comma list: sched,transport,fig10,fig11,fig12,"
+                         "fig13,roofline,step")
     ap.add_argument("--bench-out", default="BENCH_PR1.json",
                     help="JSON trajectory point for the sched table")
+    ap.add_argument("--transport-out", default="BENCH_PR2.json",
+                    help="JSON trajectory point for the transport table")
     args = ap.parse_args()
-    tables = (["sched", "fig10", "fig11", "fig12", "fig13", "roofline", "step"]
+    tables = (["sched", "transport", "fig10", "fig11", "fig12", "fig13",
+               "roofline", "step"]
               if args.tables == "all" else args.tables.split(","))
     print("name,us_per_call,derived")
     if "sched" in tables:
         bench_scheduler_overhead(args.full, out=args.bench_out)
+    if "transport" in tables:
+        bench_transport_overhead(args.full, out=args.transport_out)
     if "fig10" in tables:
         table_fig10_throughput_vs_clients(args.full)
     if "fig11" in tables:

@@ -5,6 +5,11 @@ transfer transaction with a manual-abort guard — then demonstrates the
 paper's headline behaviors: early release parallelism, buffered read-only
 access, and abort-free execution under contention.
 
+Here the "hosts" are in-process accounting entities. For the same example
+run over a *real* wire — node-server subprocesses, TCP RPCs, server-side
+§3.4 crash rollback — see ``examples/distributed_quickstart.py``
+(``repro.net``, DESIGN.md §3.1).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import threading

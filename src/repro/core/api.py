@@ -110,6 +110,17 @@ class RemoteObjectFailure(TransactionError):
     """Crash-stop remote object failure (paper §3.4)."""
 
 
+class InstanceInvalidated(TransactionError):
+    """A home node reports that an observed object instance was invalidated.
+
+    Raised by the network transport when a server-side session operation
+    finds the object's instance epoch has moved past the one the session
+    observed (a cascading abort restored older state, §2.3). The client
+    transaction maps this onto its forced-abort path — the in-process
+    transport discovers the same condition via ``_validity_check`` instead.
+    """
+
+
 class IllegalState(TransactionError):
     """API misuse (e.g. operating on a finished transaction)."""
 

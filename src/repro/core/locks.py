@@ -141,7 +141,7 @@ class LockTransaction:
 
     # -- preamble -------------------------------------------------------------
     def _declare(self, obj: Union[SharedObject, str], will_write: bool) -> _LockProxy:
-        shared = obj if isinstance(obj, SharedObject) else self.registry.locate(obj)
+        shared = self.registry.locate(obj) if isinstance(obj, str) else obj
         self._declared.append((shared, will_write))
         proxy = _LockProxy(self, shared)
         self._proxies[shared] = proxy

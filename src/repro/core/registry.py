@@ -68,12 +68,13 @@ class SharedObject:
         self._contact_lock = threading.Lock()
 
     # -- direct (non-transactional) execution --------------------------------
-    def raw_call(self, method: str, args: tuple, kwargs: dict,
+    def raw_call(self, method: str, args: tuple = (),
+                 kwargs: Optional[dict] = None,
                  from_node: Optional[Node] = None) -> Any:
         """Execute a method on the live state at the home node."""
         self.check_reachable()
         self.node.simulate_network(from_node)
-        return getattr(self.holder.obj, method)(*args, **kwargs)
+        return getattr(self.holder.obj, method)(*args, **(kwargs or {}))
 
     def mode_of(self, method: str) -> Mode:
         return method_mode(self.holder.obj, method)
@@ -101,6 +102,18 @@ class SharedObject:
             if self.holding_txn is txn:
                 self.holding_txn = None
 
+    # -- transport boundary ---------------------------------------------------
+    def make_access(self, txn: object, sup: Any) -> Any:
+        """Build the per-transaction access record for this object.
+
+        The in-process transport returns a plain
+        :class:`~repro.core.transaction.ObjectAccess`; remote proxies
+        (``repro.net.remote.RemoteSharedObject``) override this to return an
+        access record whose state operations are RPCs to the home node.
+        """
+        from .transaction import ObjectAccess
+        return ObjectAccess(txn, self, sup)
+
     def __repr__(self) -> str:  # pragma: no cover
         return f"SharedObject({self.name}@{self.node.name}, {self.header!r})"
 
@@ -110,6 +123,7 @@ class Registry:
 
     def __init__(self):
         self._lock = threading.Lock()
+        self._connect_lock = threading.Lock()   # serializes connect() I/O
         self._objects: Dict[str, SharedObject] = {}
         self._nodes: Dict[str, Node] = {}
 
@@ -122,11 +136,13 @@ class Registry:
             return node
 
     def node(self, name: str) -> Node:
-        return self._nodes[name]
+        with self._lock:
+            return self._nodes[name]
 
     @property
     def nodes(self) -> Iterable[Node]:
-        return list(self._nodes.values())
+        with self._lock:
+            return list(self._nodes.values())
 
     def bind(self, name: str, obj: Any, node: Node) -> SharedObject:
         with self._lock:
@@ -150,6 +166,39 @@ class Registry:
     def all_objects(self) -> Dict[str, SharedObject]:
         with self._lock:
             return dict(self._objects)
+
+    # -- registry federation (DESIGN.md §3.1) ---------------------------------
+    def connect(self, address: str, **client_kw) -> "Node":
+        """Merge a remote node server's bindings into this registry.
+
+        ``address`` is ``"host:port"``. Creates (or reuses) a
+        ``repro.net.remote.RemoteNode`` for the server and a
+        ``RemoteSharedObject`` proxy for every binding the server reports;
+        ``locate`` then hands out remote proxies exactly like local shared
+        objects, so transactions span transports transparently. Returns the
+        remote node. Re-connecting the same address refreshes the binding
+        set (new remote bindings since the last call are merged in).
+        """
+        from repro.net.remote import RemoteNode  # lazy: net imports core
+        # Network I/O happens outside the registry lock (a hung server must
+        # not stall bind/locate); concurrent connects serialize on their own.
+        with self._connect_lock:
+            with self._lock:
+                node = self._nodes.get(address)
+            if node is None:
+                node = RemoteNode(address, **client_kw)
+            bindings = node.fetch_bindings()
+            with self._lock:
+                self._nodes.setdefault(address, node)
+                for shared in bindings:
+                    self._objects.setdefault(shared.name, shared)
+            node.registry = self   # future node.bind()s register here too
+            return node
+
+    def register_remote(self, shared: SharedObject) -> None:
+        """Merge one remote binding (used by ``RemoteNode.bind``)."""
+        with self._lock:
+            self._objects.setdefault(shared.name, shared)
 
     def shutdown(self) -> None:
         for node in self.nodes:

@@ -79,7 +79,7 @@ class SvaTransaction:
                  *_ignored: float) -> _SvaProxy:
         if self._started:
             raise IllegalState("access set must be declared before start()")
-        shared = obj if isinstance(obj, SharedObject) else self.registry.locate(obj)
+        shared = self.registry.locate(obj) if isinstance(obj, str) else obj
         if shared in self._accesses:
             raise IllegalState(f"object {shared.name!r} already declared")
         acc = _SvaAccess(shared, ub)

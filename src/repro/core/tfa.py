@@ -109,7 +109,7 @@ class TfaTransaction:
 
     # -- preamble (declarations are advisory for optimistic execution) --------
     def _declare(self, obj: Union[SharedObject, str]) -> _TfaProxy:
-        shared = obj if isinstance(obj, SharedObject) else self.registry.locate(obj)
+        shared = self.registry.locate(obj) if isinstance(obj, str) else obj
         self._declared.append(shared)
         return _TfaProxy(self, shared)
 

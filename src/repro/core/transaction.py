@@ -28,6 +28,17 @@ Implementation notes vs. the paper text (also see DESIGN.md):
   next validity check. Restores (and epoch bumps) only happen for objects
   the aborting transaction actually modified — restoring an unmodified
   object would spuriously doom successors.
+
+Transport boundary (DESIGN.md §3.1): every operation that touches object
+*state* — waiting a gate and checkpointing, snapshotting a buffer, applying
+a log, reading through a buffer, restoring on abort — is a method of
+:class:`ObjectAccess`, executed where the object lives. This in-process
+implementation runs them directly against ``shared.holder``; the TCP
+transport (``repro.net``) subclasses :class:`ObjectAccess` so the same
+operations become single RPCs executed *on the home node* and only control
+information (versions, instance epochs, return values) crosses the wire —
+the CF model's delegation of computation to data. :class:`Transaction`
+itself is transport-agnostic protocol sequencing.
 """
 from __future__ import annotations
 
@@ -36,26 +47,41 @@ import threading
 from typing import Any, Callable, Dict, List, Optional, Union
 
 from .api import (
-    INF, AbortError, IllegalState, Mode, OpStats, RetrySignal, Suprema,
-    SupremumViolation, TransactionError,
+    INF, AbortError, IllegalState, InstanceInvalidated, Mode, OpStats,
+    RetrySignal, Suprema, SupremumViolation, TransactionError,
 )
 from .buffers import CopyBuffer, LogBuffer
 from .executor import Task
 from .registry import Node, Registry, SharedObject
+from .versioning import skip_version
 
 _txn_ids = itertools.count(1)
 
 
 class ObjectAccess:
-    """Transaction-local bookkeeping for one shared object."""
+    """Transaction-local bookkeeping for one shared object, plus the
+    home-node state operations of §2.7-§2.8 (the transport boundary).
+
+    The base class is the in-process transport: state operations execute
+    directly against ``shared.holder`` / ``shared.header``. Remote
+    transports override the *delegation boundary* methods below so the same
+    operations run on the object's home node.
+    """
 
     __slots__ = (
-        "shared", "sup", "pv", "rc", "wc", "uc", "st", "buf", "log",
+        "txn", "shared", "sup", "pv", "rc", "wc", "uc", "st", "buf", "log",
         "seen_instance", "holds_access", "released", "release_task",
-        "modified", "lock",
+        "modified", "terminated", "lock",
     )
 
-    def __init__(self, shared: SharedObject, sup: Suprema):
+    #: version-lock domain for start-time dispensing (§2.10.2): ``None``
+    #: means the in-process domain (per-header locks in uid order); remote
+    #: accesses return a sortable per-node key so every client acquires
+    #: node-level locks in the same global order.
+    dispense_domain: Optional[tuple] = None
+
+    def __init__(self, txn: "Transaction", shared: SharedObject, sup: Suprema):
+        self.txn = txn
         self.shared = shared
         self.sup = sup
         self.pv: int = 0
@@ -68,6 +94,7 @@ class ObjectAccess:
         self.released = False                     # lv handed over (or task will)
         self.release_task: Optional[Task] = None  # async buffer/apply task
         self.modified = False                     # we touched live state
+        self.terminated = False                   # ltv advanced past us
         self.lock = threading.Lock()              # task <-> main thread
 
     @property
@@ -87,6 +114,230 @@ class ObjectAccess:
 
     def writes_updates_done(self) -> bool:
         return self.wc == self.sup.writes and self.uc == self.sup.updates
+
+    # ------------------------------------------------------------------ #
+    # Delegation boundary: state operations, executed at the home node.  #
+    # ------------------------------------------------------------------ #
+    def spawn_ro_buffer(self, kind: str) -> None:
+        """§2.7: asynchronously snapshot-and-release a read-only object."""
+        shared = self.shared
+
+        def code() -> None:
+            with shared.header.lock:
+                inst = shared.header.instance
+            with self.lock:
+                self.seen_instance = inst
+                self.buf = CopyBuffer(shared.holder.obj, inst,
+                                      home_node=shared.node)
+            # Snapshot taken: the object is immediately released (§2.7).
+            shared.header.release_to(self.pv)
+            with self.lock:
+                self.released = True
+
+        self.release_task = shared.node.executor.submit(
+            shared.header, kind, self.pv, code,
+            name=f"ro-buffer:{shared.name}:T{self.txn.id}")
+
+    def spawn_lastwrite_apply(self, kind: str) -> None:
+        """§2.8.4: asynchronously checkpoint, apply the write log, release."""
+        shared = self.shared
+
+        def code() -> None:
+            with shared.header.lock:
+                inst = shared.header.instance
+            st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+            self.log.apply_to(shared.holder.obj)
+            buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+            with self.lock:
+                self.seen_instance = inst
+                self.st = st
+                self.buf = buf
+                self.modified = True
+                self.holds_access = True
+            shared.header.release_to(self.pv)
+            with self.lock:
+                self.released = True
+
+        self.release_task = shared.node.executor.submit(
+            shared.header, kind, self.pv, code,
+            name=f"lw-apply:{shared.name}:T{self.txn.id}")
+
+    def join_release_task(self) -> None:
+        """Wait for the outstanding asynchronous buffer/apply task."""
+        if self.release_task is not None:
+            self.release_task.join()
+
+    def open_access(self, kind: str, timeout: Optional[float]) -> bool:
+        """Wait the access (or termination) gate, then checkpoint (§2.8.2).
+
+        Returns True iff the caller actually blocked."""
+        shared = self.shared
+        h = shared.header
+        if kind == "termination":
+            blocked = h.wait_termination(self.pv, timeout=timeout)
+        else:
+            blocked = h.wait_access(self.pv, timeout=timeout)
+        shared.check_reachable()
+        with h.lock:
+            inst = h.instance
+        self.seen_instance = inst
+        self.st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+        self.holds_access = True
+        shared.touch(self.txn)
+        return blocked
+
+    def raw_call(self, method: str, args: tuple, kwargs: dict, *,
+                 modifies: bool) -> Any:
+        """Execute a method against the live state at the home node."""
+        v = self.shared.raw_call(method, args, kwargs,
+                                 from_node=self.txn.client_node)
+        if modifies:
+            self.modified = True
+        return v
+
+    def buf_call(self, method: str, args: tuple, kwargs: dict) -> Any:
+        """Execute a read against the post-release copy buffer (§2.7)."""
+        return self.buf.call(method, args, kwargs)
+
+    def record_write(self, method: str, args: tuple, kwargs: dict) -> None:
+        """§2.8.4: log a pure write with no synchronization."""
+        self.log.record(method, args, kwargs)
+
+    def apply_log(self) -> None:
+        """Replay the pending write log against the live state."""
+        if len(self.log):
+            self.log.apply_to(self.shared.holder.obj)
+            self.modified = True
+
+    def snapshot_buf(self) -> None:
+        """Clone live state to ``buf`` for trailing local reads (§2.8.3-4)."""
+        shared = self.shared
+        with shared.header.lock:
+            inst = shared.header.instance
+        self.buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+
+    def ensure_checkpoint(self) -> None:
+        """Commit step 3: checkpoint an object never accessed directly."""
+        if self.seen_instance is None:
+            h = self.shared.header
+            with h.lock:
+                self.seen_instance = h.instance
+            self.st = CopyBuffer(self.shared.holder.obj, self.seen_instance,
+                                 home_node=self.shared.node)
+
+    def release(self) -> None:
+        if not self.released:
+            self.shared.header.release_to(self.pv)
+            self.released = True
+
+    def wait_termination(self, timeout: Optional[float]) -> bool:
+        """Wait the commit condition (§2.8.5). True iff actually blocked."""
+        return self.shared.header.wait_termination(self.pv, timeout=timeout)
+
+    def valid(self) -> bool:
+        """False iff the observed instance was invalidated (§2.3)."""
+        with self.lock:
+            seen = self.seen_instance
+        return seen is None or self.shared.header.instance == seen
+
+    def valid_commit(self) -> bool:
+        """Commit-time validation (step 4 of §2.8.5). In-process this is
+        the same check as :meth:`valid`; remote transports override it with
+        an authoritative home-node query (per-op checks there are enforced
+        server-side instead of client-side)."""
+        return self.valid()
+
+    def rollback(self) -> None:
+        """Abort step 3: restore from the checkpoint, oldest-restore-wins."""
+        h = self.shared.header
+        with self.lock:
+            seen, st, modified = self.seen_instance, self.st, self.modified
+        if st is not None and modified:
+            with h.lock:
+                if h.instance == seen:
+                    # Not already restored to an older version: restore + invalidate.
+                    st.restore_into(self.shared.holder)
+                    h.instance += 1
+
+    def terminate(self) -> None:
+        """Advance ltv past us and drop the failure-detector hold (§2.8.5-6)."""
+        self.shared.header.terminate_to(self.pv)
+        self.shared.clear_holder(self.txn)
+        self.terminated = True
+
+    def prepare_start(self) -> None:
+        """Transport hook, called before any version lock is acquired
+        (remote transports register liveness here)."""
+
+    def abandon(self) -> None:
+        """Failed-start cleanup: skip this access's dispensed version *in
+        chain order* (never bypassing a live predecessor's unreleased
+        state) without touching object state — nothing was accessed yet."""
+        skip_version(self.shared.header, self.pv)
+
+    def valid_commit_batch(self, accs: List["ObjectAccess"]) -> bool:
+        """Commit-time validation for all accesses of one dispense domain
+        in one step (remote transports batch this into a single RPC)."""
+        return all(a.valid_commit() for a in accs)
+
+    def note_contact(self) -> None:
+        """§3.4 heartbeat: an actual holder refreshes the failure detector."""
+        if self.holds_access and not self.released:
+            self.shared.touch(self.txn)
+        elif self.released:
+            self.shared.clear_holder(self.txn)
+
+    def check_reachable(self) -> None:
+        self.shared.check_reachable()
+
+    def finish_session(self) -> None:
+        """Transport hook: the transaction terminated on every object."""
+
+
+def dispense_for(order: List[ObjectAccess]) -> None:
+    """Atomically dispense private versions for a (possibly multi-transport)
+    access set (paper §2.10.2).
+
+    Version-lock *domains* are acquired in a globally consistent order: the
+    in-process domain first (per-header locks in ``uid`` order), then each
+    remote node in ``dispense_domain`` sort order, one batched
+    lock-and-dispense RPC per node. All locks are held until every domain
+    has dispensed — 2PL on version locks — which keeps private-version
+    orders consistent across objects (no circular waits later), then
+    released. Cost over the wire: one round-trip per *node* plus one
+    release round-trip, not one per object.
+    """
+    local = [a for a in order if a.dispense_domain is None]
+    remote: Dict[tuple, List[ObjectAccess]] = {}
+    for a in order:
+        if a.dispense_domain is not None:
+            remote.setdefault(a.dispense_domain, []).append(a)
+
+    # Liveness registration first, before any version lock is held —
+    # presence setup may block in a TCP connect.
+    for accs in remote.values():
+        accs[0].prepare_start()
+
+    locked_local = sorted({a.shared.header for a in local},
+                          key=lambda h: h.uid)
+    for h in locked_local:
+        h.lock.acquire()
+    dispensed_domains: List[List[ObjectAccess]] = []
+    try:
+        for domain in sorted(remote):
+            accs = remote[domain]
+            accs[0].dispense_batch(accs)   # locks + dispenses, holds locks
+            dispensed_domains.append(accs)
+        for a in local:
+            a.pv = a.shared.header.dispense()
+    finally:
+        for h in reversed(locked_local):
+            h.lock.release()
+        for accs in dispensed_domains:
+            try:
+                accs[0].release_version_locks()
+            except TransactionError:
+                pass   # that node died; its session reaper frees the gates
 
 
 class TxProxy:
@@ -147,14 +398,14 @@ class Transaction:
         sup.validate()
         if shared in self._accesses:
             raise IllegalState(f"object {shared.name!r} already declared")
-        acc = ObjectAccess(shared, sup)
+        acc = shared.make_access(self, sup)
         self._accesses[shared] = acc
         self._order.append(acc)
         return TxProxy(self, shared)
 
     def _resolve(self, obj: Union[SharedObject, str]) -> SharedObject:
-        if isinstance(obj, SharedObject):
-            return obj
+        if not isinstance(obj, str):
+            return obj   # any shared-object duck type (in-proc or remote)
         if self.registry is None:
             raise IllegalState("string lookup requires a registry")
         return self.registry.locate(obj)
@@ -181,38 +432,32 @@ class Transaction:
             raise IllegalState("transaction already started")
         self._started = True
         self._terminated = False
-        from .versioning import dispense_versions
-        headers = [a.shared.header for a in self._order]
-        pvs = dispense_versions(headers)
-        for a, pv in zip(self._order, pvs):
-            a.pv = pv
+        try:
+            dispense_for(self._order)
+        except BaseException:
+            # Partial start (a remote node died mid-dispense): abandon the
+            # versions that were dispensed — skipped in chain order so
+            # successors on the surviving nodes unwedge without bypassing
+            # live predecessors — and close the transaction.
+            for a in self._order:
+                if a.pv:
+                    try:
+                        a.abandon()
+                    except TransactionError:
+                        pass   # that node is gone; §3.4 cleans up there
+            for a in self._order:
+                a.finish_session()
+            self._terminated = True
+            raise
         # §2.7/§2.8.1: asynchronously snapshot-and-release read-only objects.
         for a in self._order:
             if a.sup.read_only and a.sup.reads > 0:
-                self._spawn_readonly_buffering(a)
+                a.spawn_ro_buffer(self._gate_kind)
 
     @property
     def _gate_kind(self) -> str:
         """Access gate — or termination gate for irrevocable txns (§2.4)."""
         return "termination" if self.irrevocable else "access"
-
-    def _spawn_readonly_buffering(self, a: ObjectAccess) -> None:
-        shared = a.shared
-
-        def code() -> None:
-            with shared.header.lock:
-                inst = shared.header.instance
-            with a.lock:
-                a.seen_instance = inst
-                a.buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
-            # Snapshot taken: the object is immediately released (§2.7).
-            shared.header.release_to(a.pv)
-            with a.lock:
-                a.released = True
-
-        a.release_task = shared.node.executor.submit(
-            shared.header, self._gate_kind, a.pv, code,
-            name=f"ro-buffer:{shared.name}:T{self.id}")
 
     # ------------------------------------------------------------------ #
     # Operation dispatch                                                  #
@@ -227,21 +472,23 @@ class Transaction:
         a = self._accesses[shared]
         mode = shared.mode_of(method)
         self._check_supremum(a, mode)
-        if mode is Mode.READ:
-            v = self._read(a, method, args, kwargs)
-            self.stats.reads += 1
-        elif mode is Mode.WRITE:
-            v = self._write(a, method, args, kwargs)
-            self.stats.writes += 1
-        else:
-            v = self._update(a, method, args, kwargs)
-            self.stats.updates += 1
+        try:
+            if mode is Mode.READ:
+                v = self._read(a, method, args, kwargs)
+                self.stats.reads += 1
+            elif mode is Mode.WRITE:
+                v = self._write(a, method, args, kwargs)
+                self.stats.writes += 1
+            else:
+                v = self._update(a, method, args, kwargs)
+                self.stats.updates += 1
+        except InstanceInvalidated as e:
+            # Remote transport: the home node detected the invalidation
+            # (in-process, _validity_check raises before the operation).
+            self._force_abort(str(e))
         # heartbeat: only an actual holder (past the access condition and
         # not yet released) counts for the §3.4 failure detector
-        if a.holds_access and not a.released:
-            shared.touch(self)
-        elif a.released:
-            shared.clear_holder(self)
+        a.note_contact()
         return v
 
     def _check_supremum(self, a: ObjectAccess, mode: Mode) -> None:
@@ -253,134 +500,71 @@ class Transaction:
 
     # -- read (§2.8.2) -------------------------------------------------------
     def _read(self, a: ObjectAccess, method: str, args: tuple, kwargs: dict) -> Any:
-        shared = a.shared
-        if a.sup.read_only:
-            # Wait for the asynchronous buffering task, read from the buffer.
-            assert a.release_task is not None
-            a.release_task.join()
+        if a.sup.read_only or a.release_task is not None:
+            # Read-only buffering, or released asynchronously after last
+            # write: wait the task, read from the home-node buffer.
+            a.join_release_task()
             self._validity_check()
             a.rc += 1
-            return a.buf.call(method, args, kwargs)
-        if a.release_task is not None:
-            # Released asynchronously after last write: reads go to the buffer.
-            a.release_task.join()
-            self._validity_check()
-            a.rc += 1
-            return a.buf.call(method, args, kwargs)
+            return a.buf_call(method, args, kwargs)
         if a.released and a.buf is not None:
             # Released synchronously after last write/update.
             self._validity_check()
             a.rc += 1
-            return a.buf.call(method, args, kwargs)
+            return a.buf_call(method, args, kwargs)
         if not a.holds_access:
             self._wait_access_and_checkpoint(a)
-            self._apply_log_if_pending(a)
+            a.apply_log()
         self._validity_check()
-        v = shared.raw_call(method, args, kwargs, from_node=self.client_node)
+        v = a.raw_call(method, args, kwargs, modifies=False)
         a.rc += 1
         if a.all_suprema_met():   # last operation of any kind: release (§2.8.2)
-            self._release(a)
+            a.release()
         return v
 
     # -- update (§2.8.3) -----------------------------------------------------
     def _update(self, a: ObjectAccess, method: str, args: tuple, kwargs: dict) -> Any:
-        shared = a.shared
         if not a.holds_access:
             self._wait_access_and_checkpoint(a)
-            self._apply_log_if_pending(a)
+            a.apply_log()
         self._validity_check()
-        v = shared.raw_call(method, args, kwargs, from_node=self.client_node)
+        v = a.raw_call(method, args, kwargs, modifies=True)
         a.uc += 1
-        a.modified = True
         if a.writes_updates_done():
             # No further writes/updates: buffer for trailing local reads, release.
-            with shared.header.lock:
-                inst = shared.header.instance
-            a.buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
-            self._release(a)
+            a.snapshot_buf()
+            a.release()
         return v
 
     # -- write (§2.8.4) ------------------------------------------------------
     def _write(self, a: ObjectAccess, method: str, args: tuple, kwargs: dict) -> Any:
-        shared = a.shared
         if a.holds_access:
             # Preceding reads/updates hold the object: operate directly.
             self._validity_check()
-            v = shared.raw_call(method, args, kwargs, from_node=self.client_node)
+            v = a.raw_call(method, args, kwargs, modifies=True)
             a.wc += 1
-            a.modified = True
             if a.writes_updates_done():
-                with shared.header.lock:
-                    inst = shared.header.instance
                 # Paper §2.8.4 says "cloned to st"; that must be buf (see module doc).
-                a.buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
-                self._release(a)
+                a.snapshot_buf()
+                a.release()
             return v
         # No preceding reads/updates: log-buffer the write, no synchronization.
-        a.log.record(method, args, kwargs)
+        a.record_write(method, args, kwargs)
         a.wc += 1
         if a.wc == a.sup.writes and a.sup.updates == 0:
             # Final write (and no updates will follow): asynchronous apply+release.
-            self._spawn_lastwrite_apply(a)
+            a.spawn_lastwrite_apply(self._gate_kind)
         return None
-
-    def _spawn_lastwrite_apply(self, a: ObjectAccess) -> None:
-        shared = a.shared
-
-        def code() -> None:
-            with shared.header.lock:
-                inst = shared.header.instance
-            st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
-            a.log.apply_to(shared.holder.obj)
-            buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
-            with a.lock:
-                a.seen_instance = inst
-                a.st = st
-                a.buf = buf
-                a.modified = True
-                a.holds_access = True
-            shared.header.release_to(a.pv)
-            with a.lock:
-                a.released = True
-
-        a.release_task = shared.node.executor.submit(
-            shared.header, self._gate_kind, a.pv, code,
-            name=f"lw-apply:{shared.name}:T{self.id}")
 
     # -- shared helpers --------------------------------------------------------
     def _wait_access_and_checkpoint(self, a: ObjectAccess) -> None:
-        shared = a.shared
-        h = shared.header
-        if self.irrevocable:
-            blocked = h.wait_termination(a.pv, timeout=self.wait_timeout)
-        else:
-            blocked = h.wait_access(a.pv, timeout=self.wait_timeout)
-        if blocked:
+        if a.open_access(self._gate_kind, self.wait_timeout):
             self.stats.waits += 1
-        shared.check_reachable()
-        with h.lock:
-            inst = h.instance
-        a.seen_instance = inst
-        a.st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
-        a.holds_access = True
-        shared.touch(self)
-
-    def _apply_log_if_pending(self, a: ObjectAccess) -> None:
-        if len(a.log):
-            a.log.apply_to(a.shared.holder.obj)
-            a.modified = True
-
-    def _release(self, a: ObjectAccess) -> None:
-        if not a.released:
-            a.shared.header.release_to(a.pv)
-            a.released = True
 
     def _validity_check(self) -> None:
         """Force an abort as soon as any observed instance was invalidated (§2.3)."""
         for a in self._order:
-            with a.lock:
-                seen = a.seen_instance
-            if seen is not None and a.shared.header.instance != seen:
+            if not a.valid():
                 self._force_abort(
                     f"object {a.shared.name!r} was invalidated by a cascading abort")
 
@@ -401,44 +585,60 @@ class Transaction:
         # 1. Wait for extant asynchronous tasks.
         task_error: Optional[BaseException] = None
         for a in self._order:
-            if a.release_task is not None:
-                try:
-                    a.release_task.join()
-                except TransactionError as e:
-                    task_error = e
+            try:
+                a.join_release_task()
+            except TransactionError as e:
+                task_error = e
         if task_error is not None:
             self._do_abort()
             self.stats.aborts += 1
             raise AbortError(f"asynchronous task failed: {task_error}", forced=True)
-        # 2. Wait until the commit condition holds for every object.
-        for a in self._order:
-            if a.shared.header.wait_termination(a.pv, timeout=self.wait_timeout):
-                self.stats.waits += 1
-        # 3. Checkpoint untouched objects; apply left-over logs; release.
-        for a in self._order:
-            h = a.shared.header
-            if a.seen_instance is None:
-                with h.lock:
-                    a.seen_instance = h.instance
-                a.st = CopyBuffer(a.shared.holder.obj, a.seen_instance,
-                                  home_node=a.shared.node)
-            if len(a.log):
-                a.log.apply_to(a.shared.holder.obj)
-                a.modified = True
-            self._release(a)
-        # 4. Validity check: abort if anything we observed was invalidated.
-        doomed = any(
-            a.seen_instance is not None and a.shared.header.instance != a.seen_instance
-            for a in self._order)
-        if doomed:
+        try:
+            # 2. Wait until the commit condition holds for every object.
+            for a in self._order:
+                if a.wait_termination(self.wait_timeout):
+                    self.stats.waits += 1
+            # 3. Checkpoint untouched objects; apply left-over logs; release.
+            for a in self._order:
+                a.ensure_checkpoint()
+                a.apply_log()
+                a.release()
+            # 4. Validity check: abort if anything observed was invalidated
+            # (batched per dispense domain: one RPC per remote node).
+            groups: Dict[Optional[tuple], List[ObjectAccess]] = {}
+            for a in self._order:
+                groups.setdefault(a.dispense_domain, []).append(a)
+            if not all(accs[0].valid_commit_batch(accs)
+                       for accs in groups.values()):
+                self._do_abort()
+                self.stats.aborts += 1
+                raise AbortError(
+                    "commit-time validation failed (cascading abort)",
+                    forced=True)
+            # 5. Terminate: advance ltv on every object.
+            for a in self._order:
+                a.terminate()
+        except TimeoutError as e:
+            # A predecessor never terminated (e.g. crashed with no monitor):
+            # leaving our objects unreleased would wedge every successor, so
+            # route through the abort path like _do_abort does.
             self._do_abort()
             self.stats.aborts += 1
-            raise AbortError("commit-time validation failed (cascading abort)",
-                             forced=True)
-        # 5. Terminate: advance ltv on every object.
+            raise AbortError(f"commit condition timed out: {e}",
+                             forced=True) from e
+        except InstanceInvalidated as e:
+            self._force_abort(str(e))
+        except AbortError:
+            raise               # rollback already performed above
+        except TransactionError:
+            # A home node died mid-commit (RemoteObjectFailure etc.): roll
+            # back the surviving objects before surfacing it — leaving them
+            # unreleased would wedge every successor (§3.4).
+            self._do_abort()
+            self.stats.aborts += 1
+            raise
         for a in self._order:
-            a.shared.header.terminate_to(a.pv)
-            a.shared.clear_holder(self)
+            a.finish_session()
         self._terminated = True
 
     # ------------------------------------------------------------------ #
@@ -461,33 +661,37 @@ class Transaction:
             return
         # 1. Wait for extant tasks (they may still be mutating state).
         for a in self._order:
-            if a.release_task is not None:
-                try:
-                    a.release_task.join()
-                except TransactionError:
-                    pass
+            try:
+                a.join_release_task()
+            except TransactionError:
+                pass
         # 2. Wait for the commit condition per object.
         for a in self._order:
             try:
-                a.shared.header.wait_termination(a.pv, timeout=self.wait_timeout)
-            except TimeoutError:
-                pass  # fault-tolerance path: predecessor crashed; monitor cleans up
+                a.wait_termination(self.wait_timeout)
+            except (TimeoutError, TransactionError):
+                pass  # predecessor crashed, or our home node/session is gone
+                      # (§3.4) — either way the monitor machinery cleans up
         # 3. Restore modified objects from their checkpoints, oldest-restore-wins.
         for a in self._order:
-            h = a.shared.header
-            with a.lock:
-                seen, st, modified = a.seen_instance, a.st, a.modified
-            if st is not None and modified:
-                with h.lock:
-                    if h.instance == seen:
-                        # Not already restored to an older version: restore + invalidate.
-                        st.restore_into(a.shared.holder)
-                        h.instance += 1
+            if a.terminated:
+                # Already terminated (partial commit step 5 before a later
+                # object's node died): a successor may have committed on
+                # this object since — restoring would erase its writes.
+                continue
+            try:
+                a.rollback()
+            except TransactionError:
+                pass  # home node unreachable/expired: its monitor restores
         # 4. Release and terminate every object.
         for a in self._order:
-            self._release(a)
-            a.shared.header.terminate_to(a.pv)
-            a.shared.clear_holder(self)
+            try:
+                a.release()
+                a.terminate()
+            except TransactionError:
+                pass  # home node unreachable/expired: self-releases there
+        for a in self._order:
+            a.finish_session()
         self._terminated = True
 
     # ------------------------------------------------------------------ #
@@ -531,7 +735,7 @@ class Transaction:
         fresh: List[ObjectAccess] = []
         mapping: Dict[SharedObject, ObjectAccess] = {}
         for a in self._order:
-            na = ObjectAccess(a.shared, a.sup)
+            na = a.shared.make_access(self, a.sup)
             fresh.append(na)
             mapping[a.shared] = na
         self._order = fresh

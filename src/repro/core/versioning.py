@@ -249,6 +249,20 @@ class VersionHeader:
                 f"ltv={self.ltv}, inst={self.instance})")
 
 
+def skip_version(h: VersionHeader, pv: int) -> None:
+    """Advance ``lv``/``ltv`` past an abandoned transaction's ``pv`` *in
+    chain order* (paper §3.4): each counter jumps to ``pv`` exactly when it
+    reaches ``pv - 1`` — immediately if the abandoned transaction's turn
+    already came, otherwise via a waiter parked on the header, so
+    successors can never bypass a live predecessor's unreleased state.
+    Idempotent: counters are monotonic and a duplicate parked skip fires as
+    a no-op."""
+    if not h.park(_ACCESS, pv, lambda: h.release_to(pv)):
+        h.release_to(pv)
+    if not h.park(_TERMINATION, pv, lambda: h.terminate_to(pv)):
+        h.terminate_to(pv)
+
+
 def dispense_versions(headers: List[VersionHeader]) -> List[int]:
     """Atomically dispense private versions for an access set (paper §2.10.2).
 

@@ -1,0 +1,41 @@
+"""``repro.net`` — a real wire for OptSVA-CF (DESIGN.md §3.1).
+
+Atomic RMI 2 runs transactions against objects *homed* on remote JVMs over
+Java RMI; this package is the reproduction's analogue: registry nodes become
+real OS processes reachable over TCP, and the control-flow (CF) model's
+delegation becomes literal — §2.7 read-only buffering, §2.8.4 last-write log
+application, checkpointing, and abort restores all execute *on the home
+node*; only versions, instance epochs, and method return values cross the
+wire. Object state never moves for a buffered write.
+
+Modules:
+
+* :mod:`repro.net.wire`   — length-prefixed binary framing + message codec;
+* :mod:`repro.net.client` — connection-pooled RPC client with the liveness
+  heartbeat (one per client process per server);
+* :mod:`repro.net.server` — the node server process: hosts
+  ``SharedObject``/``VersionHeader``/``Executor`` plus per-transaction
+  *sessions* (the server-side halves of ``ObjectAccess``) and the §3.4
+  :class:`~repro.core.faults.TransactionMonitor`;
+* :mod:`repro.net.remote` — ``RemoteNode``/``RemoteSharedObject``/
+  ``RemoteObjectAccess`` duck-typing the in-process surface so
+  ``Transaction``, ``TransactionMonitor``, and ``txstore`` run unchanged
+  over either transport;
+* :mod:`repro.net.spawn`  — subprocess helpers used by benchmarks, tests,
+  and the distributed quickstart.
+
+Trust model: frames carry pickles, so a node server must only be exposed to
+trusted peers (localhost or a private cluster network) — exactly the
+deployment model of Java RMI serialization in the source system.
+"""
+from .client import CLIENT_ID, NodeClient
+from .remote import RemoteNode, RemoteObjectAccess, RemoteSharedObject
+from .server import NodeServer
+from .spawn import ServerHandle, spawn_server
+from .wire import ConnectionClosed, WireError
+
+__all__ = [
+    "CLIENT_ID", "NodeClient", "RemoteNode", "RemoteObjectAccess",
+    "RemoteSharedObject", "NodeServer", "ServerHandle", "spawn_server",
+    "ConnectionClosed", "WireError",
+]

@@ -1,0 +1,252 @@
+"""RPC client: connection pool + liveness heartbeat (DESIGN.md §3.1).
+
+One :class:`NodeClient` per (client process, node server). RPCs are strict
+request/response over pooled TCP connections — a blocking RPC (gate wait,
+task join) holds its pooled connection for the duration, and concurrency
+comes from the pool growing on demand up to ``max_pool``.
+
+Failure mapping (§3.4): any socket-level failure flips the client to
+``alive = False`` (crash-stop — a node that vanished is *removed from the
+system*) and surfaces as :class:`~repro.core.api.RemoteObjectFailure`, which
+the transaction machinery already routes through its abort path.
+
+Liveness has two halves:
+
+* **heartbeat** — while this process has live transactions on the server, a
+  daemon thread sends a periodic ``heartbeat`` RPC naming them; the server
+  refreshes the §3.4 failure detector for every object they hold.
+* **presence connection** — one dedicated idle connection announced with
+  ``hello``. The server maps it to this client's sessions; the OS closing
+  it (process death) immediately expires every held object, so the
+  server-side :class:`~repro.core.faults.TransactionMonitor` rolls them
+  back without waiting a full detector timeout.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import uuid
+from collections import deque
+from typing import Any, Deque, Optional, Set
+
+from repro.core.api import RemoteObjectFailure
+
+from .wire import (ConnectionClosed, ERR, OK, WireError, parse_address,
+                   recv_msg, send_msg)
+
+#: Stable identity of this client *process* across all its transactions.
+CLIENT_ID = f"{socket.gethostname()}:{os.getpid()}:{uuid.uuid4().hex[:6]}"
+
+
+class NodeClient:
+    """Connection-pooled RPC endpoint for one node server."""
+
+    def __init__(self, address: str, *, connect_timeout: float = 5.0,
+                 heartbeat_interval: float = 0.5, max_pool: int = 64):
+        self.address = address
+        self.host, self.port = parse_address(address)
+        self.connect_timeout = connect_timeout
+        self.heartbeat_interval = heartbeat_interval
+        self.max_pool = max_pool
+        self.alive = True
+        self._pool: Deque[socket.socket] = deque()
+        self._pool_size = 0
+        self._lock = threading.Lock()
+        self._pool_slot = threading.Condition(self._lock)
+        self._active_txns: Set[str] = set()
+        self._presence: Optional[socket.socket] = None
+        self._presence_lock = threading.Lock()   # single presence conn ever
+        self._hb_thread: Optional[threading.Thread] = None
+        self._closed = threading.Event()
+
+    # -- connections --------------------------------------------------------
+    def _connect(self, *, mark_on_fail: bool = True) -> socket.socket:
+        try:
+            sock = socket.create_connection((self.host, self.port),
+                                            timeout=self.connect_timeout)
+        except OSError as e:
+            if mark_on_fail:
+                self._mark_dead()
+            raise RemoteObjectFailure(
+                f"node server {self.address} is unreachable: {e}") from e
+        sock.settimeout(None)  # blocking RPCs may legitimately take long
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    def _checkout(self) -> socket.socket:
+        with self._lock:
+            if not self.alive:
+                raise RemoteObjectFailure(
+                    f"node server {self.address} is unreachable (crash-stop)")
+            if self._pool:
+                return self._pool.popleft()
+            while self._pool_size >= self.max_pool:
+                self._pool_slot.wait(timeout=30.0)
+                if not self.alive:   # died while we waited for a slot
+                    raise RemoteObjectFailure(
+                        f"node server {self.address} is unreachable "
+                        f"(crash-stop)")
+                if self._pool:
+                    return self._pool.popleft()
+            self._pool_size += 1
+        try:
+            return self._connect()
+        except BaseException:
+            with self._lock:
+                self._pool_size -= 1
+                self._pool_slot.notify()
+            raise
+
+    def _checkin(self, sock: Optional[socket.socket]) -> None:
+        with self._lock:
+            if sock is not None and self.alive and not self._closed.is_set():
+                self._pool.append(sock)
+            else:
+                self._pool_size -= 1
+                if sock is not None:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+            self._pool_slot.notify()
+
+    def _mark_dead(self) -> None:
+        with self._lock:
+            self.alive = False
+            stale = list(self._pool)
+            self._pool.clear()
+            self._pool_size -= len(stale)   # their slots are gone for good
+            self._pool_slot.notify_all()    # wake waiters to observe death
+        for s in stale:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    # -- RPC ----------------------------------------------------------------
+    def call(self, op: str, **kwargs: Any) -> Any:
+        """Invoke ``op`` on the server; returns its value or re-raises its
+        error. Socket failures map to :class:`RemoteObjectFailure`."""
+        sock = self._checkout()
+        try:
+            send_msg(sock, (op, kwargs))
+            status, value = recv_msg(sock)
+        except (ConnectionClosed, WireError, OSError) as e:
+            # WireError (undecodable reply) is connection-fatal too: the
+            # stream position is unknown, so the socket cannot be reused.
+            try:
+                sock.close()
+            except OSError:
+                pass
+            self._checkin(None)
+            self._mark_dead()
+            raise RemoteObjectFailure(
+                f"node server {self.address} failed mid-call ({op}): {e}") from e
+        self._checkin(sock)
+        if status == OK:
+            return value
+        assert status == ERR
+        raise value
+
+    # -- transaction liveness ----------------------------------------------
+    def register_txn(self, txn_uid: str) -> None:
+        """Track a live transaction: start heartbeating + presence."""
+        with self._lock:
+            self._active_txns.add(txn_uid)
+            need_hb = self._hb_thread is None
+        self._ensure_presence()   # no-op once established
+        if need_hb:
+            t = threading.Thread(target=self._heartbeat_loop,
+                                 name=f"hb-{self.address}", daemon=True)
+            with self._lock:
+                if self._hb_thread is None:
+                    self._hb_thread = t
+                    t.start()
+
+    def finish_txn(self, txn_uid: str) -> None:
+        """The transaction terminated everywhere: drop the server session."""
+        with self._lock:
+            if txn_uid not in self._active_txns:
+                return
+            self._active_txns.discard(txn_uid)
+        try:
+            self.call("end_txn", txn=txn_uid)
+        except RemoteObjectFailure:
+            pass  # server is gone; nothing left to clean up there
+
+    def _ensure_presence(self) -> None:
+        # Serialized: a duplicate presence connection for the same client id
+        # would later be dropped (overwritten + GC-closed) and the server
+        # would mistake that for this whole process crashing.
+        with self._presence_lock:
+            with self._lock:
+                if self._presence is not None or not self.alive:
+                    return
+            try:
+                # Best-effort: a transient refusal (backlog overflow, port
+                # exhaustion) must not crash-stop a healthy server for the
+                # whole client, so this connect never marks the client dead.
+                sock = self._connect(mark_on_fail=False)
+                send_msg(sock, ("hello", {"client_id": CLIENT_ID}))
+                status, _ = recv_msg(sock)
+                if status != OK:
+                    raise ConnectionClosed("hello rejected")
+            except (RemoteObjectFailure, ConnectionClosed, OSError):
+                return  # heartbeats still cover liveness (slower detection)
+            with self._lock:
+                self._presence = sock
+
+    def _heartbeat_loop(self) -> None:
+        # The heartbeat owns a dedicated connection: sharing the bounded
+        # pool would let max_pool threads blocked in long gate waits starve
+        # liveness, and the server would roll back live transactions.
+        sock: Optional[socket.socket] = None
+        try:
+            while not self._closed.wait(self.heartbeat_interval):
+                with self._lock:
+                    txns = list(self._active_txns)
+                    alive = self.alive
+                if not alive:
+                    return
+                if not txns:
+                    continue
+                try:
+                    if sock is None:
+                        sock = self._connect()
+                    send_msg(sock, ("heartbeat",
+                                    {"client_id": CLIENT_ID, "txns": txns}))
+                    status, value = recv_msg(sock)
+                    if status == ERR and isinstance(value, BaseException):
+                        continue   # server-side hiccup; beat again next tick
+                except RemoteObjectFailure:
+                    return         # _connect marked the server dead
+                except Exception:  # noqa: BLE001 - transient: reconnect
+                    if sock is not None:
+                        try:
+                            sock.close()
+                        except OSError:
+                            pass
+                        sock = None
+        finally:
+            if sock is not None:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        self._closed.set()
+        with self._lock:
+            pool = list(self._pool)
+            self._pool.clear()
+            presence, self._presence = self._presence, None
+        for s in pool + ([presence] if presence else []):
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"NodeClient({self.address}, alive={self.alive})"

@@ -1,0 +1,56 @@
+"""Demo shared-object classes for the distributed examples and tests.
+
+Objects bound over the wire are pickled *by reference* (class path), so the
+node server must be able to import their class. Classes defined in a
+``__main__`` script can't be imported remotely — the distributed quickstart
+and transport tests use these instead.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Mode, access
+
+
+class Account:
+    """The paper's bank account (Fig. 7), with declared access modes."""
+
+    def __init__(self, balance: int = 0):
+        self.bal = balance
+
+    @access(Mode.READ)
+    def balance(self) -> int:
+        return self.bal
+
+    @access(Mode.UPDATE)
+    def deposit(self, v: int) -> None:
+        self.bal += v
+
+    @access(Mode.UPDATE)
+    def withdraw(self, v: int) -> None:
+        self.bal -= v
+
+    @access(Mode.WRITE)
+    def reset(self) -> None:
+        self.bal = 0
+
+    def __tx_snapshot__(self) -> "Account":
+        return Account(self.bal)
+
+
+class SlowAccount(Account):
+    """Account whose operations take ``op_time`` seconds at the home node —
+    makes CF delegation visible in timings."""
+
+    def __init__(self, balance: int = 0, op_time: float = 0.0):
+        super().__init__(balance)
+        self.op_time = op_time
+
+    @access(Mode.READ)
+    def balance(self) -> int:
+        if self.op_time:
+            time.sleep(self.op_time)
+        return self.bal
+
+    def __tx_snapshot__(self) -> "SlowAccount":
+        return SlowAccount(self.bal, self.op_time)

@@ -1,0 +1,392 @@
+"""Client-side proxies duck-typing the in-process surface (DESIGN.md §3.1).
+
+* :class:`RemoteNode` — stands where :class:`~repro.core.registry.Node`
+  stands: one per node server, owning the :class:`~repro.net.client.NodeClient`.
+* :class:`RemoteSharedObject` — duck-types
+  :class:`~repro.core.registry.SharedObject` (``name``, ``raw_call``,
+  ``mode_of``, ``check_reachable``, ``touch``/``clear_holder``, ``header``,
+  ``make_access``) so ``Transaction``, ``TransactionMonitor``-facing code,
+  and ``txstore`` run unchanged over TCP.
+* :class:`RemoteHeader` — the version-header surface
+  (``wait_access``/``wait_termination``/``release_to``/``terminate_to``,
+  counter reads) as RPCs against the home node's real header.
+* :class:`RemoteObjectAccess` — the transport override of
+  :class:`~repro.core.transaction.ObjectAccess`: every state operation
+  becomes one RPC executed on the home node; the write log is recorded
+  locally (pure writes need no synchronization, §2.8.4) and ships once,
+  at apply time. Object state never crosses the wire.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional
+
+from repro.core.api import RemoteObjectFailure, Suprema
+from repro.core.transaction import ObjectAccess
+
+from .client import CLIENT_ID, NodeClient
+
+
+class _RemoteBufMarker:
+    """Client-side stand-in for a copy buffer that lives on the home node."""
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return "<buffer @ home node>"
+
+
+_REMOTE_BUF = _RemoteBufMarker()
+
+
+class RemoteTask:
+    """Join handle for an asynchronous task running on the home node.
+
+    ``join`` blocks in a single RPC until the server-side executor task
+    completes; the result (or transactional error) is cached so trailing
+    buffered reads don't re-join over the wire."""
+
+    __slots__ = ("acc", "task_id", "_done", "_error", "_lock")
+
+    def __init__(self, acc: "RemoteObjectAccess", task_id: int):
+        self.acc = acc
+        self.task_id = task_id
+        self._done = False
+        self._error: Optional[BaseException] = None
+        self._lock = threading.Lock()
+
+    def join(self) -> None:
+        with self._lock:
+            if not self._done:
+                try:
+                    self.acc.client.call(
+                        "task_join", txn=self.acc.txn_uid, task_id=self.task_id)
+                except BaseException as e:  # noqa: BLE001 - cache and re-raise
+                    self._error = e
+                else:
+                    self.acc._mark_task_complete()
+                self._done = True
+        if self._error is not None:
+            raise self._error
+
+
+class RemoteHeader:
+    """Version-header surface of a remotely homed object.
+
+    ``lock`` is client-local (API compatibility for ``with header.lock``
+    idioms); it provides no cross-client mutual exclusion — real mutual
+    exclusion happens on the home node inside each RPC.
+    """
+
+    __slots__ = ("shared", "lock")
+
+    def __init__(self, shared: "RemoteSharedObject"):
+        self.shared = shared
+        self.lock = threading.RLock()
+
+    def _state(self) -> Dict[str, int]:
+        return self.shared.client.call("header_state", name=self.shared.name)
+
+    @property
+    def gv(self) -> int:
+        return self._state()["gv"]
+
+    @property
+    def lv(self) -> int:
+        return self._state()["lv"]
+
+    @property
+    def ltv(self) -> int:
+        return self._state()["ltv"]
+
+    @property
+    def instance(self) -> int:
+        return self._state()["instance"]
+
+    def wait_access(self, pv: int, *, timeout: Optional[float] = None) -> bool:
+        return self.shared.client.call(
+            "header_wait", name=self.shared.name, kind="access", pv=pv,
+            timeout=timeout)
+
+    def wait_termination(self, pv: int, *,
+                         timeout: Optional[float] = None) -> bool:
+        return self.shared.client.call(
+            "header_wait", name=self.shared.name, kind="termination", pv=pv,
+            timeout=timeout)
+
+    def release_to(self, pv: int) -> None:
+        self.shared.client.call("header_release", name=self.shared.name, pv=pv)
+
+    def terminate_to(self, pv: int) -> None:
+        self.shared.client.call("header_terminate", name=self.shared.name,
+                                pv=pv)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"RemoteHeader({self.shared.name}@{self.shared.node.address})"
+
+
+class RemoteNode:
+    """Client-side handle for one node server process."""
+
+    def __init__(self, address: str, **client_kw: Any):
+        self.address = address
+        self.client = NodeClient(address, **client_kw)
+        self.name = address          # refined to the server's node name
+        self.alive = True
+        self.network_delay = 0.0     # the wire is honest now
+        self.registry = None         # set by Registry.connect (federation)
+
+    def fetch_bindings(self) -> List["RemoteSharedObject"]:
+        info = self.client.call("list_bindings")
+        self.name = info["node"]
+        return [RemoteSharedObject(n, self) for n in info["bindings"]]
+
+    def bind(self, name: str, obj: Any) -> "RemoteSharedObject":
+        """Bind ``obj`` under ``name`` on the remote server (ships the
+        initial object state once; it lives server-side thereafter). When
+        this node was obtained via ``Registry.connect``, the new binding is
+        registered there too, so ``locate`` sees it without re-connecting."""
+        self.client.call("bind", name=name, obj=obj)
+        shared = RemoteSharedObject(name, self)
+        if self.registry is not None:
+            self.registry.register_remote(shared)
+        return shared
+
+    def ping(self) -> Dict[str, Any]:
+        return self.client.call("ping")
+
+    def simulate_network(self, from_node: Optional[object]) -> None:
+        """No-op: latency is real on this transport."""
+
+    def crash(self) -> None:
+        self.alive = False
+
+    def shutdown(self) -> None:
+        self.client.close()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"RemoteNode({self.name}@{self.address})"
+
+
+class RemoteSharedObject:
+    """Proxy for a shared object homed on a remote node server."""
+
+    def __init__(self, name: str, node: RemoteNode):
+        self.name = name
+        self.node = node
+        self.header = RemoteHeader(self)
+        self.failed = False
+        self._modes: Dict[str, Any] = {}
+
+    @property
+    def client(self) -> NodeClient:
+        return self.node.client
+
+    def make_access(self, txn: object, sup: Suprema) -> "RemoteObjectAccess":
+        return RemoteObjectAccess(txn, self, sup)
+
+    def mode_of(self, method: str):
+        mode = self._modes.get(method)
+        if mode is None:
+            mode = self.client.call("mode_of", name=self.name, method=method)
+            self._modes[method] = mode
+        return mode
+
+    def check_reachable(self) -> None:
+        if self.failed or not self.client.alive or not self.node.alive:
+            raise RemoteObjectFailure(
+                f"remote object {self.name!r} @ {self.node.address} is "
+                f"unreachable")
+
+    def fail(self) -> None:
+        self.failed = True
+
+    def raw_call(self, method: str, args: tuple = (), kwargs: dict = None,
+                 from_node: Optional[object] = None) -> Any:
+        """Non-transactional direct invocation at the home node."""
+        self.check_reachable()
+        return self.client.call("raw_call", name=self.name, method=method,
+                                args=args, kwargs=kwargs or {})
+
+    def touch(self, txn: object) -> None:
+        uid = _txn_uid(txn)
+        if uid is not None:
+            self.client.call("touch", txn=uid, name=self.name)
+
+    def clear_holder(self, txn: object) -> None:
+        uid = _txn_uid(txn)
+        if uid is not None:
+            self.client.call("clear_holder", txn=uid, name=self.name)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"RemoteSharedObject({self.name}@{self.node.address})"
+
+
+def _txn_uid(txn: object) -> Optional[str]:
+    tid = getattr(txn, "id", None)
+    return None if tid is None else f"{CLIENT_ID}#{tid}"
+
+
+class RemoteObjectAccess(ObjectAccess):
+    """One transaction's access record for a remotely homed object.
+
+    State stays on the home node; this record keeps only control state
+    (counters, pv, flags) plus the locally recorded write log. ``st`` is
+    never populated client-side — the abort checkpoint is taken and
+    restored by the server session; ``buf`` holds a marker object when the
+    home-node read buffer exists.
+    """
+
+    __slots__ = ()
+
+    # -- identity -----------------------------------------------------------
+    @property
+    def txn_uid(self) -> str:
+        return _txn_uid(self.txn)
+
+    @property
+    def client(self) -> NodeClient:
+        return self.shared.client
+
+    @property
+    def dispense_domain(self) -> tuple:
+        return ("tcp", self.shared.node.address)
+
+    # -- start (§2.10.2): batched per-node version dispensing ----------------
+    def prepare_start(self) -> None:
+        """Register liveness (presence + heartbeat) for this transaction —
+        called *before* any version lock is acquired: presence setup can
+        block in a TCP connect and must not stall other transactions
+        parked behind our locked headers."""
+        self.client.register_txn(self.txn_uid)
+
+    def dispense_batch(self, accs: List["RemoteObjectAccess"]) -> None:
+        """Lock-and-dispense for every access of this node, one round trip.
+        The server holds the version-lock gates until
+        :meth:`release_version_locks`."""
+        pvs = self.client.call(
+            "dispense_batch", txn=self.txn_uid, client_id=CLIENT_ID,
+            names=[a.shared.name for a in accs])
+        for a in accs:
+            a.pv = pvs[a.shared.name]
+
+    def release_version_locks(self) -> None:
+        self.client.call("release_version_locks", txn=self.txn_uid)
+
+    # -- §2.7 / §2.8.4: tasks run on the home node ---------------------------
+    def spawn_ro_buffer(self, kind: str) -> None:
+        task_id = self.client.call("ro_buffer", txn=self.txn_uid,
+                                   name=self.shared.name, kind=kind)
+        self.release_task = RemoteTask(self, task_id)
+
+    def spawn_lastwrite_apply(self, kind: str) -> None:
+        entries = list(self.log.entries)
+        self.log.entries.clear()
+        task_id = self.client.call("lw_apply", txn=self.txn_uid,
+                                   name=self.shared.name, kind=kind,
+                                   entries=entries)
+        self.release_task = RemoteTask(self, task_id)
+
+    def _mark_task_complete(self) -> None:
+        """A joined home-node task released the object and holds its state."""
+        with self.lock:
+            self.released = True
+            self.buf = _REMOTE_BUF
+            if not self.sup.read_only:
+                self.holds_access = True
+                self.modified = True
+
+    def join_release_task(self) -> None:
+        if self.release_task is not None:
+            self.release_task.join()
+
+    # -- synchronous state operations (single RPCs) --------------------------
+    def open_access(self, kind: str, timeout: Optional[float]) -> bool:
+        res = self.client.call("open_access", txn=self.txn_uid,
+                               name=self.shared.name, kind=kind,
+                               timeout=timeout)
+        self.seen_instance = res["instance"]
+        self.holds_access = True
+        return res["blocked"]
+
+    def raw_call(self, method: str, args: tuple, kwargs: dict, *,
+                 modifies: bool) -> Any:
+        v = self.client.call("txn_call", txn=self.txn_uid,
+                             name=self.shared.name, method=method, args=args,
+                             kwargs=kwargs, modifies=modifies)
+        if modifies:
+            self.modified = True
+        return v
+
+    def buf_call(self, method: str, args: tuple, kwargs: dict) -> Any:
+        return self.client.call("buf_call", txn=self.txn_uid,
+                                name=self.shared.name, method=method,
+                                args=args, kwargs=kwargs)
+
+    def apply_log(self) -> None:
+        if len(self.log):
+            entries = list(self.log.entries)
+            self.log.entries.clear()
+            self.client.call("apply_log", txn=self.txn_uid,
+                             name=self.shared.name, entries=entries)
+            self.modified = True
+
+    def snapshot_buf(self) -> None:
+        self.client.call("buffer_snapshot", txn=self.txn_uid,
+                         name=self.shared.name)
+        self.buf = _REMOTE_BUF
+
+    def ensure_checkpoint(self) -> None:
+        if self.seen_instance is None:
+            self.seen_instance = self.client.call(
+                "ensure_checkpoint", txn=self.txn_uid, name=self.shared.name)
+
+    def release(self) -> None:
+        if not self.released:
+            self.client.call("release", txn=self.txn_uid,
+                             name=self.shared.name)
+            self.released = True
+
+    def wait_termination(self, timeout: Optional[float]) -> bool:
+        return self.client.call("wait_termination", txn=self.txn_uid,
+                                name=self.shared.name, timeout=timeout)
+
+    def valid(self) -> bool:
+        """Cheap per-operation check: the home node enforces §2.3 on every
+        state-touching RPC (raising InstanceInvalidated), so there is
+        nothing to evaluate client-side between operations."""
+        return True
+
+    def valid_commit(self) -> bool:
+        """Authoritative commit-time validation at the home node."""
+        bad = self.client.call("validate", txn=self.txn_uid,
+                               names=[self.shared.name])
+        return not bad
+
+    def valid_commit_batch(self, accs: List["RemoteObjectAccess"]) -> bool:
+        """One validation RPC for the whole per-node batch (commit step 4)."""
+        bad = self.client.call("validate", txn=self.txn_uid,
+                               names=[a.shared.name for a in accs])
+        return not bad
+
+    def abandon(self) -> None:
+        """Failed-start cleanup: the home node skips this transaction's
+        dispensed versions in chain order and drops the session."""
+        self.client.call("abandon", txn=self.txn_uid)
+
+    def rollback(self) -> None:
+        self.client.call("rollback", txn=self.txn_uid, name=self.shared.name)
+
+    def terminate(self) -> None:
+        self.client.call("terminate", txn=self.txn_uid, name=self.shared.name)
+        self.terminated = True
+
+    def note_contact(self) -> None:
+        """No-op: every session RPC refreshes the server-side detector, and
+        the client heartbeat covers idle stretches."""
+
+    def check_reachable(self) -> None:
+        self.shared.check_reachable()
+
+    def finish_session(self) -> None:
+        self.client.finish_txn(self.txn_uid)

@@ -1,0 +1,726 @@
+"""The node server process (DESIGN.md §3.1).
+
+Hosts a :class:`~repro.core.registry.Registry` with one
+:class:`~repro.core.registry.Node` — the real OS-process realization of the
+paper's remote host: the ``SharedObject``s, their ``VersionHeader``s, the
+per-node :class:`~repro.core.executor.Executor`, and the §3.4
+:class:`~repro.core.faults.TransactionMonitor` all live here.
+
+**Delegation boundary.** For every client transaction the server keeps a
+*session* — the home-node halves of the client's ``ObjectAccess`` records:
+checkpoint (``st``) and read buffer (``buf``) copies, the
+modified/holds/released flags the monitor machinery keys off, and the
+executor tasks of §2.7 (read-only buffering) and §2.8.4 (last-write log
+application). Those tasks are submitted to *this node's* executor gated on
+the local version header, so buffering/apply work runs where the data
+lives; the client learns only the completion event (``task_join``). Object
+state never crosses the wire — not for buffering, not for checkpoints, not
+for abort restores.
+
+**Version-lock service.** ``dispense_batch`` implements the server side of
+start-time global-order version acquisition (§2.10.2): it acquires this
+node's per-object dispensing gates in header-uid order, dispenses private
+versions for the whole per-node batch, and *holds* the gates until the
+client's ``release_version_locks`` (2PL on version locks across nodes —
+one round-trip per node, not per object). Gates are plain ``Lock``s, not
+the header ``RLock``s, because they must be releasable from a different
+connection thread; dispensing itself still happens under the header lock.
+
+**Failure detection (§3.4).** Sessions are refreshed by client heartbeats;
+a client process that dies stops heartbeating (session reaper, detector
+timeout) and — faster — drops its *presence* connection (immediate). Either
+way ``_expire_session`` performs the paper's self-rollback for everything
+the session dispensed on: restore the checkpoint where state was modified
+(oldest-restore-wins on the instance epoch), bump the epoch so readers of
+the dead transaction's state cascade-abort, and advance ``lv``/``ltv`` past
+its private version so survivors' chains unwedge, then commit. Dead
+clients' held version-lock gates are force-released the same way. The
+object-level :class:`TransactionMonitor` still runs for in-process users of
+an embedded server's registry.
+
+Run standalone::
+
+    python -m repro.net.server --name node0 --port 0 --announce
+
+which prints ``LISTENING host:port`` on stdout for the parent to parse
+(:mod:`repro.net.spawn` automates this).
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.api import InstanceInvalidated, Mode, method_mode
+from repro.core.buffers import CopyBuffer
+from repro.core.executor import Task
+from repro.core.faults import TransactionMonitor
+from repro.core.registry import Registry, SharedObject
+from repro.core.versioning import skip_version
+
+from .wire import (ConnectionClosed, OK, WireError, encode_error, recv_msg,
+                   send_msg)
+
+
+class _ServerAccess:
+    """Home-node half of one transaction's ``ObjectAccess`` record.
+
+    Field names deliberately mirror ``ObjectAccess`` — the §3.4 monitor's
+    ``rollback_object`` reads ``holds_access``/``st``/``modified``/``pv``
+    off whatever the object's holder exposes, so sessions plug into the
+    existing machinery unchanged.
+    """
+
+    __slots__ = ("shared", "pv", "st", "buf", "seen_instance",
+                 "holds_access", "released", "modified", "lock")
+
+    def __init__(self, shared: SharedObject, pv: int):
+        self.shared = shared
+        self.pv = pv
+        self.st: Optional[CopyBuffer] = None
+        self.buf: Optional[CopyBuffer] = None
+        self.seen_instance: Optional[int] = None
+        self.holds_access = False
+        self.released = False
+        self.modified = False
+        self.lock = threading.Lock()
+
+
+class _Session:
+    """All server-side state of one client transaction (its txn record).
+
+    Duck-types the transaction for the monitor: ``_accesses`` maps shared
+    object → access record, exactly like ``Transaction._accesses``.
+    """
+
+    def __init__(self, txn_uid: str, client_id: str):
+        self.txn_uid = txn_uid
+        self.client_id = client_id
+        self._accesses: Dict[SharedObject, _ServerAccess] = {}
+        self.tasks: Dict[int, Task] = {}
+        self.held_gates: List[threading.Lock] = []
+        self.last_contact = time.monotonic()
+        self.expired = False      # set by §3.4 expiry; parked tasks no-op
+        self._next_task = 0
+        self.lock = threading.Lock()
+
+    def new_task_id(self) -> int:
+        with self.lock:
+            self._next_task += 1
+            return self._next_task
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"_Session({self.txn_uid})"
+
+
+class NodeServer:
+    """One registry node served over TCP."""
+
+    def __init__(self, node_name: str = "node0", host: str = "127.0.0.1",
+                 port: int = 0, *, registry: Optional[Registry] = None,
+                 monitor_timeout: float = 2.0, monitor_poll: float = 0.05,
+                 executor_workers: int = 1):
+        self.registry = registry if registry is not None else Registry()
+        self.node_name = node_name
+        try:
+            self.node = self.registry.node(node_name)
+        except KeyError:
+            self.node = self.registry.add_node(
+                node_name, executor_workers=executor_workers)
+        self.monitor = TransactionMonitor(
+            self.registry, timeout=monitor_timeout, poll_interval=monitor_poll)
+        self._sessions: Dict[str, _Session] = {}
+        self._gates: Dict[str, threading.Lock] = {}     # per-object dispense gate
+        self._presence: Dict[str, socket.socket] = {}   # client_id -> conn
+        self._conns: set = set()                        # live connections
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._accept_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ #
+    # lifecycle                                                           #
+    # ------------------------------------------------------------------ #
+    @property
+    def address(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    def start(self) -> "NodeServer":
+        self._listener.listen(128)
+        self.monitor.start()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"accept-{self.port}", daemon=True)
+        self._accept_thread.start()
+        threading.Thread(target=self._reaper_loop, name="session-reaper",
+                         daemon=True).start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns)
+        for c in conns:   # crash-stop for connected peers (embedded servers)
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        self.monitor.stop()
+        self.registry.shutdown()
+
+    def serve_forever(self) -> None:
+        self.start()
+        try:
+            while not self._stop.wait(0.2):
+                pass
+        except KeyboardInterrupt:  # pragma: no cover
+            pass
+        finally:
+            self.stop()
+
+    # ------------------------------------------------------------------ #
+    # connection handling                                                 #
+    # ------------------------------------------------------------------ #
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _addr = self._listener.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name="conn", daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        presence_for: Optional[str] = None
+        with self._lock:
+            self._conns.add(conn)
+        try:
+            while not self._stop.is_set():
+                try:
+                    op, kwargs = recv_msg(conn)
+                except (ConnectionClosed, WireError, OSError):
+                    break
+                if op == "hello":
+                    presence_for = kwargs["client_id"]
+                    with self._lock:
+                        self._presence[presence_for] = conn
+                    send_msg(conn, (OK, None))
+                    continue
+                try:
+                    value = self._dispatch(op, kwargs)
+                    reply = (OK, value)
+                except BaseException as e:  # noqa: BLE001 - serialize to peer
+                    reply = encode_error(e)
+                try:
+                    send_msg(conn, reply)
+                except (ConnectionClosed, OSError):
+                    break
+                except Exception as e:  # noqa: BLE001 - unpicklable OK value
+                    # Keep the connection: report the serialization failure
+                    # instead of dying (the client would mark the whole
+                    # server crash-stop dead).
+                    try:
+                        send_msg(conn, encode_error(e))
+                    except Exception:  # noqa: BLE001
+                        break
+        finally:
+            with self._lock:
+                self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+            if presence_for is not None:
+                with self._lock:
+                    is_current = self._presence.get(presence_for) is conn
+                if is_current:
+                    self._client_vanished(presence_for)
+
+    def _client_vanished(self, client_id: str) -> None:
+        """Presence connection dropped: crash-stop the client's sessions."""
+        with self._lock:
+            self._presence.pop(client_id, None)
+            sessions = [s for s in self._sessions.items()
+                        if s[1].client_id == client_id]
+        for uid, session in sessions:
+            self._expire_session(session)
+            with self._lock:
+                self._sessions.pop(uid, None)
+
+    def _reaper_loop(self) -> None:
+        """Expire sessions whose client stopped heartbeating (§3.4).
+
+        Covers clients without a presence connection, and — unlike the
+        object-level monitor — also transactions that dispensed versions
+        but never *held* anything: their private versions must still be
+        advanced past, or every successor wedges on the version chain."""
+        while not self._stop.wait(self.monitor.poll_interval):
+            now = time.monotonic()
+            with self._lock:
+                stale = [(uid, s) for uid, s in self._sessions.items()
+                         if now - s.last_contact > self.monitor.timeout]
+            for uid, session in stale:
+                self._expire_session(session)
+                with self._lock:
+                    self._sessions.pop(uid, None)
+
+    def _expire_session(self, session: _Session) -> None:
+        """Crash-stop one client transaction (paper §3.4).
+
+        Performs the complete self-rollback for every object the session
+        dispensed on, directly (not via the object-level monitor — a
+        handoff raced successor transactions becoming the holder, dropping
+        the rollback and leaving the crashed version unterminated): under
+        the version lock, restore the checkpoint if the session modified
+        live state and nothing newer restored already (oldest-restore-wins
+        on the epoch), bump the instance epoch so observers of the dead
+        transaction's state cascade-abort, and skip its private version in
+        chain order (:func:`~repro.core.versioning.skip_version`) so successors unwedge without
+        ever bypassing a live predecessor — this covers held,
+        released-but-unterminated, and never-accessed objects alike.
+        Version-lock gates the session still holds are force-released.
+
+        ``session.expired`` is set first: the advance below drains waiters,
+        including the session's own parked §2.7/§2.8.4 tasks — woken, they
+        must no-op rather than apply a dead transaction's buffered writes."""
+        session.expired = True
+        self._release_gates(session)
+        with session.lock:
+            accesses = list(session._accesses.items())
+        for shared, acc in accesses:
+            h = shared.header
+            with h.lock:
+                # Read access state under the header lock: an lw-apply task
+                # holding it is either fully applied (its checkpoint is
+                # visible and restored here) or will see `expired` and
+                # no-op — never applied-but-unrestored.
+                with acc.lock:
+                    seen, st, modified = (acc.seen_instance, acc.st,
+                                          acc.modified)
+                with shared._contact_lock:
+                    if shared.holding_txn is session:
+                        shared.holding_txn = None
+                if st is not None and modified and h.instance == seen:
+                    st.restore_into(shared.holder)
+                    h.instance += 1
+            skip_version(h, acc.pv)
+            self.monitor.rollbacks.append(shared.name)
+
+    # ------------------------------------------------------------------ #
+    # op dispatch                                                         #
+    # ------------------------------------------------------------------ #
+    def _dispatch(self, op: str, kw: Dict[str, Any]) -> Any:
+        handler = getattr(self, f"_op_{op}", None)
+        if handler is None:
+            raise WireError(f"unknown op {op!r}")
+        return handler(**kw)
+
+    # -- helpers ------------------------------------------------------------
+    def _shared(self, name: str) -> SharedObject:
+        return self.registry.locate(name)
+
+    def _session(self, txn: str) -> _Session:
+        with self._lock:
+            session = self._sessions.get(txn)
+        if session is None:
+            # The session was expired (§3.4 crash-stop suspicion) — an
+            # "illusorily crashed" client coming back must abort, exactly
+            # like a transaction whose observed instance was invalidated.
+            raise InstanceInvalidated(
+                f"transaction {txn!r} has no live session on this node "
+                f"(rolled back by the failure detector)")
+        session.last_contact = time.monotonic()
+        return session
+
+    def _acc(self, txn: str, name: str) -> _ServerAccess:
+        session = self._session(txn)
+        shared = self._shared(name)
+        acc = session._accesses.get(shared)
+        if acc is None:
+            raise InstanceInvalidated(
+                f"transaction {txn!r} holds no access on {name!r}")
+        return acc
+
+    def _check_valid(self, acc: _ServerAccess) -> None:
+        """Per-operation §2.3 validity check, enforced at the home node."""
+        with acc.lock:
+            seen = acc.seen_instance
+        if seen is not None and acc.shared.header.instance != seen:
+            raise InstanceInvalidated(
+                f"object {acc.shared.name!r} was invalidated by a cascading "
+                f"abort (home-node check)")
+
+    def _note_contact(self, session: _Session, acc: _ServerAccess) -> None:
+        if acc.holds_access and not acc.released:
+            acc.shared.touch(session)
+        elif acc.released:
+            acc.shared.clear_holder(session)
+
+    def _release_gates(self, session: _Session) -> None:
+        with session.lock:
+            gates, session.held_gates = session.held_gates, []
+        for g in reversed(gates):
+            try:
+                g.release()
+            except RuntimeError:  # pragma: no cover - already released
+                pass
+
+    # -- directory ----------------------------------------------------------
+    def _op_ping(self) -> Dict[str, Any]:
+        return {"node": self.node_name, "time": time.time(),
+                "objects": len(self.registry.all_objects())}
+
+    def _op_list_bindings(self) -> Dict[str, Any]:
+        return {"node": self.node_name,
+                "bindings": sorted(self.registry.all_objects())}
+
+    def _op_bind(self, name: str, obj: Any) -> None:
+        self.registry.bind(name, obj, self.node)
+        with self._lock:
+            self._gates[name] = threading.Lock()
+
+    def _op_mode_of(self, name: str, method: str) -> Mode:
+        return method_mode(self._shared(name).holder.obj, method)
+
+    def _op_raw_call(self, name: str, method: str, args: tuple,
+                     kwargs: dict) -> Any:
+        """Non-transactional direct invocation (Registry-level access)."""
+        return self._shared(name).raw_call(method, args, kwargs)
+
+    # -- header surface (RemoteHeader duck type) -----------------------------
+    def _op_header_state(self, name: str) -> Dict[str, int]:
+        h = self._shared(name).header
+        with h.lock:
+            return {"gv": h.gv, "lv": h.lv, "ltv": h.ltv,
+                    "instance": h.instance}
+
+    def _op_header_wait(self, name: str, kind: str, pv: int,
+                        timeout: Optional[float]) -> bool:
+        h = self._shared(name).header
+        if kind == "termination":
+            return h.wait_termination(pv, timeout=timeout)
+        return h.wait_access(pv, timeout=timeout)
+
+    def _op_header_release(self, name: str, pv: int) -> None:
+        self._shared(name).header.release_to(pv)
+
+    def _op_header_terminate(self, name: str, pv: int) -> None:
+        self._shared(name).header.terminate_to(pv)
+
+    # -- start: batched version dispensing (§2.10.2) -------------------------
+    def _op_dispense_batch(self, txn: str, client_id: str,
+                           names: List[str]) -> Dict[str, int]:
+        with self._lock:
+            session = self._sessions.get(txn)
+            if session is None:
+                session = self._sessions[txn] = _Session(txn, client_id)
+        objs = [(self._shared(n), n) for n in names]
+        objs.sort(key=lambda sn: sn[0].header.uid)   # node-local global order
+        pvs: Dict[str, int] = {}
+        acquired: List[threading.Lock] = []
+        try:
+            for shared, name in objs:
+                with self._lock:
+                    gate = self._gates.setdefault(name, threading.Lock())
+                gate.acquire()
+                acquired.append(gate)
+                with shared.header.lock:
+                    pv = shared.header.dispense()
+                with session.lock:   # heartbeats iterate _accesses live
+                    session._accesses[shared] = _ServerAccess(shared, pv)
+                pvs[name] = pv
+        except BaseException:
+            for g in reversed(acquired):
+                g.release()
+            raise
+        with session.lock:
+            session.held_gates.extend(acquired)
+        return pvs
+
+    def _op_release_version_locks(self, txn: str) -> None:
+        self._release_gates(self._session(txn))
+
+    # -- §2.7 / §2.8.4: asynchronous home-node tasks -------------------------
+    def _op_ro_buffer(self, txn: str, name: str, kind: str) -> int:
+        session = self._session(txn)
+        acc = self._acc(txn, name)
+        shared = acc.shared
+
+        def code() -> None:
+            if session.expired:
+                return        # §3.4: the expiry advanced our version already
+            with shared.header.lock:
+                inst = shared.header.instance
+            with acc.lock:
+                acc.seen_instance = inst
+                acc.buf = CopyBuffer(shared.holder.obj, inst,
+                                     home_node=shared.node)
+            shared.header.release_to(acc.pv)
+            with acc.lock:
+                acc.released = True
+
+        task = self.node.executor.submit(
+            shared.header, kind, acc.pv, code,
+            name=f"ro-buffer:{name}:{txn}")
+        task_id = session.new_task_id()
+        session.tasks[task_id] = task
+        return task_id
+
+    def _op_lw_apply(self, txn: str, name: str, kind: str,
+                     entries: List[tuple]) -> int:
+        session = self._session(txn)
+        acc = self._acc(txn, name)
+        shared = acc.shared
+
+        def code() -> None:
+            # The expired check and the apply happen under the header lock,
+            # which _expire_session also takes before deciding whether to
+            # restore: either we see the expiry and no-op, or the expiry
+            # sees our checkpoint (acc.st, written below) and restores it —
+            # a dead transaction's log can never slip through unrestored.
+            with shared.header.lock:
+                if session.expired:
+                    return    # §3.4: never apply a dead transaction's log
+                inst = shared.header.instance
+                st = CopyBuffer(shared.holder.obj, inst,
+                                home_node=shared.node)
+                obj = shared.holder.obj
+                for method, args, kwargs in entries:
+                    getattr(obj, method)(*args, **kwargs)
+                buf = CopyBuffer(shared.holder.obj, inst,
+                                 home_node=shared.node)
+                with acc.lock:
+                    acc.seen_instance = inst
+                    acc.st = st
+                    acc.buf = buf
+                    acc.modified = True
+                    acc.holds_access = True
+            shared.header.release_to(acc.pv)
+            with acc.lock:
+                acc.released = True
+
+        task = self.node.executor.submit(
+            shared.header, kind, acc.pv, code,
+            name=f"lw-apply:{name}:{txn}")
+        task_id = session.new_task_id()
+        session.tasks[task_id] = task
+        return task_id
+
+    def _op_task_join(self, txn: str, task_id: int) -> Dict[str, Any]:
+        session = self._session(txn)
+        task = session.tasks[task_id]
+        task.join()   # re-raises transactional task errors to the client
+        return {}
+
+    # -- synchronous session state operations --------------------------------
+    def _op_open_access(self, txn: str, name: str, kind: str,
+                        timeout: Optional[float]) -> Dict[str, Any]:
+        session = self._session(txn)
+        acc = self._acc(txn, name)
+        shared = acc.shared
+        h = shared.header
+        if kind == "termination":
+            blocked = h.wait_termination(acc.pv, timeout=timeout)
+        else:
+            blocked = h.wait_access(acc.pv, timeout=timeout)
+        shared.check_reachable()
+        with h.lock:
+            inst = h.instance
+        with acc.lock:
+            acc.seen_instance = inst
+            acc.st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+            acc.holds_access = True
+        shared.touch(session)
+        return {"blocked": blocked, "instance": inst}
+
+    def _op_txn_call(self, txn: str, name: str, method: str, args: tuple,
+                     kwargs: dict, modifies: bool) -> Any:
+        session = self._session(txn)
+        acc = self._acc(txn, name)
+        self._check_valid(acc)
+        acc.shared.check_reachable()
+        v = getattr(acc.shared.holder.obj, method)(*args, **kwargs)
+        if modifies:
+            acc.modified = True
+        self._note_contact(session, acc)
+        return v
+
+    def _op_buf_call(self, txn: str, name: str, method: str, args: tuple,
+                     kwargs: dict) -> Any:
+        acc = self._acc(txn, name)
+        self._check_valid(acc)
+        with acc.lock:
+            buf = acc.buf
+        if buf is None:
+            raise RuntimeError(f"no read buffer for {name!r} in {txn!r}")
+        return buf.call(method, args, kwargs)
+
+    def _op_apply_log(self, txn: str, name: str,
+                      entries: List[tuple]) -> None:
+        acc = self._acc(txn, name)
+        self._check_valid(acc)
+        obj = acc.shared.holder.obj
+        for method, args, kwargs in entries:
+            getattr(obj, method)(*args, **kwargs)
+        acc.modified = True
+
+    def _op_buffer_snapshot(self, txn: str, name: str) -> None:
+        acc = self._acc(txn, name)
+        shared = acc.shared
+        with shared.header.lock:
+            inst = shared.header.instance
+        with acc.lock:
+            acc.buf = CopyBuffer(shared.holder.obj, inst,
+                                 home_node=shared.node)
+
+    def _op_ensure_checkpoint(self, txn: str, name: str) -> int:
+        acc = self._acc(txn, name)
+        shared = acc.shared
+        with acc.lock:
+            if acc.seen_instance is None:
+                with shared.header.lock:
+                    acc.seen_instance = shared.header.instance
+                acc.st = CopyBuffer(shared.holder.obj, acc.seen_instance,
+                                    home_node=shared.node)
+            return acc.seen_instance
+
+    def _op_release(self, txn: str, name: str) -> None:
+        acc = self._acc(txn, name)
+        with acc.lock:
+            if acc.released:
+                return
+        acc.shared.header.release_to(acc.pv)
+        with acc.lock:
+            acc.released = True
+
+    def _op_wait_termination(self, txn: str, name: str,
+                             timeout: Optional[float]) -> bool:
+        acc = self._acc(txn, name)
+        return acc.shared.header.wait_termination(acc.pv, timeout=timeout)
+
+    def _op_validate(self, txn: str, names: List[str]) -> List[str]:
+        """Commit step 4, batched per node: names whose instance moved."""
+        bad: List[str] = []
+        for name in names:
+            acc = self._acc(txn, name)
+            with acc.lock:
+                seen = acc.seen_instance
+            if seen is not None and acc.shared.header.instance != seen:
+                bad.append(name)
+        return bad
+
+    def _op_rollback(self, txn: str, name: str) -> None:
+        acc = self._acc(txn, name)
+        h = acc.shared.header
+        with acc.lock:
+            seen, st, modified = acc.seen_instance, acc.st, acc.modified
+        if st is not None and modified:
+            with h.lock:
+                if h.instance == seen:
+                    st.restore_into(acc.shared.holder)
+                    h.instance += 1
+
+    def _op_terminate(self, txn: str, name: str) -> None:
+        session = self._session(txn)
+        acc = self._acc(txn, name)
+        acc.shared.header.terminate_to(acc.pv)
+        acc.shared.clear_holder(session)
+        with acc.lock:
+            acc.released = True
+
+    # -- liveness ------------------------------------------------------------
+    def _op_touch(self, txn: str, name: str) -> None:
+        session = self._session(txn)
+        self._shared(name).touch(session)
+
+    def _op_clear_holder(self, txn: str, name: str) -> None:
+        session = self._session(txn)
+        self._shared(name).clear_holder(session)
+
+    def _op_heartbeat(self, client_id: str, txns: List[str]) -> None:
+        now = time.monotonic()
+        for uid in txns:
+            with self._lock:
+                session = self._sessions.get(uid)
+            if session is None:
+                continue
+            session.last_contact = now
+            with session.lock:
+                accesses = list(session._accesses.items())
+            for shared, acc in accesses:
+                # Refresh the failure detector for every object this live
+                # session still nominally holds — including released-but-
+                # unterminated ones (their last_contact would otherwise
+                # freeze while the client blocks in commit, and the object
+                # monitor would spuriously roll a *live* client back).
+                with shared._contact_lock:
+                    if shared.holding_txn is session:
+                        shared.last_contact = now
+
+    def _op_end_txn(self, txn: str) -> None:
+        with self._lock:
+            session = self._sessions.pop(txn, None)
+        if session is not None:
+            self._release_gates(session)
+
+    def _op_abandon(self, txn: str) -> None:
+        """Failed-start cleanup: expire the session now (chain-order skip
+        of its dispensed versions; nothing was accessed, so no restores)."""
+        with self._lock:
+            session = self._sessions.pop(txn, None)
+        if session is not None:
+            self._expire_session(session)
+
+    # -- introspection / control (tests, benchmarks) -------------------------
+    def _op_stats(self) -> Dict[str, Any]:
+        with self._lock:
+            sessions = len(self._sessions)
+        return {"node": self.node_name, "sessions": sessions,
+                "rollbacks": list(self.monitor.rollbacks)}
+
+    def _op_shutdown(self) -> None:
+        threading.Thread(target=self.stop, daemon=True).start()
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--name", default="node0")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--monitor-timeout", type=float, default=2.0)
+    ap.add_argument("--monitor-poll", type=float, default=0.05)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--path", action="append", default=[],
+                    help="extra sys.path entries (for unpickling bound "
+                         "object classes); repeatable")
+    ap.add_argument("--announce", action="store_true",
+                    help="print 'LISTENING host:port' once bound")
+    args = ap.parse_args(argv)
+    for p in args.path:
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    server = NodeServer(args.name, args.host, args.port,
+                        monitor_timeout=args.monitor_timeout,
+                        monitor_poll=args.monitor_poll,
+                        executor_workers=args.workers)
+    if args.announce:
+        print(f"LISTENING {server.address}", flush=True)
+    server.serve_forever()
+
+
+if __name__ == "__main__":
+    main()

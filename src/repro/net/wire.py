@@ -1,0 +1,103 @@
+"""Length-prefixed binary wire protocol (DESIGN.md §3.1).
+
+Frame format, lowest layer of the transport::
+
+    +----------------+----------------------------+
+    | length: u32 BE | payload: `length` bytes    |
+    +----------------+----------------------------+
+
+The payload is a pickled message. Messages are tuples:
+
+* request:   ``(op: str, kwargs: dict)`` — one RPC invocation;
+* response:  ``(OK, value)`` or ``(ERR, exception)``.
+
+Each pooled connection carries at most one outstanding request (strict
+request/response), so no correlation ids are needed; concurrency comes from
+the connection pool, and long-blocking RPCs (gate waits, task joins) simply
+hold their connection. A zero-length read means the peer closed the socket
+— the transport's crash-stop signal (§3.4), surfaced as
+:class:`ConnectionClosed` and mapped by the client onto
+:class:`~repro.core.api.RemoteObjectFailure`.
+
+Frames are capped at :data:`MAX_FRAME` as a corrupted-peer guard. Pickle
+implies the trust model documented in :mod:`repro.net`.
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+from typing import Any, Tuple
+
+_LEN = struct.Struct("!I")
+MAX_FRAME = 256 * 1024 * 1024  # corrupted length-word guard
+
+OK = "ok"
+ERR = "err"
+
+
+class WireError(RuntimeError):
+    """Malformed traffic (oversized frame, undecodable payload)."""
+
+
+class ConnectionClosed(ConnectionError):
+    """The peer closed the connection (crash-stop detection signal)."""
+
+
+def encode(msg: Any) -> bytes:
+    return pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def decode(payload: bytes) -> Any:
+    try:
+        return pickle.loads(payload)
+    except Exception as e:  # noqa: BLE001 - corrupt peer, not our bug
+        raise WireError(f"undecodable payload: {e!r}") from e
+
+
+def send_frame(sock: socket.socket, payload: bytes) -> None:
+    if len(payload) > MAX_FRAME:
+        raise WireError(f"frame too large: {len(payload)} bytes")
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        chunk = sock.recv(n)
+        if not chunk:
+            raise ConnectionClosed("peer closed the connection")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> bytes:
+    (length,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    if length > MAX_FRAME:
+        raise WireError(f"frame too large: {length} bytes")
+    return _recv_exact(sock, length) if length else b""
+
+
+def send_msg(sock: socket.socket, msg: Any) -> None:
+    send_frame(sock, encode(msg))
+
+
+def recv_msg(sock: socket.socket) -> Any:
+    return decode(recv_frame(sock))
+
+
+def encode_error(exc: BaseException) -> Tuple[str, Any]:
+    """Build an ``(ERR, exception)`` response, degrading gracefully when the
+    exception itself does not survive pickling."""
+    try:
+        pickle.dumps(exc)
+        return (ERR, exc)
+    except Exception:  # noqa: BLE001
+        return (ERR, RuntimeError(f"{type(exc).__name__}: {exc}"))
+
+
+def parse_address(address: str) -> Tuple[str, int]:
+    """``"host:port"`` → ``(host, port)``."""
+    host, _, port = address.rpartition(":")
+    return host or "127.0.0.1", int(port)

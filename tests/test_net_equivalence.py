@@ -1,0 +1,145 @@
+"""Transport equivalence: the same schedule behaves identically in-proc and
+over TCP — commits, aborts, blocking-wait counts, and final object state.
+
+The schedule is sequential (one client), so version order is deterministic
+and the comparison is exact; concurrent behavior is covered by the
+eigenbench zero-abort test and the early-release chain test.
+"""
+import pytest
+
+from repro.core import (AbortError, Registry, SupremumViolation, Transaction)
+from repro.net.demo import Account
+from repro.net.server import NodeServer
+
+
+def _topology_inproc():
+    reg = Registry()
+    n0 = reg.add_node("n0")
+    n1 = reg.add_node("n1")
+    reg.bind("A", Account(1000), n0)
+    reg.bind("B", Account(500), n1)
+    reg.bind("C", Account(0), n0)
+    return reg, lambda: reg.shutdown()
+
+
+def _topology_tcp():
+    servers = [NodeServer(f"n{i}", monitor_timeout=5.0).start()
+               for i in range(2)]
+    reg = Registry()
+    nodes = [reg.connect(s.address) for s in servers]
+    nodes[0].bind("A", Account(1000))
+    nodes[1].bind("B", Account(500))
+    nodes[0].bind("C", Account(0))
+    for s in servers:
+        reg.connect(s.address)
+
+    def teardown():
+        reg.shutdown()
+        for s in servers:
+            s.stop()
+
+    return reg, teardown
+
+
+def _run_schedule(reg):
+    """A fixed mixed schedule; returns the observable trace."""
+    trace = []
+
+    def record(tag, declare, body):
+        t = Transaction(reg)
+        proxies = declare(t)
+        try:
+            out = t.start(lambda tt: body(tt, *proxies))
+            trace.append((tag, "commit", out, t.stats.waits))
+        except SupremumViolation:
+            trace.append((tag, "supremum-abort", None, t.stats.waits))
+        except AbortError as e:
+            kind = "forced-abort" if e.forced else "manual-abort"
+            trace.append((tag, kind, None, t.stats.waits))
+
+    # 1. read-only transaction (asynchronous §2.7 buffering)
+    record("ro",
+           lambda t: (t.reads(reg.locate("A"), 2),),
+           lambda t, a: (a.balance(), a.balance()))
+
+    # 2. cross-node transfer (update + update), commits
+    def transfer(t, a, b):
+        a.withdraw(100)
+        b.deposit(100)
+        return a.balance()
+    record("transfer",
+           lambda t: (t.accesses(reg.locate("A"), 1, 0, 1),
+                      t.updates(reg.locate("B"), 1)),
+           transfer)
+
+    # 3. pure-write log path (§2.8.4): write-only, applied asynchronously
+    record("write-log",
+           lambda t: (t.writes(reg.locate("C"), 1),),
+           lambda t, c: c.reset())
+
+    # 4. manual abort: both objects restored at their home nodes
+    def doomed(t, a, b):
+        a.withdraw(10_000)
+        b.deposit(10_000)
+        if a.balance() < 0:
+            t.abort()
+    record("doomed",
+           lambda t: (t.accesses(reg.locate("A"), 1, 0, 1),
+                      t.updates(reg.locate("B"), 1)),
+           doomed)
+
+    # 5. supremum violation: second update exceeds the declared bound
+    record("violate",
+           lambda t: (t.updates(reg.locate("B"), 1),),
+           lambda t, b: (b.deposit(1), b.deposit(1)))
+
+    # 6. mixed read+update after all that
+    def final(t, a):
+        a.deposit(7)
+        return a.balance()
+    record("final",
+           lambda t: (t.accesses(reg.locate("A"), 1, 0, 1),),
+           final)
+
+    state = tuple(reg.locate(n).raw_call("balance") for n in "ABC")
+    return trace, state
+
+
+@pytest.mark.parametrize("case", ["semantics"])
+def test_transport_equivalence(case):
+    reg_i, down_i = _topology_inproc()
+    try:
+        trace_inproc, state_inproc = _run_schedule(reg_i)
+    finally:
+        down_i()
+    reg_t, down_t = _topology_tcp()
+    try:
+        trace_tcp, state_tcp = _run_schedule(reg_t)
+    finally:
+        down_t()
+
+    assert trace_inproc == trace_tcp, (
+        f"semantics diverged:\n inproc={trace_inproc}\n tcp={trace_tcp}")
+    assert state_inproc == state_tcp == (907, 600, 0)
+
+
+def test_eigenbench_tcp_read_dominated_zero_aborts():
+    """Acceptance: a read-dominated (9:1) Eigenbench over TCP — real server
+    subprocesses — completes with zero aborts."""
+    import benchmarks.eigenbench as eb
+    cfg = eb.EigenConfig(nodes=2, clients_per_node=2, arrays_per_node=4,
+                         txns_per_client=2, hot_ops=8, read_pct=0.9,
+                         op_time_ms=0.05)
+    r = eb.run_benchmark("optsva-cf", cfg, transport="tcp")
+    assert r.commits == 2 * 2 * 2
+    assert r.aborts == 0 and r.retries == 0
+
+
+def test_eigenbench_inproc_vs_tcp_same_commit_abort_counts():
+    import benchmarks.eigenbench as eb
+    cfg = eb.EigenConfig(nodes=2, clients_per_node=2, arrays_per_node=4,
+                         txns_per_client=2, hot_ops=6, read_pct=0.5,
+                         op_time_ms=0.05)
+    r_in = eb.run_benchmark("optsva-cf", cfg, transport="inproc")
+    r_tcp = eb.run_benchmark("optsva-cf", cfg, transport="tcp")
+    assert (r_in.commits, r_in.aborts) == (r_tcp.commits, r_tcp.aborts)

@@ -1,0 +1,220 @@
+"""§3.4 fault tolerance over the wire, with real OS processes.
+
+A client process that dies mid-transaction has its held objects rolled back
+by the *server-side* ``TransactionMonitor``; a survivor transaction then
+commits against the restored state. Also covers the registry-lock satellite
+(concurrent node joins — the dynamic-membership race) and crash-stop
+detection speed via the presence connection.
+"""
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import AbortError, Registry, Transaction
+from repro.net.demo import Account
+from repro.net.spawn import spawn_server
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+VICTIM = """
+    import os, sys
+    sys.path.insert(0, {src!r})
+    from repro.core import Registry, Transaction
+    reg = Registry()
+    reg.connect({address!r})
+    t = Transaction(reg)
+    a = t.accesses(reg.locate("V"), 1, 0, 1)
+    t.begin()
+    a.withdraw(500)              # holds V on its home node, modified it
+    print("HOLDING", flush=True)
+    sys.stdin.readline()         # wait for the kill
+"""
+
+
+def test_crashed_client_rolled_back_by_server_monitor_then_survivor_commits():
+    with spawn_server("faultnode", monitor_timeout=1.0,
+                      monitor_poll=0.05) as h:
+        h.client.call("bind", name="V", obj=Account(1000))
+
+        victim = subprocess.Popen(
+            [sys.executable, "-c",
+             textwrap.dedent(VICTIM).format(src=SRC, address=h.address)],
+            stdout=subprocess.PIPE, stdin=subprocess.PIPE, text=True)
+        assert victim.stdout.readline().strip() == "HOLDING"
+        victim.kill()              # crash-stop: no abort, no cleanup
+        victim.wait()
+
+        # survivor: blocks on V's version chain until the server-side
+        # monitor rolls the crashed holder back, then commits. A cascade
+        # (invalid instance) can hit if it buffered pre-rollback state —
+        # §2.3 says re-run.
+        reg = Registry()
+        reg.connect(h.address)
+        t0 = time.monotonic()
+        bal = None
+        attempts = 0
+        while bal is None and attempts < 10:
+            attempts += 1
+            t = Transaction(reg, wait_timeout=15.0)
+            v = t.accesses(reg.locate("V"), 1, 0, 1)
+
+            def body(_t):
+                v.deposit(10)
+                return v.balance()
+
+            try:
+                bal = t.start(body)
+            except AbortError:
+                continue
+        elapsed = time.monotonic() - t0
+        assert bal == 1010, "crashed client's withdraw must be rolled back"
+        stats = h.client.call("stats")
+        assert "V" in stats["rollbacks"] or stats["sessions"] == 0
+        # presence-drop detection: far faster than any polling detector
+        assert elapsed < 10.0
+        reg.shutdown()
+
+
+def test_two_process_cluster_survives_one_client_crash_per_node():
+    """Crash a client that holds objects on *both* servers; both home nodes
+    roll back independently and a cross-node survivor commits."""
+    with spawn_server("fn0", monitor_timeout=1.0) as h0, \
+         spawn_server("fn1", monitor_timeout=1.0) as h1:
+        h0.client.call("bind", name="V", obj=Account(100))
+        h1.client.call("bind", name="W", obj=Account(100))
+
+        script = f"""
+            import os, sys
+            sys.path.insert(0, {SRC!r})
+            from repro.core import Registry, Transaction
+            reg = Registry()
+            reg.connect({h0.address!r}); reg.connect({h1.address!r})
+            t = Transaction(reg)
+            v = t.accesses(reg.locate("V"), 1, 0, 1)
+            w = t.accesses(reg.locate("W"), 1, 0, 1)
+            t.begin()
+            v.withdraw(1); w.withdraw(1)
+            print("HOLDING", flush=True)
+            sys.stdin.readline()
+        """
+        victim = subprocess.Popen(
+            [sys.executable, "-c", textwrap.dedent(script)],
+            stdout=subprocess.PIPE, stdin=subprocess.PIPE, text=True)
+        assert victim.stdout.readline().strip() == "HOLDING"
+        victim.kill()
+        victim.wait()
+
+        reg = Registry()
+        reg.connect(h0.address)
+        reg.connect(h1.address)
+        total = None
+        for _ in range(10):
+            t = Transaction(reg, wait_timeout=15.0)
+            v = t.reads(reg.locate("V"), 1)
+            w = t.reads(reg.locate("W"), 1)
+            try:
+                total = t.start(lambda _t: v.balance() + w.balance())
+                break
+            except AbortError:
+                continue
+        assert total == 200
+        reg.shutdown()
+
+
+def test_dead_clients_parked_lastwrite_log_is_never_applied():
+    """Review regression: a crashed client's parked §2.8.4 lw-apply task is
+    woken when the predecessor's release drains the header — it must no-op
+    (the transaction is dead), and the dead version must be skipped in
+    chain order, not applied."""
+    from repro.net.server import NodeServer
+    from repro.net.client import NodeClient
+
+    srv = NodeServer("lwnode", monitor_timeout=1.0, monitor_poll=0.05).start()
+    try:
+        c = NodeClient(srv.address)
+        c.call("bind", name="X", obj=Account(100))
+
+        # predecessor: holds X in this process (open access, not finished)
+        reg = Registry()
+        reg.connect(srv.address)
+        t1 = Transaction(reg)
+        x1 = t1.accesses(reg.locate("X"), 1, 0, 2)   # 2nd update never comes
+        t1.begin()
+        x1.deposit(5)                      # holds X live (not released): 105
+
+        # victim: pure write parks an lw-apply task behind t1, then dies
+        script = f"""
+            import os, sys
+            sys.path.insert(0, {SRC!r})
+            from repro.core import Registry, Transaction
+            reg = Registry()
+            reg.connect({srv.address!r})
+            t = Transaction(reg)
+            x = t.writes(reg.locate("X"), 1)
+            t.begin()
+            x.reset()                      # logged write -> parked lw-apply
+            print("PARKED", flush=True)
+            sys.stdin.readline()
+        """
+        victim = subprocess.Popen(
+            [sys.executable, "-c", textwrap.dedent(script)],
+            stdout=subprocess.PIPE, stdin=subprocess.PIPE, text=True)
+        assert victim.stdout.readline().strip() == "PARKED"
+        victim.kill()
+        victim.wait()
+        time.sleep(0.5)                    # expiry lands (presence drop)
+
+        # dead version must not have jumped the chain while t1 still holds
+        shared = srv.registry.locate("X")
+        assert shared.header.lv == 0 and shared.holder.obj.bal == 105
+
+        t1.commit()                        # wakes the parked task + skip
+        deadline = time.monotonic() + 5.0
+        while shared.header.ltv < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert shared.header.ltv >= 2      # dead pv skipped in order
+        assert shared.holder.obj.bal == 105, \
+            "dead client's reset() must never be applied"
+        c.close()
+        reg.shutdown()
+    finally:
+        srv.stop()
+
+
+def test_registry_node_lookup_safe_under_dynamic_joins():
+    """Satellite: Registry.node()/nodes raced dict mutation unlocked; with
+    nodes joining dynamically (reg.connect) the read must be consistent."""
+    reg = Registry()
+    stop = threading.Event()
+    errors = []
+
+    def joiner():
+        i = 0
+        while not stop.is_set():
+            reg.add_node(f"dyn{i}")
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            try:
+                for n in reg.nodes:
+                    assert n.name
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=joiner)] + \
+              [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(0.5)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors
+    reg.shutdown()

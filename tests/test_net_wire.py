@@ -1,0 +1,79 @@
+"""Wire-protocol unit tests: framing, codec, error mapping (repro.net.wire)."""
+import socket
+import threading
+
+import pytest
+
+from repro.net import wire
+
+
+def _sock_pair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+def test_frame_roundtrip():
+    a, b = _sock_pair()
+    wire.send_msg(a, ("op", {"x": 1, "y": [1, 2, 3]}))
+    assert wire.recv_msg(b) == ("op", {"x": 1, "y": [1, 2, 3]})
+    a.close(), b.close()
+
+
+def test_large_frame_roundtrip():
+    a, b = _sock_pair()
+    payload = ("blob", {"data": b"\x00" * (2 * 1024 * 1024)})
+    got = {}
+    th = threading.Thread(target=lambda: got.setdefault("v", wire.recv_msg(b)))
+    th.start()
+    wire.send_msg(a, payload)
+    th.join(timeout=10)
+    assert got["v"] == payload
+    a.close(), b.close()
+
+
+def test_partial_reads_reassemble():
+    """recv_frame must tolerate the kernel splitting frames arbitrarily."""
+    a, b = _sock_pair()
+    data = wire.encode(("op", {"k": "v" * 10_000}))
+    framed = len(data).to_bytes(4, "big") + data
+    def dribble():
+        for i in range(0, len(framed), 1017):
+            a.sendall(framed[i:i + 1017])
+    th = threading.Thread(target=dribble)
+    th.start()
+    assert wire.recv_msg(b) == ("op", {"k": "v" * 10_000})
+    th.join()
+    a.close(), b.close()
+
+
+def test_peer_close_raises_connection_closed():
+    a, b = _sock_pair()
+    a.close()
+    with pytest.raises(wire.ConnectionClosed):
+        wire.recv_frame(b)
+    b.close()
+
+
+def test_oversized_frame_rejected():
+    a, b = _sock_pair()
+    a.sendall((wire.MAX_FRAME + 1).to_bytes(4, "big"))
+    with pytest.raises(wire.WireError):
+        wire.recv_frame(b)
+    a.close(), b.close()
+
+
+def test_error_encoding_degrades_gracefully():
+    class Unpicklable(RuntimeError):
+        def __reduce__(self):
+            raise TypeError("nope")
+    status, err = wire.encode_error(Unpicklable("boom"))
+    assert status == wire.ERR
+    assert isinstance(err, RuntimeError) and "boom" in str(err)
+    # a normal exception survives as itself
+    status, err = wire.encode_error(TimeoutError("late"))
+    assert isinstance(err, TimeoutError)
+
+
+def test_parse_address():
+    assert wire.parse_address("127.0.0.1:88") == ("127.0.0.1", 88)
+    assert wire.parse_address(":88") == ("127.0.0.1", 88)
