@@ -1,0 +1,77 @@
+"""Bench-delta gate: fail CI when the TCP wire overhead regresses.
+
+Compares a freshly measured transport-overhead JSON against the checked-in
+baseline (the PR's ``BENCH_PR<n>.json``): for every tcp row present in
+both, the fresh ``wire_overhead_us`` must not exceed the baseline's by
+more than ``--max-regress`` (relative). Missing rows in the fresh file are
+an error; extra rows are ignored. Any abort on a tcp row fails the gate —
+the transport must stay semantically clean while getting faster.
+
+Usage::
+
+    python -m benchmarks.check_bench_delta BENCH_PR3.json fresh.json \
+        --max-regress 0.20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+
+def _tcp_rows(doc: dict) -> Dict[str, dict]:
+    return {r["name"]: r for r in doc.get("rows", ())
+            if "wire_overhead_us" in r}
+
+
+def check(baseline: dict, fresh: dict, max_regress: float) -> int:
+    base_rows = _tcp_rows(baseline)
+    fresh_rows = _tcp_rows(fresh)
+    if not base_rows:
+        print("delta-check: baseline has no tcp rows — nothing to gate")
+        return 0
+    failures = []
+    for name, base in sorted(base_rows.items()):
+        row = fresh_rows.get(name)
+        if row is None:
+            failures.append(f"{name}: missing from fresh results")
+            continue
+        if row.get("aborts"):
+            failures.append(f"{name}: {row['aborts']} aborts (expected 0)")
+        base_us = float(base["wire_overhead_us"])
+        new_us = float(row["wire_overhead_us"])
+        limit = base_us * (1.0 + max_regress)
+        delta = 100.0 * (new_us - base_us) / base_us if base_us else 0.0
+        verdict = "OK" if new_us <= limit else "REGRESSION"
+        print(f"{name}: baseline={base_us:.1f}us fresh={new_us:.1f}us "
+              f"({delta:+.1f}%, limit +{100 * max_regress:.0f}%) {verdict}")
+        if new_us > limit:
+            failures.append(
+                f"{name}: wire_overhead_us {new_us:.1f} exceeds "
+                f"{limit:.1f} (baseline {base_us:.1f} +{100 * max_regress:.0f}%)")
+    if failures:
+        print("\nbench-delta gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench-delta gate passed")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="checked-in BENCH_PR<n>.json")
+    ap.add_argument("fresh", help="freshly measured transport bench JSON")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="allowed relative wire_overhead_us increase")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    sys.exit(check(baseline, fresh, args.max_regress))
+
+
+if __name__ == "__main__":
+    main()

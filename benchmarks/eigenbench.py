@@ -273,6 +273,11 @@ def _build_tcp(cfg: EigenConfig):
 
     from repro.net.spawn import spawn_cluster
 
+    # Replies ride reader-thread wakeups on the mux connections; the
+    # default 5 ms GIL switch interval turns each wakeup into multi-ms
+    # convoy latency once many client threads run. (The node servers set
+    # the same interval for themselves in repro.net.server.main.)
+    sys.setswitchinterval(0.001)
     repo_root = str(Path(__file__).resolve().parents[1])
     # Use the canonical module's RefCell: when this file runs as __main__
     # (python benchmarks/eigenbench.py or python -m benchmarks.eigenbench),

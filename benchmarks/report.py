@@ -28,6 +28,7 @@ def write_bench_json(path, rows, meta=None) -> None:
         },
         "rows": rows,
     }
+    Path(path).parent.mkdir(parents=True, exist_ok=True)
     Path(path).write_text(json.dumps(payload, indent=2) + "\n")
     # status to stderr: stdout carries the name,us_per_call,derived CSV
     print(f"wrote {path} ({len(rows)} rows)", file=sys.stderr, flush=True)

@@ -68,6 +68,34 @@ class Task:
             self.done.set()
 
 
+_wake_tl = threading.local()
+
+
+def defer_wake_inline() -> None:
+    """Mark the calling thread latency-critical (e.g. a connection reader
+    multiplexing many conversations): ``wake_inline`` tasks woken by a
+    counter advance on this thread are enqueued to the executor instead of
+    running on it, so foreign transactions' service time never stalls it."""
+    _wake_tl.defer = True
+
+
+def _run_trampolined(task: Task) -> None:
+    """Run a woken task on the current thread, flattening cascades: if a
+    task's release wakes further ``wake_inline`` tasks, they queue on this
+    thread-local deque and run iteratively after it — depth-first order,
+    constant stack depth."""
+    pending = getattr(_wake_tl, "pending", None)
+    if pending is not None:          # already inside a cascade: defer
+        pending.append(task)
+        return
+    _wake_tl.pending = pending = deque((task,))
+    try:
+        while pending:
+            pending.popleft().run()
+    finally:
+        _wake_tl.pending = None
+
+
 class Executor:
     """Per-node executor consuming a ready-queue fed by header callbacks."""
 
@@ -97,7 +125,9 @@ class Executor:
             self._wakeup.notify()
 
     def submit(self, header: VersionHeader, kind: str, pv: int,
-               code: Callable[[], None], name: str = "task") -> Task:
+               code: Callable[[], None], name: str = "task",
+               inline_ready: Optional[bool] = None,
+               wake_inline: bool = False) -> Task:
         """Submit ``code`` gated on ``(header, kind, pv)``.
 
         If the condition is not yet satisfied the task parks on the header's
@@ -107,13 +137,39 @@ class Executor:
         before the object can be released anyway, and two context switches
         through the executor thread are pure scheduling overhead — the
         asynchrony of §2.7/§2.8.4 buys overlap only while the gate is
-        closed. (``inline_ready=False`` restores strict asynchrony.)"""
+        closed. (``inline_ready=False`` restores strict asynchrony.)
+
+        ``inline_ready`` overrides the executor-wide default per call (the
+        node server decides per call site: one-way kickoffs arriving on a
+        connection reader defer ready tasks to the executor, while a
+        dispense handler — pool worker, or reader on its uncontended fast
+        path, where the work is a bounded state snapshot — runs them
+        inline so the result rides back on the dispense reply).
+
+        ``wake_inline=True`` additionally runs a *parked* task directly on
+        the thread whose counter advance opened its gate, instead of
+        bouncing it through the ready-queue — one fewer context switch on
+        every contended wakeup. Task code never blocks (its only
+        precondition IS the gate), so this cannot deadlock; a release
+        cascade (a woken task whose own release wakes the next) is
+        flattened by a per-thread trampoline, so arbitrarily long waiter
+        chains run iteratively, never recursively."""
         with self._lock:
             if self._stopping:
                 raise RuntimeError("executor is shut down")
         task = Task(code, name)
-        if not header.park(kind, pv, lambda: self._enqueue(task)):
-            if self._inline_ready:
+        inline = self._inline_ready if inline_ready is None else inline_ready
+        if wake_inline:
+            def on_wake() -> None:
+                if getattr(_wake_tl, "defer", False):
+                    self._enqueue(task)   # latency-critical waker thread
+                else:
+                    _run_trampolined(task)
+        else:
+            def on_wake() -> None:
+                self._enqueue(task)
+        if not header.park(kind, pv, on_wake):
+            if inline:
                 task.run()
             else:
                 self._enqueue(task)

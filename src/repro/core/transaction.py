@@ -58,6 +58,24 @@ from .versioning import skip_version
 _txn_ids = itertools.count(1)
 
 
+class Completed:
+    """Already-resolved completion handle (the in-process "future").
+
+    The commit/abort hot paths issue their per-node batched operations
+    first and await results second (scatter-gather); the in-process
+    transport executes at issue time and hands back one of these, so
+    :class:`Transaction` sequencing stays transport-agnostic.
+    """
+
+    __slots__ = ("_value",)
+
+    def __init__(self, value: Any = None):
+        self._value = value
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        return self._value
+
+
 class ObjectAccess:
     """Transaction-local bookkeeping for one shared object, plus the
     home-node state operations of §2.7-§2.8 (the transport boundary).
@@ -118,49 +136,61 @@ class ObjectAccess:
     # ------------------------------------------------------------------ #
     # Delegation boundary: state operations, executed at the home node.  #
     # ------------------------------------------------------------------ #
+    def _ro_buffer_code(self) -> None:
+        """§2.7 task body: snapshot to ``buf``, then release immediately.
+        Shared with the node server's session records, which subclass this
+        access and wrap the body with §3.4 expiry checks."""
+        shared = self.shared
+        with shared.header.lock:
+            inst = shared.header.instance
+        with self.lock:
+            self.seen_instance = inst
+            self.buf = CopyBuffer(shared.holder.obj, inst,
+                                  home_node=shared.node)
+        # Snapshot taken: the object is immediately released (§2.7).
+        shared.header.release_to(self.pv)
+        with self.lock:
+            self.released = True
+
+    def _lw_apply_code(self) -> None:
+        """§2.8.4 task body: checkpoint, apply the write log, release."""
+        shared = self.shared
+        with shared.header.lock:
+            inst = shared.header.instance
+        st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+        self.log.apply_to(shared.holder.obj)
+        buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+        with self.lock:
+            self.seen_instance = inst
+            self.st = st
+            self.buf = buf
+            self.modified = True
+            self.holds_access = True
+        shared.header.release_to(self.pv)
+        with self.lock:
+            self.released = True
+
+    def _owner_label(self) -> str:
+        return f"T{self.txn.id}"
+
+    def _submit_task(self, label: str, kind: str,
+                     code: Callable[[], None]) -> "Task":
+        """Hand a gated task to the home node's executor. The node server
+        overrides this to defer ready tasks off its reader thread and to
+        push a completion note to the client when the task finishes."""
+        return self.shared.node.executor.submit(
+            self.shared.header, kind, self.pv, code,
+            name=f"{label}:{self.shared.name}:{self._owner_label()}")
+
     def spawn_ro_buffer(self, kind: str) -> None:
         """§2.7: asynchronously snapshot-and-release a read-only object."""
-        shared = self.shared
-
-        def code() -> None:
-            with shared.header.lock:
-                inst = shared.header.instance
-            with self.lock:
-                self.seen_instance = inst
-                self.buf = CopyBuffer(shared.holder.obj, inst,
-                                      home_node=shared.node)
-            # Snapshot taken: the object is immediately released (§2.7).
-            shared.header.release_to(self.pv)
-            with self.lock:
-                self.released = True
-
-        self.release_task = shared.node.executor.submit(
-            shared.header, kind, self.pv, code,
-            name=f"ro-buffer:{shared.name}:T{self.txn.id}")
+        self.release_task = self._submit_task("ro-buffer", kind,
+                                              self._ro_buffer_code)
 
     def spawn_lastwrite_apply(self, kind: str) -> None:
         """§2.8.4: asynchronously checkpoint, apply the write log, release."""
-        shared = self.shared
-
-        def code() -> None:
-            with shared.header.lock:
-                inst = shared.header.instance
-            st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
-            self.log.apply_to(shared.holder.obj)
-            buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
-            with self.lock:
-                self.seen_instance = inst
-                self.st = st
-                self.buf = buf
-                self.modified = True
-                self.holds_access = True
-            shared.header.release_to(self.pv)
-            with self.lock:
-                self.released = True
-
-        self.release_task = shared.node.executor.submit(
-            shared.header, kind, self.pv, code,
-            name=f"lw-apply:{shared.name}:T{self.txn.id}")
+        self.release_task = self._submit_task("lw-apply", kind,
+                                              self._lw_apply_code)
 
     def join_release_task(self) -> None:
         """Wait for the outstanding asynchronous buffer/apply task."""
@@ -185,6 +215,25 @@ class ObjectAccess:
         self.holds_access = True
         shared.touch(self.txn)
         return blocked
+
+    def open_and_call(self, kind: str, timeout: Optional[float], method: str,
+                      args: tuple, kwargs: dict, *, modifies: bool,
+                      validity: Optional[Callable[[], None]] = None):
+        """First direct access of §2.8.2-3 fused: wait the gate, checkpoint,
+        apply any buffered writes, execute the method. One operation at the
+        home node — remote transports collapse it into a single RPC.
+        ``validity`` (the transaction's cross-object §2.3 check) runs after
+        the gate wait and before the call, preserving the in-process
+        check-before-execute order; remote transports ignore it — their
+        per-object check is enforced by the home node inside the RPC,
+        exactly as on every other remote operation. Returns
+        ``(blocked, value)``."""
+        blocked = self.open_access(kind, timeout)
+        self.apply_log()
+        if validity is not None:
+            validity()
+        v = self.raw_call(method, args, kwargs, modifies=modifies)
+        return blocked, v
 
     def raw_call(self, method: str, args: tuple, kwargs: dict, *,
                  modifies: bool) -> Any:
@@ -215,6 +264,13 @@ class ObjectAccess:
         with shared.header.lock:
             inst = shared.header.instance
         self.buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+
+    def snapshot_and_release(self) -> None:
+        """§2.8.3-4 release point, fused: buffer for trailing local reads,
+        then release. Remote transports turn this into one pipelined
+        one-way message — the writer's hot path never waits for it."""
+        self.snapshot_buf()
+        self.release()
 
     def ensure_checkpoint(self) -> None:
         """Commit step 3: checkpoint an object never accessed directly."""
@@ -269,6 +325,18 @@ class ObjectAccess:
         """Transport hook, called before any version lock is acquired
         (remote transports register liveness here)."""
 
+    def dispense_many(self, domains: List[List["ObjectAccess"]]) -> None:
+        """Transport hook: lock-and-dispense for several remote dispense
+        domains, already sorted in the global 2PL order. Every access
+        class with a non-``None`` ``dispense_domain`` must override this;
+        the TCP transport *chains* the request server-to-server (node k
+        forwards to node k+1), so a multi-node start costs the client one
+        round trip while gates are still acquired in global order and held
+        until :meth:`release_version_locks` (2PL preserved)."""
+        raise NotImplementedError(
+            "remote dispense domains must implement dispense_many "
+            "(§2.10.2 global-order lock-and-dispense)")
+
     def abandon(self) -> None:
         """Failed-start cleanup: skip this access's dispensed version *in
         chain order* (never bypassing a live predecessor's unreleased
@@ -279,6 +347,103 @@ class ObjectAccess:
         """Commit-time validation for all accesses of one dispense domain
         in one step (remote transports batch this into a single RPC)."""
         return all(a.valid_commit() for a in accs)
+
+    # ------------------------------------------------------------------ #
+    # Issue/await split: per-domain batched steps of commit and abort.   #
+    # The in-process transport executes at issue time and returns        #
+    # Completed; remote transports issue one pipelined RPC per node and  #
+    # return a wire future, so the per-node round trips of one commit    #
+    # step overlap (scatter-gather) instead of accumulating serially.    #
+    # ------------------------------------------------------------------ #
+    def commit_prep(self) -> None:
+        """Commit step 3 for one access: checkpoint if never accessed,
+        apply any left-over write log, release."""
+        self.ensure_checkpoint()
+        self.apply_log()
+        self.release()
+
+    def wait_termination_async(self, timeout: Optional[float]) -> Completed:
+        """Issue the commit-condition wait (§2.8.5). ``result()`` returns
+        True iff the waiter actually blocked."""
+        return Completed(self.wait_termination(timeout))
+
+    def wait_termination_batch_async(self, accs: List["ObjectAccess"],
+                                     timeout: Optional[float],
+                                     best_effort: bool = False) -> Completed:
+        """Issue commit step 2 for all accesses of this dispense domain;
+        ``result()`` is the number of waits that actually blocked. Remote
+        transports run the whole batch in one RPC, and the batches of
+        different home nodes wait concurrently. ``best_effort`` (the abort
+        path) keeps waiting the remaining accesses when one times out."""
+        blocked = 0
+        for a in accs:
+            try:
+                if a.wait_termination(timeout):
+                    blocked += 1
+            except (TimeoutError, TransactionError):
+                if not best_effort:
+                    raise
+        return Completed(blocked)
+
+    def commit_wave1_async(self, accs: List["ObjectAccess"],
+                           timeout: Optional[float]) -> Completed:
+        """Commit steps 2-4 for this dispense domain, issued as one unit:
+        wait the commit condition per object, then checkpoint/apply/release
+        per object, then validate the batch. ``result()`` is ``(blocked,
+        ok)`` — how many waits blocked, and the validation verdict. Remote
+        transports run the whole wave in a single RPC per node, and the
+        waves of different home nodes overlap; termination (step 5) stays a
+        separate wave because no object may terminate-as-committed until
+        *every* domain's validation verdict is in."""
+        blocked = sum(1 for a in accs if a.wait_termination(timeout))
+        for a in accs:
+            a.commit_prep()
+        return Completed((blocked, self.valid_commit_batch(accs)))
+
+    def valid_commit_batch_async(self, accs: List["ObjectAccess"]) -> Completed:
+        """Issue commit step 4 for this domain; ``result()`` is the verdict."""
+        return Completed(self.valid_commit_batch(accs))
+
+    def commit_solo_async(self, accs: List["ObjectAccess"],
+                          timeout: Optional[float]) -> Completed:
+        """Commit steps 2-5 when the whole access set lives in ONE dispense
+        domain: the validation verdict is local to it, so termination can
+        be decided in the same unit — one RPC for the entire commit on a
+        remote transport. ``result()`` is ``(blocked, ok)``; on ``ok`` the
+        accesses are already terminated, on failure nothing terminated."""
+        blocked, ok = self.commit_wave1_async(accs, timeout).result()
+        if ok:
+            self.finish_batch_async(accs).result()
+        return Completed((blocked, ok))
+
+    def finish_batch_async(self, accs: List["ObjectAccess"],
+                           best_effort: bool = False) -> Completed:
+        """Issue release+terminate for this domain (commit step 5 / abort
+        step 4). ``best_effort`` swallows per-access transactional errors —
+        the abort path must keep going past dead home nodes."""
+        for a in accs:
+            try:
+                a.release()
+                a.terminate()
+            except TransactionError:
+                if not best_effort:
+                    raise
+        return Completed()
+
+    def rollback_batch_async(self, accs: List["ObjectAccess"]) -> Completed:
+        """Issue abort step 3 (checkpoint restores) for this domain;
+        always best-effort (an unreachable home node restores via §3.4)."""
+        for a in accs:
+            try:
+                a.rollback()
+            except TransactionError:
+                pass
+        return Completed()
+
+    def raise_deferred(self) -> None:
+        """Sync point: surface deferred errors of this access's pipelined
+        one-way operations (remote transports override; in-process
+        operations are synchronous, so there is never anything deferred)."""
 
     def note_contact(self) -> None:
         """§3.4 heartbeat: an actual holder refreshes the failure detector."""
@@ -322,22 +487,25 @@ def dispense_for(order: List[ObjectAccess]) -> None:
                           key=lambda h: h.uid)
     for h in locked_local:
         h.lock.acquire()
-    dispensed_domains: List[List[ObjectAccess]] = []
+    remote_domains = [remote[d] for d in sorted(remote)]
+    dispensed_remote = False
     try:
-        for domain in sorted(remote):
-            accs = remote[domain]
-            accs[0].dispense_batch(accs)   # locks + dispenses, holds locks
-            dispensed_domains.append(accs)
+        if remote_domains:
+            # One chained lock-and-dispense over all remote domains in
+            # global order; every domain's gates stay held (2PL).
+            remote_domains[0][0].dispense_many(remote_domains)
+            dispensed_remote = True
         for a in local:
             a.pv = a.shared.header.dispense()
     finally:
         for h in reversed(locked_local):
             h.lock.release()
-        for accs in dispensed_domains:
-            try:
-                accs[0].release_version_locks()
-            except TransactionError:
-                pass   # that node died; its session reaper frees the gates
+        if dispensed_remote:
+            for accs in remote_domains:
+                try:
+                    accs[0].release_version_locks()
+                except TransactionError:
+                    pass   # that node died; its reaper frees the gates
 
 
 class TxProxy:
@@ -377,6 +545,11 @@ class Transaction:
                  client_node: Optional[Node] = None,
                  wait_timeout: Optional[float] = None):
         self.id = next(_txn_ids)
+        #: retry incarnation counter: remote transports key their sessions
+        #: and task/deferred-error bookkeeping on (id, incarnation), so a
+        #: late pipelined notification from a rolled-back incarnation can
+        #: never pollute its successor.
+        self.incarnation = 0
         self.registry = registry
         self.irrevocable = irrevocable
         self.client_node = client_node
@@ -449,9 +622,13 @@ class Transaction:
                 a.finish_session()
             self._terminated = True
             raise
-        # §2.7/§2.8.1: asynchronously snapshot-and-release read-only objects.
+        # §2.7/§2.8.1: asynchronously snapshot-and-release read-only
+        # objects. Remote transports already fired these kickoffs inside
+        # the dispense round trip (release_task set); only the in-process
+        # domain still needs its tasks spawned here.
         for a in self._order:
-            if a.sup.read_only and a.sup.reads > 0:
+            if (a.sup.read_only and a.sup.reads > 0
+                    and a.release_task is None):
                 a.spawn_ro_buffer(self._gate_kind)
 
     @property
@@ -513,10 +690,16 @@ class Transaction:
             a.rc += 1
             return a.buf_call(method, args, kwargs)
         if not a.holds_access:
-            self._wait_access_and_checkpoint(a)
-            a.apply_log()
-        self._validity_check()
-        v = a.raw_call(method, args, kwargs, modifies=False)
+            # First direct access: gate wait + checkpoint + log apply +
+            # the read itself, fused into one home-node operation.
+            blocked, v = a.open_and_call(self._gate_kind, self.wait_timeout,
+                                         method, args, kwargs, modifies=False,
+                                         validity=self._validity_check)
+            if blocked:
+                self.stats.waits += 1
+        else:
+            self._validity_check()
+            v = a.raw_call(method, args, kwargs, modifies=False)
         a.rc += 1
         if a.all_suprema_met():   # last operation of any kind: release (§2.8.2)
             a.release()
@@ -525,15 +708,18 @@ class Transaction:
     # -- update (§2.8.3) -----------------------------------------------------
     def _update(self, a: ObjectAccess, method: str, args: tuple, kwargs: dict) -> Any:
         if not a.holds_access:
-            self._wait_access_and_checkpoint(a)
-            a.apply_log()
-        self._validity_check()
-        v = a.raw_call(method, args, kwargs, modifies=True)
+            blocked, v = a.open_and_call(self._gate_kind, self.wait_timeout,
+                                         method, args, kwargs, modifies=True,
+                                         validity=self._validity_check)
+            if blocked:
+                self.stats.waits += 1
+        else:
+            self._validity_check()
+            v = a.raw_call(method, args, kwargs, modifies=True)
         a.uc += 1
         if a.writes_updates_done():
             # No further writes/updates: buffer for trailing local reads, release.
-            a.snapshot_buf()
-            a.release()
+            a.snapshot_and_release()
         return v
 
     # -- write (§2.8.4) ------------------------------------------------------
@@ -545,8 +731,7 @@ class Transaction:
             a.wc += 1
             if a.writes_updates_done():
                 # Paper §2.8.4 says "cloned to st"; that must be buf (see module doc).
-                a.snapshot_buf()
-                a.release()
+                a.snapshot_and_release()
             return v
         # No preceding reads/updates: log-buffer the write, no synchronization.
         a.record_write(method, args, kwargs)
@@ -557,10 +742,6 @@ class Transaction:
         return None
 
     # -- shared helpers --------------------------------------------------------
-    def _wait_access_and_checkpoint(self, a: ObjectAccess) -> None:
-        if a.open_access(self._gate_kind, self.wait_timeout):
-            self.stats.waits += 1
-
     def _validity_check(self) -> None:
         """Force an abort as soon as any observed instance was invalidated (§2.3)."""
         for a in self._order:
@@ -593,31 +774,51 @@ class Transaction:
             self._do_abort()
             self.stats.aborts += 1
             raise AbortError(f"asynchronous task failed: {task_error}", forced=True)
+        groups = self._domain_groups()
         try:
-            # 2. Wait until the commit condition holds for every object.
-            for a in self._order:
-                if a.wait_termination(self.wait_timeout):
-                    self.stats.waits += 1
-            # 3. Checkpoint untouched objects; apply left-over logs; release.
-            for a in self._order:
-                a.ensure_checkpoint()
-                a.apply_log()
-                a.release()
-            # 4. Validity check: abort if anything observed was invalidated
-            # (batched per dispense domain: one RPC per remote node).
-            groups: Dict[Optional[tuple], List[ObjectAccess]] = {}
-            for a in self._order:
-                groups.setdefault(a.dispense_domain, []).append(a)
-            if not all(accs[0].valid_commit_batch(accs)
-                       for accs in groups.values()):
+            if len(groups) == 1:
+                # Single dispense domain: steps 2-5 are one unit (one RPC
+                # on a remote transport) — the validation verdict needs no
+                # cross-domain gather before termination.
+                (accs,) = groups.values()
+                blocked, ok = accs[0].commit_solo_async(
+                    accs, self.wait_timeout).result()
+                self.stats.waits += blocked
+            else:
+                # 2-4. One scatter-gathered wave per dispense domain: wait
+                # the commit condition, checkpoint untouched objects /
+                # apply left-over logs / release, validate — a single RPC
+                # per remote node, all nodes proceeding concurrently.
+                # (Releasing one node's objects before another node's
+                # commit condition passed is safe: step 3 released before
+                # step 4 validated already, and a later abort restores +
+                # bumps epochs exactly as before.)
+                wave1 = [accs[0].commit_wave1_async(accs, self.wait_timeout)
+                         for accs in groups.values()]
+                ok = True
+                for f in wave1:
+                    blocked, valid = f.result()
+                    self.stats.waits += blocked
+                    ok = ok and valid
+            if not ok:
                 self._do_abort()
                 self.stats.aborts += 1
                 raise AbortError(
                     "commit-time validation failed (cascading abort)",
                     forced=True)
-            # 5. Terminate: advance ltv on every object.
-            for a in self._order:
-                a.terminate()
+            if len(groups) > 1:
+                # 5. Terminate: advance ltv on every object, per-node
+                # batches in one concurrent wave — only after every
+                # domain's validation verdict is in.
+                ffuts = [accs[0].finish_batch_async(accs)
+                         for accs in groups.values()]
+                for f in ffuts:
+                    f.result()
+            # Final sync point: any deferred error of a pipelined one-way
+            # op (early release notifications etc.) surfaces before the
+            # commit is reported successful.
+            for accs in groups.values():
+                accs[0].raise_deferred()
         except TimeoutError as e:
             # A predecessor never terminated (e.g. crashed with no monitor):
             # leaving our objects unreleased would wedge every successor, so
@@ -656,6 +857,20 @@ class Transaction:
         self.stats.retries += 1
         raise RetrySignal("transaction retry requested")
 
+    def _domain_groups(self) -> Dict[Optional[tuple], List[ObjectAccess]]:
+        """Accesses grouped by dispense domain (one group per remote node,
+        plus the in-process group), remote domains first: issuing a wave
+        over the groups in this order sends every remote (non-blocking)
+        RPC before the in-process group's Completed executes-at-issue —
+        otherwise a mixed-transport commit would serialize the local wait
+        in front of the remote ones instead of overlapping them."""
+        groups: Dict[Optional[tuple], List[ObjectAccess]] = {}
+        for a in self._order:
+            groups.setdefault(a.dispense_domain, []).append(a)
+        if None in groups:
+            groups[None] = groups.pop(None)   # move in-process group last
+        return groups
+
     def _do_abort(self) -> None:
         if self._terminated:
             return
@@ -665,31 +880,55 @@ class Transaction:
                 a.join_release_task()
             except TransactionError:
                 pass
-        # 2. Wait for the commit condition per object.
-        for a in self._order:
+        # 2. Wait for the commit condition per object (issued per dispense
+        # domain, then awaited — remote waits overlap across nodes).
+        waits = []
+        for accs in self._domain_groups().values():
             try:
-                a.wait_termination(self.wait_timeout)
+                waits.append(accs[0].wait_termination_batch_async(
+                    accs, self.wait_timeout, best_effort=True))
             except (TimeoutError, TransactionError):
                 pass  # predecessor crashed, or our home node/session is gone
-                      # (§3.4) — either way the monitor machinery cleans up
-        # 3. Restore modified objects from their checkpoints, oldest-restore-wins.
-        for a in self._order:
-            if a.terminated:
-                # Already terminated (partial commit step 5 before a later
-                # object's node died): a successor may have committed on
-                # this object since — restoring would erase its writes.
+        for w in waits:
+            try:
+                w.result()
+            except (TimeoutError, TransactionError):
+                pass  # (§3.4) — either way the monitor machinery cleans up
+        # 3. Restore modified objects from their checkpoints,
+        # oldest-restore-wins; per-node batches in one concurrent wave.
+        # Already-terminated accesses are skipped (partial commit step 5
+        # before a later object's node died): a successor may have
+        # committed on the object since — restoring would erase its writes.
+        groups = {dom: [a for a in accs if not a.terminated]
+                  for dom, accs in self._domain_groups().items()}
+        rfuts = []
+        for accs in groups.values():
+            if not accs:
                 continue
             try:
-                a.rollback()
+                rfuts.append(accs[0].rollback_batch_async(accs))
             except TransactionError:
                 pass  # home node unreachable/expired: its monitor restores
-        # 4. Release and terminate every object.
-        for a in self._order:
+        for f in rfuts:
             try:
-                a.release()
-                a.terminate()
+                f.result()
+            except TransactionError:
+                pass
+        # 4. Release and terminate every object (best-effort per node).
+        ffuts = []
+        for accs in groups.values():
+            if not accs:
+                continue
+            try:
+                ffuts.append(accs[0].finish_batch_async(accs,
+                                                        best_effort=True))
             except TransactionError:
                 pass  # home node unreachable/expired: self-releases there
+        for f in ffuts:
+            try:
+                f.result()
+            except TransactionError:
+                pass
         for a in self._order:
             a.finish_session()
         self._terminated = True
@@ -740,6 +979,7 @@ class Transaction:
             mapping[a.shared] = na
         self._order = fresh
         self._accesses = mapping
+        self.incarnation += 1
         self._started = False
         self._terminated = False
         self.begin()

@@ -10,13 +10,17 @@ wire. Object state never moves for a buffered write.
 
 Modules:
 
-* :mod:`repro.net.wire`   — length-prefixed binary framing + message codec;
-* :mod:`repro.net.client` — connection-pooled RPC client with the liveness
-  heartbeat (one per client process per server);
+* :mod:`repro.net.wire`   — length-prefixed binary framing + the tagged
+  message codec (requests, one-way messages, replies with piggybacked
+  notes, server pushes);
+* :mod:`repro.net.client` — multiplexed pipelined RPC client
+  (``call_async`` futures, fire-and-forget ``notify``, deferred one-way
+  errors, pushed task notes) with liveness riding the same link;
 * :mod:`repro.net.server` — the node server process: hosts
   ``SharedObject``/``VersionHeader``/``Executor`` plus per-transaction
-  *sessions* (the server-side halves of ``ObjectAccess``) and the §3.4
-  :class:`~repro.core.faults.TransactionMonitor`;
+  *sessions* (whose access records subclass ``ObjectAccess``) and the §3.4
+  :class:`~repro.core.faults.TransactionMonitor`; concurrent per-connection
+  dispatch with reply tagging and completion pushes;
 * :mod:`repro.net.remote` — ``RemoteNode``/``RemoteSharedObject``/
   ``RemoteObjectAccess`` duck-typing the in-process surface so
   ``Transaction``, ``TransactionMonitor``, and ``txstore`` run unchanged

@@ -1,161 +1,410 @@
-"""RPC client: connection pool + liveness heartbeat (DESIGN.md §3.1).
+"""RPC client: one multiplexed, pipelined connection per node (DESIGN.md §3.1).
 
-One :class:`NodeClient` per (client process, node server). RPCs are strict
-request/response over pooled TCP connections — a blocking RPC (gate wait,
-task join) holds its pooled connection for the duration, and concurrency
-comes from the pool growing on demand up to ``max_pool``.
+One :class:`NodeClient` per (client process, node server), owning **one**
+framed TCP connection. Every request is tagged with a request id; a
+dedicated reader thread demultiplexes replies to per-call
+:class:`Future`\\ s, so any number of caller threads share the socket and a
+blocking RPC (gate wait, task join) costs an outstanding request id, not a
+held connection. :meth:`NodeClient.call_async` issues without waiting —
+the pipelining primitive the transaction hot path is built on.
+
+**One-way messages** (:meth:`notify`) carry no request id and expect no
+reply: §2.7 read-only-buffering kickoffs, §2.8.4 last-write apply kickoffs,
+release/terminate notifications, heartbeats. Server-side failures of
+one-way ops come back as ``oneway_err`` *notes* and are recorded per
+transaction; :meth:`raise_deferred` surfaces them at the transaction's next
+sync point (error deferral, per the paper's asynchrony model: an
+asynchronous operation's error belongs to the operation that awaits it).
+
+**Pushed task notes**: when a §2.7/§2.8.4 home-node task completes, the
+server pushes a ``task_done`` note on this same connection (piggybacked on
+an in-flight reply when one is departing, a standalone push otherwise),
+carrying the task's outcome and — when small — the pickled state of the
+read buffer it produced. ``join`` of a release task is then a local wait,
+and buffered reads execute against the shipped state: usually zero extra
+round trips.
 
 Failure mapping (§3.4): any socket-level failure flips the client to
 ``alive = False`` (crash-stop — a node that vanished is *removed from the
-system*) and surfaces as :class:`~repro.core.api.RemoteObjectFailure`, which
+system*), **fails every in-flight future and task wait** so no caller
+hangs, and surfaces as :class:`~repro.core.api.RemoteObjectFailure`, which
 the transaction machinery already routes through its abort path.
 
-Liveness has two halves:
-
-* **heartbeat** — while this process has live transactions on the server, a
-  daemon thread sends a periodic ``heartbeat`` RPC naming them; the server
-  refreshes the §3.4 failure detector for every object they hold.
-* **presence connection** — one dedicated idle connection announced with
-  ``hello``. The server maps it to this client's sessions; the OS closing
-  it (process death) immediately expires every held object, so the
-  server-side :class:`~repro.core.faults.TransactionMonitor` rolls them
-  back without waiting a full detector timeout.
+Liveness rides the same link: the connection announces itself with
+``mux_hello`` (the server maps it to this process's sessions — the OS
+closing it is the instant crash-stop signal that replaces PR 2's dedicated
+presence connection), and while this process has live transactions a
+daemon thread sends one-way ``heartbeat`` messages naming them.
 """
 from __future__ import annotations
 
+import itertools
+import logging
 import os
+import pickle
 import socket
 import threading
 import uuid
-from collections import deque
-from typing import Any, Deque, Optional, Set
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.core.api import RemoteObjectFailure
 
-from .wire import (ConnectionClosed, ERR, OK, WireError, parse_address,
-                   recv_msg, send_msg)
+from .wire import (ConnectionClosed, FrameReader, NOTE, OK, WireError,
+                   parse_address, recv_msg, send_msg)
+
+log = logging.getLogger("repro.net.client")
 
 #: Stable identity of this client *process* across all its transactions.
 CLIENT_ID = f"{socket.gethostname()}:{os.getpid()}:{uuid.uuid4().hex[:6]}"
 
 
+class Future:
+    """Completion handle for one in-flight request."""
+
+    __slots__ = ("_done", "_value", "_error")
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+
+    def set_result(self, value: Any) -> None:
+        self._value = value
+        self._done.set()
+
+    def set_error(self, error: BaseException) -> None:
+        self._error = error
+        self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._done.wait(timeout):
+            raise TimeoutError("RPC reply did not arrive in time")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class _LocalBuf:
+    """Client-side copy of a home-node read buffer (piggyback protocol).
+
+    Holds the unpickled ``__tx_snapshot__`` state a ``task_done`` note (or a
+    ``buffer_snapshot`` reply) shipped because it was small; buffered reads
+    then execute locally with zero round trips. Duck-types the ``call``
+    surface of :class:`~repro.core.buffers.CopyBuffer`.
+    """
+
+    __slots__ = ("state",)
+
+    def __init__(self, state: Any):
+        self.state = state
+
+    def call(self, method: str, args: tuple, kwargs: dict) -> Any:
+        return getattr(self.state, method)(*args, **kwargs)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"_LocalBuf({type(self.state).__name__})"
+
+
+def load_buf(payload: Optional[bytes]) -> Optional[_LocalBuf]:
+    """Unpickle a piggybacked buffer state; ``None`` stays ``None``."""
+    if payload is None:
+        return None
+    try:
+        return _LocalBuf(pickle.loads(payload))
+    except Exception:  # noqa: BLE001 - class not importable here: read remotely
+        return None
+
+
+class _TaskWait:
+    """Local completion state of one fire-and-forget home-node task."""
+
+    __slots__ = ("done", "error", "buf")
+
+    def __init__(self):
+        self.done = threading.Event()
+        self.error: Optional[BaseException] = None
+        self.buf: Optional[_LocalBuf] = None
+
+
+class _Mux:
+    """One established multiplexed connection (socket + write-side lock)."""
+
+    __slots__ = ("sock", "send_lock")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.send_lock = threading.Lock()
+
+
 class NodeClient:
-    """Connection-pooled RPC endpoint for one node server."""
+    """Multiplexed RPC endpoint for one node server.
+
+    A small fixed set of mux connections (``conns``) is shared by all
+    caller threads with *per-thread affinity*: each thread is pinned to one
+    connection, so every message sequence a single transaction produces is
+    FIFO on its wire (one-way kickoffs are processed before the requests
+    pipelined behind them), while independent client threads get
+    independent reader/writer pipelines — one serial reader never becomes
+    the throughput ceiling of the whole process.
+    """
 
     def __init__(self, address: str, *, connect_timeout: float = 5.0,
-                 heartbeat_interval: float = 0.5, max_pool: int = 64):
+                 heartbeat_interval: float = 0.5, conns: int = 4):
         self.address = address
         self.host, self.port = parse_address(address)
         self.connect_timeout = connect_timeout
         self.heartbeat_interval = heartbeat_interval
-        self.max_pool = max_pool
         self.alive = True
-        self._pool: Deque[socket.socket] = deque()
-        self._pool_size = 0
-        self._lock = threading.Lock()
-        self._pool_slot = threading.Condition(self._lock)
+        self._muxes: List[Optional[_Mux]] = [None] * max(1, conns)
+        self._tl = threading.local()            # per-thread conn affinity
+        self._rr = itertools.count()            # round-robin assignment
+        self._conn_lock = threading.Lock()      # connection establishment
+        self._lock = threading.Lock()           # client state
+        self._req_ids = itertools.count(1)
+        self._pending: Dict[int, Future] = {}
+        self._tasks: Dict[Tuple[str, str], _TaskWait] = {}
+        self._deferred: Dict[str, List[BaseException]] = {}
         self._active_txns: Set[str] = set()
-        self._presence: Optional[socket.socket] = None
-        self._presence_lock = threading.Lock()   # single presence conn ever
+        self._ended: Set[str] = set()           # server already dropped these
         self._hb_thread: Optional[threading.Thread] = None
         self._closed = threading.Event()
 
-    # -- connections --------------------------------------------------------
-    def _connect(self, *, mark_on_fail: bool = True) -> socket.socket:
-        try:
-            sock = socket.create_connection((self.host, self.port),
-                                            timeout=self.connect_timeout)
-        except OSError as e:
-            if mark_on_fail:
-                self._mark_dead()
-            raise RemoteObjectFailure(
-                f"node server {self.address} is unreachable: {e}") from e
-        sock.settimeout(None)  # blocking RPCs may legitimately take long
-        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        return sock
+    # -- connection ----------------------------------------------------------
+    def _mux_for_thread(self) -> _Mux:
+        idx = getattr(self._tl, "idx", None)
+        if idx is None:
+            idx = next(self._rr) % len(self._muxes)
+            self._tl.idx = idx
+        mux = self._muxes[idx]
+        return mux if mux is not None else self._establish(idx)
 
-    def _checkout(self) -> socket.socket:
+    def _establish(self, idx: int) -> _Mux:
+        with self._conn_lock:
+            if self._muxes[idx] is not None:
+                return self._muxes[idx]
+            if not self.alive or self._closed.is_set():
+                raise RemoteObjectFailure(
+                    f"node server {self.address} is unreachable (crash-stop)")
+            try:
+                sock = socket.create_connection((self.host, self.port),
+                                                timeout=self.connect_timeout)
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                # Handshake before the reader exists: announce this process
+                # (the server maps the connection to our sessions — the drop
+                # of our last connection is the §3.4 instant crash-stop
+                # signal) and await the ack on the still-private socket.
+                send_msg(sock, (0, "mux_hello", {"client_id": CLIENT_ID}))
+                req_id, status, value, _notes = recv_msg(sock)
+                if req_id != 0 or status != OK:
+                    raise ConnectionClosed("mux_hello rejected")
+                sock.settimeout(None)   # replies may legitimately take long
+            except (OSError, ConnectionClosed, WireError) as e:
+                # A transient refusal (backlog overflow, port exhaustion)
+                # establishing a *supplementary* connection must not
+                # crash-stop the whole client while an established healthy
+                # connection exists: re-pin this thread onto one instead.
+                for i, mux in enumerate(self._muxes):
+                    if mux is not None and self.alive:
+                        self._tl.idx = i
+                        return mux
+                self._mark_dead(f"connect failed: {e}")
+                raise RemoteObjectFailure(
+                    f"node server {self.address} is unreachable: {e}") from e
+            mux = _Mux(sock)
+            self._muxes[idx] = mux
+            threading.Thread(
+                target=self._reader_loop, args=(mux,),
+                name=f"mux-reader-{self.address}-{idx}", daemon=True).start()
+            return mux
+
+    def _send(self, msg: Any) -> None:
+        mux = self._mux_for_thread()
+        try:
+            with mux.send_lock:
+                send_msg(mux.sock, msg)
+        except (OSError, WireError) as e:
+            self._mark_dead(f"send failed: {e}")
+            raise RemoteObjectFailure(
+                f"node server {self.address} failed mid-send: {e}") from e
+
+    # -- reader thread (one per mux connection) ------------------------------
+    def _reader_loop(self, mux: _Mux) -> None:
+        reader = FrameReader(mux.sock)
+        try:
+            while True:
+                req_id, status, value, notes = reader.recv_msg()
+                for note in notes or ():
+                    self._handle_note(note)
+                if req_id is None or status == NOTE:
+                    continue
+                with self._lock:
+                    fut = self._pending.pop(req_id, None)
+                if fut is None:
+                    # Late reply after a client-side timeout abandoned the
+                    # call: drop it — the conversation moved on.
+                    log.warning("dropping reply with unknown request id %r "
+                                "from %s (late reply after timeout?)",
+                                req_id, self.address)
+                    continue
+                if status == OK:
+                    fut.set_result(value)
+                else:
+                    fut.set_error(value)
+        except (ConnectionClosed, WireError, OSError) as e:
+            if not self._closed.is_set():
+                self._mark_dead(f"connection lost: {e}")
+
+    def _handle_note(self, note: Dict[str, Any]) -> None:
+        kind = note.get("kind")
+        if kind == "task_done":
+            key = (note["txn"], note["name"])
+            with self._lock:
+                if note["txn"] not in self._active_txns:
+                    log.debug("dropping task note for finished txn %r", key)
+                    return
+                wait = self._tasks.setdefault(key, _TaskWait())
+            wait.error = note.get("error")
+            wait.buf = load_buf(note.get("buf"))
+            wait.done.set()
+        elif kind == "oneway_err":
+            txn = note.get("txn")
+            err = note.get("error") or RuntimeError("one-way op failed")
+            log.debug("deferred one-way error for txn %r op %r: %r",
+                      txn, note.get("op"), err)
+            if txn is None:
+                return
+            with self._lock:
+                active = txn in self._active_txns
+                if active:
+                    self._deferred.setdefault(txn, []).append(err)
+            if not active:
+                # Arrived after the transaction finished locally (e.g. a
+                # pipelined step-5 terminate racing a §3.4 expiry): there
+                # is no sync point left to raise it at — the epoch
+                # machinery keeps the system consistent, but make the
+                # partial termination visible.
+                log.warning("one-way %r failed for finished txn %r: %r",
+                            note.get("op"), txn, err)
+                return
+            # A failed kickoff never produces a completion note: fail the
+            # task wait too, or its joiner would hang forever.
+            if note.get("op") in ("ro_buffer", "lw_apply") and note.get("name"):
+                wait = self._task_wait(txn, note["name"])
+                wait.error = err
+                wait.done.set()
+        else:  # pragma: no cover - forward compatibility
+            log.warning("ignoring unknown note kind %r from %s",
+                        kind, self.address)
+
+    # -- RPC -----------------------------------------------------------------
+    def call_async(self, op: str, **kwargs: Any) -> Future:
+        """Issue ``op`` without waiting; returns a :class:`Future`."""
+        fut = Future()
         with self._lock:
             if not self.alive:
                 raise RemoteObjectFailure(
                     f"node server {self.address} is unreachable (crash-stop)")
-            if self._pool:
-                return self._pool.popleft()
-            while self._pool_size >= self.max_pool:
-                self._pool_slot.wait(timeout=30.0)
-                if not self.alive:   # died while we waited for a slot
-                    raise RemoteObjectFailure(
-                        f"node server {self.address} is unreachable "
-                        f"(crash-stop)")
-                if self._pool:
-                    return self._pool.popleft()
-            self._pool_size += 1
+            req_id = next(self._req_ids)
+            self._pending[req_id] = fut
         try:
-            return self._connect()
+            self._send((req_id, op, kwargs))
         except BaseException:
             with self._lock:
-                self._pool_size -= 1
-                self._pool_slot.notify()
+                self._pending.pop(req_id, None)
+            raise
+        return fut
+
+    def call(self, op: str, rpc_timeout: Optional[float] = None,
+             **kwargs: Any) -> Any:
+        """Invoke ``op`` and wait for its reply (value or re-raised error).
+
+        ``rpc_timeout`` bounds the *wait*, not the server-side execution: on
+        expiry the future is abandoned (its late reply will be dropped by
+        the reader) and :class:`TimeoutError` raised."""
+        fut = self.call_async(op, **kwargs)
+        try:
+            return fut.result(rpc_timeout)
+        except TimeoutError:
+            with self._lock:
+                stale = [rid for rid, f in self._pending.items() if f is fut]
+                for rid in stale:
+                    del self._pending[rid]
             raise
 
-    def _checkin(self, sock: Optional[socket.socket]) -> None:
-        with self._lock:
-            if sock is not None and self.alive and not self._closed.is_set():
-                self._pool.append(sock)
-            else:
-                self._pool_size -= 1
-                if sock is not None:
-                    try:
-                        sock.close()
-                    except OSError:
-                        pass
-            self._pool_slot.notify()
+    def notify(self, op: str, **kwargs: Any) -> None:
+        """Fire-and-forget one-way message: no reply, errors deferred
+        (server reports them as ``oneway_err`` notes; see
+        :meth:`raise_deferred`)."""
+        self._send((None, op, kwargs))
 
-    def _mark_dead(self) -> None:
+    # -- deferred errors and task notes --------------------------------------
+    def raise_deferred(self, txn_uid: str) -> None:
+        """Sync point: raise the first deferred one-way error of ``txn_uid``
+        recorded since the last sync point, if any."""
         with self._lock:
+            errors = self._deferred.pop(txn_uid, None)
+        if errors:
+            raise errors[0]
+
+    def _task_wait(self, txn_uid: str, name: str) -> _TaskWait:
+        with self._lock:
+            return self._tasks.setdefault((txn_uid, name), _TaskWait())
+
+    def task_wait(self, txn_uid: str, name: str) -> _TaskWait:
+        """The local completion handle of a fire-and-forget home-node task
+        (created on kickoff, resolved by the pushed ``task_done`` note, a
+        carrier reply via :meth:`resolve_task`, or :meth:`_mark_dead`)."""
+        return self._task_wait(txn_uid, name)
+
+    def resolve_task(self, txn_uid: str, name: str,
+                     error: Optional[BaseException],
+                     buf: Optional[bytes]) -> None:
+        """Resolve a task wait from a result that rode back on a carrier
+        reply (e.g. an inline-completed §2.7 task on the dispense reply)."""
+        wait = self._task_wait(txn_uid, name)
+        wait.error = error
+        wait.buf = load_buf(buf)
+        wait.done.set()
+
+    # -- failure (§3.4 crash-stop) -------------------------------------------
+    def _mark_dead(self, reason: str) -> None:
+        with self._lock:
+            already = not self.alive
             self.alive = False
-            stale = list(self._pool)
-            self._pool.clear()
-            self._pool_size -= len(stale)   # their slots are gone for good
-            self._pool_slot.notify_all()    # wake waiters to observe death
-        for s in stale:
+            muxes = [m for m in self._muxes if m is not None]
+            self._muxes = [None] * len(self._muxes)
+            pending = list(self._pending.values())
+            self._pending.clear()
+            waits = list(self._tasks.values())
+        if already and not muxes and not pending and not waits:
+            return
+        err = RemoteObjectFailure(
+            f"node server {self.address} is unreachable ({reason})")
+        # No waiter hangs: every in-flight future and task join observes
+        # the death immediately.
+        for fut in pending:
+            fut.set_error(err)
+        for w in waits:
+            if not w.done.is_set():
+                w.error = err
+                w.done.set()
+        for mux in muxes:
             try:
-                s.close()
+                mux.sock.close()
             except OSError:
                 pass
 
-    # -- RPC ----------------------------------------------------------------
-    def call(self, op: str, **kwargs: Any) -> Any:
-        """Invoke ``op`` on the server; returns its value or re-raises its
-        error. Socket failures map to :class:`RemoteObjectFailure`."""
-        sock = self._checkout()
-        try:
-            send_msg(sock, (op, kwargs))
-            status, value = recv_msg(sock)
-        except (ConnectionClosed, WireError, OSError) as e:
-            # WireError (undecodable reply) is connection-fatal too: the
-            # stream position is unknown, so the socket cannot be reused.
-            try:
-                sock.close()
-            except OSError:
-                pass
-            self._checkin(None)
-            self._mark_dead()
-            raise RemoteObjectFailure(
-                f"node server {self.address} failed mid-call ({op}): {e}") from e
-        self._checkin(sock)
-        if status == OK:
-            return value
-        assert status == ERR
-        raise value
-
-    # -- transaction liveness ----------------------------------------------
+    # -- transaction liveness ------------------------------------------------
     def register_txn(self, txn_uid: str) -> None:
-        """Track a live transaction: start heartbeating + presence."""
+        """Track a live transaction: liveness (hello + heartbeat) rides the
+        mux connection."""
         with self._lock:
             self._active_txns.add(txn_uid)
             need_hb = self._hb_thread is None
-        self._ensure_presence()   # no-op once established
+        self._mux_for_thread()
         if need_hb:
             t = threading.Thread(target=self._heartbeat_loop,
                                  name=f"hb-{self.address}", daemon=True)
@@ -164,87 +413,64 @@ class NodeClient:
                     self._hb_thread = t
                     t.start()
 
+    def mark_session_ended(self, txn_uid: str) -> None:
+        """The server already dropped this session (``finish_batch`` with
+        ``end``): :meth:`finish_txn` skips its trailing ``end_txn``."""
+        with self._lock:
+            self._ended.add(txn_uid)
+
     def finish_txn(self, txn_uid: str) -> None:
-        """The transaction terminated everywhere: drop the server session."""
+        """The transaction terminated everywhere: drop the server session
+        and every local trace of the transaction."""
         with self._lock:
             if txn_uid not in self._active_txns:
                 return
             self._active_txns.discard(txn_uid)
+            self._deferred.pop(txn_uid, None)
+            ended = txn_uid in self._ended
+            self._ended.discard(txn_uid)
+            for key in [k for k in self._tasks if k[0] == txn_uid]:
+                del self._tasks[key]
+        if ended:
+            return
         try:
-            self.call("end_txn", txn=txn_uid)
+            self.notify("end_txn", txn=txn_uid)
         except RemoteObjectFailure:
             pass  # server is gone; nothing left to clean up there
 
-    def _ensure_presence(self) -> None:
-        # Serialized: a duplicate presence connection for the same client id
-        # would later be dropped (overwritten + GC-closed) and the server
-        # would mistake that for this whole process crashing.
-        with self._presence_lock:
-            with self._lock:
-                if self._presence is not None or not self.alive:
-                    return
-            try:
-                # Best-effort: a transient refusal (backlog overflow, port
-                # exhaustion) must not crash-stop a healthy server for the
-                # whole client, so this connect never marks the client dead.
-                sock = self._connect(mark_on_fail=False)
-                send_msg(sock, ("hello", {"client_id": CLIENT_ID}))
-                status, _ = recv_msg(sock)
-                if status != OK:
-                    raise ConnectionClosed("hello rejected")
-            except (RemoteObjectFailure, ConnectionClosed, OSError):
-                return  # heartbeats still cover liveness (slower detection)
-            with self._lock:
-                self._presence = sock
-
     def _heartbeat_loop(self) -> None:
-        # The heartbeat owns a dedicated connection: sharing the bounded
-        # pool would let max_pool threads blocked in long gate waits starve
-        # liveness, and the server would roll back live transactions.
-        sock: Optional[socket.socket] = None
-        try:
-            while not self._closed.wait(self.heartbeat_interval):
-                with self._lock:
-                    txns = list(self._active_txns)
-                    alive = self.alive
-                if not alive:
-                    return
-                if not txns:
-                    continue
-                try:
-                    if sock is None:
-                        sock = self._connect()
-                    send_msg(sock, ("heartbeat",
-                                    {"client_id": CLIENT_ID, "txns": txns}))
-                    status, value = recv_msg(sock)
-                    if status == ERR and isinstance(value, BaseException):
-                        continue   # server-side hiccup; beat again next tick
-                except RemoteObjectFailure:
-                    return         # _connect marked the server dead
-                except Exception:  # noqa: BLE001 - transient: reconnect
-                    if sock is not None:
-                        try:
-                            sock.close()
-                        except OSError:
-                            pass
-                        sock = None
-        finally:
-            if sock is not None:
-                try:
-                    sock.close()
-                except OSError:
-                    pass
+        while not self._closed.wait(self.heartbeat_interval):
+            with self._lock:
+                txns = list(self._active_txns)
+                alive = self.alive
+            if not alive:
+                return
+            if not txns:
+                continue
+            try:
+                self.notify("heartbeat", client_id=CLIENT_ID, txns=txns)
+            except RemoteObjectFailure:
+                return             # the mux died; crash-stop already handled
 
-    # -- lifecycle ----------------------------------------------------------
+    # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
         self._closed.set()
         with self._lock:
-            pool = list(self._pool)
-            self._pool.clear()
-            presence, self._presence = self._presence, None
-        for s in pool + ([presence] if presence else []):
+            muxes = [m for m in self._muxes if m is not None]
+            self._muxes = [None] * len(self._muxes)
+            pending = list(self._pending.values())
+            self._pending.clear()
+            waits = list(self._tasks.values())
+        err = RemoteObjectFailure(f"client for {self.address} closed")
+        for fut in pending:
+            fut.set_error(err)
+        for w in waits:
+            if not w.done.is_set():
+                w.error = err
+                w.done.set()
+        for mux in muxes:
             try:
-                s.close()
+                mux.sock.close()
             except OSError:
                 pass
 

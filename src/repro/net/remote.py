@@ -11,10 +11,27 @@
   (``wait_access``/``wait_termination``/``release_to``/``terminate_to``,
   counter reads) as RPCs against the home node's real header.
 * :class:`RemoteObjectAccess` — the transport override of
-  :class:`~repro.core.transaction.ObjectAccess`: every state operation
-  becomes one RPC executed on the home node; the write log is recorded
-  locally (pure writes need no synchronization, §2.8.4) and ships once,
-  at apply time. Object state never crosses the wire.
+  :class:`~repro.core.transaction.ObjectAccess`, built on the multiplexed
+  pipelined connection:
+
+  - §2.7 read-only buffering and §2.8.4 last-write log application are
+    **fire-and-forget one-way kickoffs**; the home node pushes a completion
+    note (with the read buffer's state when small — the piggyback read
+    protocol), so joining the task is usually a local wait and buffered
+    reads usually cost zero round trips;
+  - early release and single terminates are **one-way notifications**;
+    their server-side failures are deferred and surfaced at the
+    transaction's next sync point (``raise_deferred``);
+  - the commit/abort steps issue **per-node batched RPCs asynchronously**
+    (``*_async`` → :class:`~repro.net.client.Future`), so one commit wave
+    costs one overlapped round trip across all home nodes;
+  - genuinely synchronous operations (gate wait + checkpoint, live-state
+    method calls, dispensing) remain single awaited RPCs — they are the
+    ones whose *results* the operation semantics need before proceeding.
+
+  The write log is recorded locally (pure writes need no synchronization,
+  §2.8.4) and ships once, at apply time. Live object state never crosses
+  the wire; only read-buffer *snapshots* small enough to ship do.
 """
 from __future__ import annotations
 
@@ -22,9 +39,9 @@ import threading
 from typing import Any, Dict, List, Optional
 
 from repro.core.api import RemoteObjectFailure, Suprema
-from repro.core.transaction import ObjectAccess
+from repro.core.transaction import Completed, ObjectAccess
 
-from .client import CLIENT_ID, NodeClient
+from .client import CLIENT_ID, Future, NodeClient, load_buf
 
 
 class _RemoteBufMarker:
@@ -39,35 +56,45 @@ class _RemoteBufMarker:
 _REMOTE_BUF = _RemoteBufMarker()
 
 
+#: How long a join waits for the pushed completion note before falling
+#: back to an explicit ``task_join`` RPC (covers any lost-push edge case
+#: — e.g. a chain-dispensed node that had no client connection to push
+#: on — with one bounded round trip instead of a hang).
+_JOIN_PUSH_GRACE = 1.0
+
+
 class RemoteTask:
     """Join handle for an asynchronous task running on the home node.
 
-    ``join`` blocks in a single RPC until the server-side executor task
-    completes; the result (or transactional error) is cached so trailing
-    buffered reads don't re-join over the wire."""
+    The kickoff was pipelined (one-way, or riding the dispense RPC); the
+    home node pushes a ``task_done`` note at completion — or delivered it
+    on the dispense reply already — so ``join`` normally blocks on a
+    *local* event: zero round trips. The client's crash-stop handling
+    fails the wait if the node dies, so no joiner can hang on a vanished
+    server; a missed push degrades to one ``task_join`` RPC.
+    """
 
-    __slots__ = ("acc", "task_id", "_done", "_error", "_lock")
+    __slots__ = ("acc",)
 
-    def __init__(self, acc: "RemoteObjectAccess", task_id: int):
+    def __init__(self, acc: "RemoteObjectAccess"):
         self.acc = acc
-        self.task_id = task_id
-        self._done = False
-        self._error: Optional[BaseException] = None
-        self._lock = threading.Lock()
 
     def join(self) -> None:
-        with self._lock:
-            if not self._done:
-                try:
-                    self.acc.client.call(
-                        "task_join", txn=self.acc.txn_uid, task_id=self.task_id)
-                except BaseException as e:  # noqa: BLE001 - cache and re-raise
-                    self._error = e
-                else:
-                    self.acc._mark_task_complete()
-                self._done = True
-        if self._error is not None:
-            raise self._error
+        acc = self.acc
+        client = acc.client
+        client.raise_deferred(acc.txn_uid)   # sync point: kickoff errors
+        wait = client.task_wait(acc.txn_uid, acc.shared.name)
+        if not wait.done.wait(_JOIN_PUSH_GRACE):
+            # No note yet: ask explicitly (blocks server-side until the
+            # task completes; re-raises its transactional error).
+            res = client.call("task_join", txn=acc.txn_uid,
+                              name=acc.shared.name)
+            if not wait.done.is_set():
+                client.resolve_task(acc.txn_uid, acc.shared.name, None,
+                                    res.get("buf"))
+        if wait.error is not None:
+            raise wait.error
+        acc._mark_task_complete(wait.buf)
 
 
 class RemoteHeader:
@@ -139,15 +166,21 @@ class RemoteNode:
     def fetch_bindings(self) -> List["RemoteSharedObject"]:
         info = self.client.call("list_bindings")
         self.name = info["node"]
-        return [RemoteSharedObject(n, self) for n in info["bindings"]]
+        out = []
+        for n, modes in info["bindings"].items():
+            shared = RemoteSharedObject(n, self)
+            shared._modes.update(modes)   # no mode_of round trips later
+            out.append(shared)
+        return out
 
     def bind(self, name: str, obj: Any) -> "RemoteSharedObject":
         """Bind ``obj`` under ``name`` on the remote server (ships the
         initial object state once; it lives server-side thereafter). When
         this node was obtained via ``Registry.connect``, the new binding is
         registered there too, so ``locate`` sees it without re-connecting."""
-        self.client.call("bind", name=name, obj=obj)
+        modes = self.client.call("bind", name=name, obj=obj)
         shared = RemoteSharedObject(name, self)
+        shared._modes.update(modes or {})
         if self.registry is not None:
             self.registry.register_remote(shared)
         return shared
@@ -211,12 +244,12 @@ class RemoteSharedObject:
     def touch(self, txn: object) -> None:
         uid = _txn_uid(txn)
         if uid is not None:
-            self.client.call("touch", txn=uid, name=self.name)
+            self.client.notify("touch", txn=uid, name=self.name)
 
     def clear_holder(self, txn: object) -> None:
         uid = _txn_uid(txn)
         if uid is not None:
-            self.client.call("clear_holder", txn=uid, name=self.name)
+            self.client.notify("clear_holder", txn=uid, name=self.name)
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"RemoteSharedObject({self.name}@{self.node.address})"
@@ -224,7 +257,28 @@ class RemoteSharedObject:
 
 def _txn_uid(txn: object) -> Optional[str]:
     tid = getattr(txn, "id", None)
-    return None if tid is None else f"{CLIENT_ID}#{tid}"
+    if tid is None:
+        return None
+    inc = getattr(txn, "incarnation", 0)
+    # The incarnation makes retries distinct server-side: a late pipelined
+    # note or end_txn of a rolled-back incarnation can't touch its successor.
+    return f"{CLIENT_ID}#{tid}" if not inc else f"{CLIENT_ID}#{tid}r{inc}"
+
+
+class _WireCompletion:
+    """Future adapter running a client-side epilogue at await time."""
+
+    __slots__ = ("fut", "epilogue")
+
+    def __init__(self, fut: Future, epilogue=None):
+        self.fut = fut
+        self.epilogue = epilogue
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        value = self.fut.result(timeout)
+        if self.epilogue is not None:
+            return self.epilogue(value)
+        return value
 
 
 class RemoteObjectAccess(ObjectAccess):
@@ -233,11 +287,24 @@ class RemoteObjectAccess(ObjectAccess):
     State stays on the home node; this record keeps only control state
     (counters, pv, flags) plus the locally recorded write log. ``st`` is
     never populated client-side — the abort checkpoint is taken and
-    restored by the server session; ``buf`` holds a marker object when the
-    home-node read buffer exists.
+    restored by the server session. ``buf`` holds either a marker (the
+    buffer exists on the home node) or a :class:`_LocalBuf` copy shipped by
+    the piggyback read protocol, in which case buffered reads are local.
+
+    ``live_copy`` is the *held-state* piggyback: while this transaction
+    holds the access, nothing else can modify the object, so the home node
+    ships a (size-gated) state copy on ``open_call`` and refreshes it on
+    every modifying call — pure reads in between run locally with zero
+    round trips. Staleness is impossible by exclusion; an illusory-crash
+    restore (§3.4) bumps the instance epoch and commit validation catches
+    it, exactly as for §2.7 buffered reads.
     """
 
-    __slots__ = ()
+    __slots__ = ("live_copy",)
+
+    def __init__(self, *args: Any, **kwargs: Any):
+        super().__init__(*args, **kwargs)
+        self.live_copy = None
 
     # -- identity -----------------------------------------------------------
     @property
@@ -254,44 +321,83 @@ class RemoteObjectAccess(ObjectAccess):
 
     # -- start (§2.10.2): batched per-node version dispensing ----------------
     def prepare_start(self) -> None:
-        """Register liveness (presence + heartbeat) for this transaction —
-        called *before* any version lock is acquired: presence setup can
+        """Register liveness (mux hello + heartbeat) for this transaction —
+        called *before* any version lock is acquired: connection setup can
         block in a TCP connect and must not stall other transactions
         parked behind our locked headers."""
         self.client.register_txn(self.txn_uid)
 
-    def dispense_batch(self, accs: List["RemoteObjectAccess"]) -> None:
-        """Lock-and-dispense for every access of this node, one round trip.
-        The server holds the version-lock gates until
-        :meth:`release_version_locks`."""
-        pvs = self.client.call(
-            "dispense_batch", txn=self.txn_uid, client_id=CLIENT_ID,
-            names=[a.shared.name for a in accs])
-        for a in accs:
-            a.pv = pvs[a.shared.name]
+    def dispense_many(self, domains: List[List["RemoteObjectAccess"]]) -> None:
+        """Chained lock-and-dispense over every remote node of the access
+        set in ONE client round trip: the head node dispenses its batch
+        (holding its gates), forwards the remainder of the chain to the
+        next node in global order, and the aggregated reply returns every
+        node's private versions. Acquisition order and hold discipline are
+        exactly the sequential 2PL's — only the client bounces between
+        nodes are gone, which also shrinks every gate-hold window to a
+        server-to-server hop.
+
+        The §2.7 read-only buffering kickoffs ride along for every node:
+        tasks whose gate is already open complete during the dispense and
+        their results (buffer state included) come back on the same reply
+        — the uncontended read-only hot path costs zero extra messages."""
+        uid = self.txn_uid
+        kind = ("termination"
+                if getattr(self.txn, "irrevocable", False) else "access")
+        metas = []
+        for accs in domains:
+            ro_accs = [a for a in accs
+                       if a.sup.read_only and a.sup.reads > 0]
+            for a in ro_accs:
+                a.client.task_wait(uid, a.shared.name)   # pre-register
+            metas.append((accs, ro_accs))
+        head_accs, head_ro = metas[0]
+        chain = [{"address": accs[0].shared.node.address,
+                  "names": [a.shared.name for a in accs],
+                  "ro_names": [a.shared.name for a in ro_accs]}
+                 for accs, ro_accs in metas[1:]]
+        res = self.client.call(
+            "dispense_batch", txn=uid, client_id=CLIENT_ID,
+            names=[a.shared.name for a in head_accs],
+            ro_names=[a.shared.name for a in head_ro], kind=kind,
+            chain=chain)
+        pvs = res["pvs"]
+        for accs, ro_accs in metas:
+            for a in accs:
+                a.pv = pvs[a.shared.name]
+            for a in ro_accs:
+                note = res["ro"].get(a.shared.name)
+                if note is not None:   # completed during the dispense
+                    a.client.resolve_task(uid, a.shared.name,
+                                          note["error"], note["buf"])
+                a.release_task = RemoteTask(a)
 
     def release_version_locks(self) -> None:
-        self.client.call("release_version_locks", txn=self.txn_uid)
+        """One-way: the gates free as soon as the server processes it; no
+        reply to wait for (failures defer to the next sync point)."""
+        self.client.notify("release_version_locks", txn=self.txn_uid)
 
-    # -- §2.7 / §2.8.4: tasks run on the home node ---------------------------
+    # -- §2.7 / §2.8.4: fire-and-forget kickoffs of home-node tasks ----------
     def spawn_ro_buffer(self, kind: str) -> None:
-        task_id = self.client.call("ro_buffer", txn=self.txn_uid,
-                                   name=self.shared.name, kind=kind)
-        self.release_task = RemoteTask(self, task_id)
+        self.client.task_wait(self.txn_uid, self.shared.name)  # pre-register
+        self.client.notify("ro_buffer", txn=self.txn_uid,
+                           name=self.shared.name, kind=kind)
+        self.release_task = RemoteTask(self)
 
     def spawn_lastwrite_apply(self, kind: str) -> None:
         entries = list(self.log.entries)
         self.log.entries.clear()
-        task_id = self.client.call("lw_apply", txn=self.txn_uid,
-                                   name=self.shared.name, kind=kind,
-                                   entries=entries)
-        self.release_task = RemoteTask(self, task_id)
+        self.client.task_wait(self.txn_uid, self.shared.name)  # pre-register
+        self.client.notify("lw_apply", txn=self.txn_uid,
+                           name=self.shared.name, kind=kind, entries=entries)
+        self.release_task = RemoteTask(self)
 
-    def _mark_task_complete(self) -> None:
-        """A joined home-node task released the object and holds its state."""
+    def _mark_task_complete(self, buf=None) -> None:
+        """A joined home-node task released the object and holds its state;
+        ``buf`` carries the piggybacked local read buffer, if shipped."""
         with self.lock:
             self.released = True
-            self.buf = _REMOTE_BUF
+            self.buf = buf if buf is not None else _REMOTE_BUF
             if not self.sup.read_only:
                 self.holds_access = True
                 self.modified = True
@@ -302,6 +408,7 @@ class RemoteObjectAccess(ObjectAccess):
 
     # -- synchronous state operations (single RPCs) --------------------------
     def open_access(self, kind: str, timeout: Optional[float]) -> bool:
+        self.client.raise_deferred(self.txn_uid)
         res = self.client.call("open_access", txn=self.txn_uid,
                                name=self.shared.name, kind=kind,
                                timeout=timeout)
@@ -309,19 +416,73 @@ class RemoteObjectAccess(ObjectAccess):
         self.holds_access = True
         return res["blocked"]
 
+    def open_and_call(self, kind: str, timeout: Optional[float], method: str,
+                      args: tuple, kwargs: dict, *, modifies: bool,
+                      validity=None):
+        """First direct access in one RPC: gate wait + checkpoint + log
+        apply + the method call (the in-process path's three steps).
+        ``validity`` is ignored: the home node enforces §2.3 inside the
+        RPC, as on every other remote operation."""
+        self.client.raise_deferred(self.txn_uid)
+        entries = list(self.log.entries)
+        self.log.entries.clear()
+        res = self.client.call("open_call", txn=self.txn_uid,
+                               name=self.shared.name, kind=kind,
+                               timeout=timeout, entries=entries,
+                               method=method, args=args, kwargs=kwargs,
+                               modifies=modifies,
+                               want_state=self._reads_ahead(0 if modifies
+                                                            else 1))
+        self.seen_instance = res["instance"]
+        self.holds_access = True
+        if modifies or entries:
+            self.modified = True
+        self.live_copy = load_buf(res.get("state"))
+        return res["blocked"], res["value"]
+
     def raw_call(self, method: str, args: tuple, kwargs: dict, *,
                  modifies: bool) -> Any:
-        v = self.client.call("txn_call", txn=self.txn_uid,
-                             name=self.shared.name, method=method, args=args,
-                             kwargs=kwargs, modifies=modifies)
-        if modifies:
-            self.modified = True
-        return v
+        self.client.raise_deferred(self.txn_uid)
+        if not modifies:
+            lc = self.live_copy
+            if lc is not None:
+                # Held-state piggyback: exclusive access means the copy is
+                # exact — the pure read costs zero round trips.
+                return lc.call(method, args, kwargs)
+            return self.client.call("txn_call", txn=self.txn_uid,
+                                    name=self.shared.name, method=method,
+                                    args=args, kwargs=kwargs, modifies=False)
+        res = self.client.call("txn_call", txn=self.txn_uid,
+                               name=self.shared.name, method=method,
+                               args=args, kwargs=kwargs, modifies=True,
+                               want_state=self._reads_ahead(0))
+        self.modified = True
+        self.live_copy = load_buf(res.get("state"))
+        return res["value"]
+
+    def _reads_ahead(self, pending: int) -> bool:
+        """Will this transaction still perform pure reads on this object
+        (beyond ``pending`` in flight)? If not, a held-state copy has no
+        consumer — don't ask the server to serialize one."""
+        return self.sup.reads - self.rc - pending > 0
 
     def buf_call(self, method: str, args: tuple, kwargs: dict) -> Any:
-        return self.client.call("buf_call", txn=self.txn_uid,
-                                name=self.shared.name, method=method,
-                                args=args, kwargs=kwargs)
+        self.client.raise_deferred(self.txn_uid)
+        with self.lock:
+            buf = self.buf
+        if buf is not None and buf is not _REMOTE_BUF:
+            # Piggybacked local copy: zero round trips.
+            return buf.call(method, args, kwargs)
+        # First read of a home-node buffer: ask for the buffer state to
+        # ride along (piggyback), so subsequent reads are local.
+        res = self.client.call("buf_call", txn=self.txn_uid,
+                               name=self.shared.name, method=method,
+                               args=args, kwargs=kwargs, want_buf=True)
+        local = load_buf(res["buf"])
+        if local is not None:
+            with self.lock:
+                self.buf = local
+        return res["value"]
 
     def apply_log(self) -> None:
         if len(self.log):
@@ -330,11 +491,32 @@ class RemoteObjectAccess(ObjectAccess):
             self.client.call("apply_log", txn=self.txn_uid,
                              name=self.shared.name, entries=entries)
             self.modified = True
+            self.live_copy = None   # live state moved without a refresh
 
     def snapshot_buf(self) -> None:
-        self.client.call("buffer_snapshot", txn=self.txn_uid,
-                         name=self.shared.name)
-        self.buf = _REMOTE_BUF
+        payload = self.client.call("buffer_snapshot", txn=self.txn_uid,
+                                   name=self.shared.name)
+        # The reply piggybacks the buffer state when small: trailing reads
+        # after the last write/update are then local.
+        self.buf = load_buf(payload) or _REMOTE_BUF
+
+    def snapshot_and_release(self) -> None:
+        """§2.8.3-4 release point as one pipelined one-way message: the
+        writer's hot path never waits for it. With a live held-state copy
+        (refreshed by the last modifying reply) the copy *is* the §2.8.3-4
+        read buffer — trailing reads are local immediately and the server
+        only needs the release. Without one, the buffer stays home and the
+        first trailing read fetches it (with piggyback) via ``buf_call``."""
+        lc = self.live_copy
+        if lc is not None:
+            self.client.notify("release", txn=self.txn_uid,
+                               name=self.shared.name)
+            self.buf = lc
+        else:
+            self.client.notify("snap_release", txn=self.txn_uid,
+                               name=self.shared.name)
+            self.buf = _REMOTE_BUF
+        self.released = True
 
     def ensure_checkpoint(self) -> None:
         if self.seen_instance is None:
@@ -342,12 +524,16 @@ class RemoteObjectAccess(ObjectAccess):
                 "ensure_checkpoint", txn=self.txn_uid, name=self.shared.name)
 
     def release(self) -> None:
+        """Early release is a one-way notification: successors unblock as
+        soon as the server processes it, and this client's hot path never
+        waits for the round trip. Errors defer to the next sync point."""
         if not self.released:
-            self.client.call("release", txn=self.txn_uid,
-                             name=self.shared.name)
+            self.client.notify("release", txn=self.txn_uid,
+                               name=self.shared.name)
             self.released = True
 
     def wait_termination(self, timeout: Optional[float]) -> bool:
+        self.client.raise_deferred(self.txn_uid)
         return self.client.call("wait_termination", txn=self.txn_uid,
                                 name=self.shared.name, timeout=timeout)
 
@@ -365,9 +551,119 @@ class RemoteObjectAccess(ObjectAccess):
 
     def valid_commit_batch(self, accs: List["RemoteObjectAccess"]) -> bool:
         """One validation RPC for the whole per-node batch (commit step 4)."""
-        bad = self.client.call("validate", txn=self.txn_uid,
-                               names=[a.shared.name for a in accs])
-        return not bad
+        return self.valid_commit_batch_async(accs).result()
+
+    # -- commit/abort steps: per-node batched, pipelined RPCs ----------------
+    def wait_termination_batch_async(self, accs: List["RemoteObjectAccess"],
+                                     timeout: Optional[float],
+                                     best_effort: bool = False):
+        """Commit step 2 for this node in one RPC, issued without waiting:
+        the termination waits of all home nodes overlap."""
+        if not best_effort:
+            self.client.raise_deferred(self.txn_uid)
+        return _WireCompletion(self.client.call_async(
+            "wait_termination_batch", txn=self.txn_uid,
+            names=[a.shared.name for a in accs], timeout=timeout,
+            best_effort=best_effort))
+
+    def commit_wave1_async(self, accs: List["RemoteObjectAccess"],
+                           timeout: Optional[float]):
+        """Commit steps 2-4 for this node in a single pipelined RPC: wait
+        the commit condition, checkpoint/apply/release, validate. The
+        waves of different home nodes run concurrently."""
+        self.client.raise_deferred(self.txn_uid)
+        items = []
+        for a in accs:
+            entries = list(a.log.entries)
+            a.log.entries.clear()
+            items.append((a.shared.name, entries))
+
+        def epilogue(res: Dict[str, Any]):
+            for a, (_n, entries) in zip(accs, items):
+                if a.seen_instance is None:
+                    a.seen_instance = -1   # checkpointed server-side
+                if entries:
+                    a.modified = True
+                a.released = True
+            return res["blocked"], not res["bad"]
+
+        return _WireCompletion(
+            self.client.call_async("commit_wave1", txn=self.txn_uid,
+                                   items=items, timeout=timeout), epilogue)
+
+    def valid_commit_batch_async(self, accs: List["RemoteObjectAccess"]):
+        fut = self.client.call_async(
+            "validate", txn=self.txn_uid,
+            names=[a.shared.name for a in accs])
+        return _WireCompletion(fut, lambda bad: not bad)
+
+    def finish_batch_async(self, accs: List["RemoteObjectAccess"],
+                           best_effort: bool = False):
+        """Step 5 (terminate). On the commit path this is a pipelined
+        one-way: by the time it is sent the client holds every domain's
+        validation verdict — the only input termination needs — so waiting
+        for a reply buys nothing. Successors parked on our versions wake
+        as soon as the message lands (half a round trip), and a client
+        that dies before delivery is exactly the paper's step-5 crash:
+        §3.4 expiry converges the session. The abort path
+        (``best_effort``) keeps the await: callers of an *aborted*
+        transaction may immediately observe server state and must find the
+        objects released."""
+        uid = self.txn_uid
+        names = [a.shared.name for a in accs]
+        if best_effort:
+            fut = self.client.call_async("finish_batch", txn=uid,
+                                         names=names, best_effort=True,
+                                         end=True)
+        else:
+            self.client.notify("finish_batch", txn=uid, names=names,
+                               best_effort=True, end=True)
+            fut = None
+        for a in accs:
+            a.released = True
+            a.terminated = True
+        self.client.mark_session_ended(uid)
+        return Completed(None) if fut is None else _WireCompletion(fut)
+
+    def commit_solo_async(self, accs: List["RemoteObjectAccess"],
+                          timeout: Optional[float]):
+        """Single-domain commit: steps 2-5 in ONE RPC (the validation
+        verdict is local to this node, so it can terminate in the same
+        unit and drop the session)."""
+        self.client.raise_deferred(self.txn_uid)
+        uid = self.txn_uid
+        items = []
+        for a in accs:
+            entries = list(a.log.entries)
+            a.log.entries.clear()
+            items.append((a.shared.name, entries))
+
+        def epilogue(res: Dict[str, Any]):
+            ok = not res["bad"]
+            for a, (_n, entries) in zip(accs, items):
+                if a.seen_instance is None:
+                    a.seen_instance = -1
+                if entries:
+                    a.modified = True
+                a.released = True
+                if ok:
+                    a.terminated = True
+            if ok:
+                self.client.mark_session_ended(uid)
+            return res["blocked"], ok
+
+        return _WireCompletion(
+            self.client.call_async("commit_solo", txn=uid, items=items,
+                                   timeout=timeout), epilogue)
+
+    def rollback_batch_async(self, accs: List["RemoteObjectAccess"]):
+        return _WireCompletion(self.client.call_async(
+            "rollback_batch", txn=self.txn_uid,
+            names=[a.shared.name for a in accs]))
+
+    def raise_deferred(self) -> None:
+        """Sync point for this access's pipelined one-way operations."""
+        self.client.raise_deferred(self.txn_uid)
 
     def abandon(self) -> None:
         """Failed-start cleanup: the home node skips this transaction's
@@ -378,7 +674,8 @@ class RemoteObjectAccess(ObjectAccess):
         self.client.call("rollback", txn=self.txn_uid, name=self.shared.name)
 
     def terminate(self) -> None:
-        self.client.call("terminate", txn=self.txn_uid, name=self.shared.name)
+        self.client.notify("terminate", txn=self.txn_uid,
+                           name=self.shared.name)
         self.terminated = True
 
     def note_contact(self) -> None:

@@ -7,15 +7,28 @@ per-node :class:`~repro.core.executor.Executor`, and the §3.4
 :class:`~repro.core.faults.TransactionMonitor` all live here.
 
 **Delegation boundary.** For every client transaction the server keeps a
-*session* — the home-node halves of the client's ``ObjectAccess`` records:
-checkpoint (``st``) and read buffer (``buf``) copies, the
-modified/holds/released flags the monitor machinery keys off, and the
-executor tasks of §2.7 (read-only buffering) and §2.8.4 (last-write log
-application). Those tasks are submitted to *this node's* executor gated on
-the local version header, so buffering/apply work runs where the data
-lives; the client learns only the completion event (``task_join``). Object
-state never crosses the wire — not for buffering, not for checkpoints, not
-for abort restores.
+*session* holding the home-node halves of the client's ``ObjectAccess``
+records. Since PR 3 those halves *are* ``ObjectAccess`` subclasses
+(:class:`_ServerAccess`): checkpointing, buffering, log application
+(through :class:`~repro.core.buffers.LogBuffer`), release, rollback, and
+termination run the same base methods the in-process transport runs —
+the wire handlers only marshal arguments. The §2.7/§2.8.4 task bodies are
+overridden to add the §3.4 expiry checks a multi-process world needs, but
+delegate the actual log replay to ``LogBuffer.apply_to``.
+
+**Multiplexed connections.** One framed socket per client process carries
+tagged requests, one-way messages, replies, and server pushes
+(``wire.py``). The per-connection reader handles quick operations inline
+and hands potentially-blocking ones (gate waits, dispensing, task joins,
+service-time-bearing method calls) to a thread each, so a parked RPC never
+stalls the link — replies complete out of order, matched by request id.
+One-way messages are always processed inline, which gives them FIFO
+ordering relative to later requests on the same connection (a pipelined
+kickoff is guaranteed to be registered before the join that follows it);
+their failures are pushed back as ``oneway_err`` notes (error deferral).
+When a §2.7/§2.8.4 task completes, a ``task_done`` note — carrying the
+read buffer's state when small (piggyback read protocol) — is pushed on
+the owning client's connection(s).
 
 **Version-lock service.** ``dispense_batch`` implements the server side of
 start-time global-order version acquisition (§2.10.2): it acquires this
@@ -26,17 +39,18 @@ one round-trip per node, not per object). Gates are plain ``Lock``s, not
 the header ``RLock``s, because they must be releasable from a different
 connection thread; dispensing itself still happens under the header lock.
 
-**Failure detection (§3.4).** Sessions are refreshed by client heartbeats;
-a client process that dies stops heartbeating (session reaper, detector
-timeout) and — faster — drops its *presence* connection (immediate). Either
-way ``_expire_session`` performs the paper's self-rollback for everything
-the session dispensed on: restore the checkpoint where state was modified
-(oldest-restore-wins on the instance epoch), bump the epoch so readers of
-the dead transaction's state cascade-abort, and advance ``lv``/``ltv`` past
-its private version so survivors' chains unwedge, then commit. Dead
-clients' held version-lock gates are force-released the same way. The
-object-level :class:`TransactionMonitor` still runs for in-process users of
-an embedded server's registry.
+**Failure detection (§3.4).** Sessions are refreshed by client heartbeats
+(one-way messages riding the mux link); a client process that dies stops
+heartbeating (session reaper, detector timeout) and — faster — its mux
+connection drops (immediate: the connection doubles as the presence
+signal). Either way ``_expire_session`` performs the paper's self-rollback
+for everything the session dispensed on: restore the checkpoint where
+state was modified (oldest-restore-wins on the instance epoch), bump the
+epoch so readers of the dead transaction's state cascade-abort, and
+advance ``lv``/``ltv`` past its private version so survivors' chains
+unwedge, then commit. Dead clients' held version-lock gates are
+force-released the same way. The object-level :class:`TransactionMonitor`
+still runs for in-process users of an embedded server's registry.
 
 Run standalone::
 
@@ -48,69 +62,261 @@ which prints ``LISTENING host:port`` on stdout for the parent to parse
 from __future__ import annotations
 
 import argparse
+import pickle
+import queue
 import socket
 import sys
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
-from repro.core.api import InstanceInvalidated, Mode, method_mode
+from repro.core.api import (INF, InstanceInvalidated, Mode, Suprema,
+                            TransactionError, method_mode)
 from repro.core.buffers import CopyBuffer
-from repro.core.executor import Task
+from repro.core.executor import Task, defer_wake_inline
 from repro.core.faults import TransactionMonitor
 from repro.core.registry import Registry, SharedObject
+from repro.core.transaction import ObjectAccess
 from repro.core.versioning import skip_version
 
-from .wire import (ConnectionClosed, OK, WireError, encode_error, recv_msg,
-                   send_msg)
+from .wire import (ConnectionClosed, ERR, FrameReader, NOTE, OK,
+                   PIGGYBACK_MAX, WireError, encode_error,
+                   frame as wire_frame, send_msg)
+
+_SERVER_SUP = Suprema(reads=INF, writes=INF, updates=INF)
 
 
-class _ServerAccess:
+class _WouldBlock(Exception):
+    """A non-blocking fast-path attempt hit contention: redo on the pool."""
+
+
+class _Conn:
+    """Per-connection send state: one lock serializes the socket's write
+    side across worker threads, pushes, and reply piggybacks.
+    ``pending_out`` holds the unsent tail of a partially written push
+    frame — it MUST go out before any other frame on this socket."""
+
+    __slots__ = ("sock", "send_lock", "notes", "pending_out", "client_id")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.send_lock = threading.Lock()
+        self.notes: List[dict] = []          # pending piggyback notes
+        self.pending_out = b""               # spilled partial push frame
+        self.client_id: Optional[str] = None  # set by mux_hello
+
+
+class _WorkerPool:
+    """Grow-on-demand thread pool with idle-worker reuse.
+
+    Potentially-blocking RPCs need a thread each (a capped pool would
+    deadlock: gate-wait RPCs could occupy every worker while the release
+    that frees them queues behind), but spawning a fresh thread per request
+    costs real latency on the hot path — so idle workers are reused and the
+    pool only grows when every worker is busy."""
+
+    def __init__(self, name: str = "op"):
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._idle = 0
+        self._spawned = 0
+        self._name = name
+
+    def submit(self, fn: Callable[[], None]) -> None:
+        with self._lock:
+            grow = self._idle == 0
+            if grow:
+                self._spawned += 1
+                n = self._spawned
+            else:
+                self._idle -= 1
+        if grow:
+            threading.Thread(target=self._run, name=f"{self._name}-{n}",
+                             daemon=True).start()
+        self._q.put(fn)
+
+    def _run(self) -> None:
+        while True:
+            fn = self._q.get()
+            if fn is None:
+                return
+            try:
+                fn()
+            except Exception:  # noqa: BLE001 - handlers report their own errors
+                pass
+            with self._lock:
+                self._idle += 1
+
+    def stop(self) -> None:
+        with self._lock:
+            n = self._spawned
+        for _ in range(n):
+            self._q.put(None)
+
+
+class _ServerAccess(ObjectAccess):
     """Home-node half of one transaction's ``ObjectAccess`` record.
 
-    Field names deliberately mirror ``ObjectAccess`` — the §3.4 monitor's
-    ``rollback_object`` reads ``holds_access``/``st``/``modified``/``pv``
-    off whatever the object's holder exposes, so sessions plug into the
-    existing machinery unchanged.
+    A real :class:`ObjectAccess` whose owning "transaction" is the server
+    session — checkpoint/rollback/buffer/log logic lives once, on the base
+    class (ROADMAP item from the PR 2 review). Only the §2.7/§2.8.4 task
+    bodies are overridden: in a multi-process world they must no-op after a
+    §3.4 expiry (a dead client's log must never be applied), which needs
+    the expiry check and the apply to share the header lock.
     """
 
-    __slots__ = ("shared", "pv", "st", "buf", "seen_instance",
-                 "holds_access", "released", "modified", "lock")
+    __slots__ = ("server", "push_conn", "task_result", "push_done",
+                 "inline_tasks", "ship_state", "aborted")
 
-    def __init__(self, shared: SharedObject, pv: int):
-        self.shared = shared
+    def __init__(self, server: "NodeServer", session: "_Session",
+                 shared: SharedObject, pv: int):
+        super().__init__(session, shared, _SERVER_SUP)
         self.pv = pv
-        self.st: Optional[CopyBuffer] = None
-        self.buf: Optional[CopyBuffer] = None
-        self.seen_instance: Optional[int] = None
-        self.holds_access = False
-        self.released = False
-        self.modified = False
-        self.lock = threading.Lock()
+        self.server = server
+        #: connection to push the task-done note to; ``None`` while a
+        #: carrier RPC (the dispense reply) may still deliver it instead.
+        self.push_conn: Optional[_Conn] = None
+        self.task_result: Optional[tuple] = None  # (error, buf payload)
+        self.push_done = False
+        #: ship held-state copies to the client while it holds access?
+        #: flips off permanently once the state proves too big/unpicklable.
+        self.ship_state = True
+        #: set (under the header lock) by the abort path: a stale commit
+        #: wave that wakes afterwards must not apply this access's log.
+        self.aborted = False
+        #: True while the spawner runs on a worker thread (dispense): an
+        #: open-gated task may run inline there, completing within the RPC
+        #: so its result rides the reply. False from the conn reader (a
+        #: one-way kickoff), where inline work would stall the link.
+        self.inline_tasks = False
+
+    @property
+    def session(self) -> "_Session":
+        return self.txn
+
+    def _ro_buffer_code(self) -> None:
+        if self.session.expired:
+            return        # §3.4: the expiry advanced our version already
+        super()._ro_buffer_code()
+
+    def _lw_apply_code(self) -> None:
+        shared = self.shared
+        # The expired check and the apply happen under the header lock,
+        # which _expire_session also takes before deciding whether to
+        # restore: either we see the expiry and no-op, or the expiry sees
+        # our checkpoint (self.st) and restores it — a dead transaction's
+        # log can never slip through unrestored.
+        with shared.header.lock:
+            if self.session.expired:
+                return    # §3.4: never apply a dead transaction's log
+            inst = shared.header.instance
+            st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+            self.log.apply_to(shared.holder.obj)
+            buf = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
+            with self.lock:
+                self.seen_instance = inst
+                self.st = st
+                self.buf = buf
+                self.modified = True
+                self.holds_access = True
+        shared.header.release_to(self.pv)
+        with self.lock:
+            self.released = True
+
+    def commit_prep(self) -> None:
+        """Commit step 3 under the header lock, guarded against a stale
+        wave: a ``commit_wave1`` worker that was parked in its commit
+        condition while the client aborted (rollback + terminate + session
+        end) must never apply the dead transaction's log afterwards. The
+        abort marks ``aborted`` under the same header lock that serializes
+        the checkpoint/apply here, so exactly one of the two orders holds:
+        prep-then-rollback (the restore erases the applied log — the
+        checkpoint was taken first) or rollback-then-prep (raises)."""
+        with self.shared.header.lock:
+            if self.aborted or self.session.expired:
+                raise InstanceInvalidated(
+                    f"access on {self.shared.name!r} was rolled back "
+                    f"before commit step 3 could run")
+            self.ensure_checkpoint()
+            self.apply_log()
+        # Release outside the lock: it wakes successors (possibly running
+        # their tasks on this thread) and must not do so under our hold.
+        self.release()
+
+    def mark_aborted(self) -> None:
+        with self.shared.header.lock:
+            self.aborted = True
+
+    def _owner_label(self) -> str:
+        return self.session.txn_uid
+
+    def _submit_task(self, label: str, kind: str,
+                     code: Callable[[], None]) -> Task:
+        """Submit off the reader thread (``inline_ready=False`` — running
+        the snapshot inline would stall every conversation on the socket)
+        and deliver a ``task_done`` note to the client on completion.
+
+        Delivery handshake (race-free under ``self.lock``): the completed
+        task records its result; if ``push_conn`` is set it pushes, and if
+        not — a carrier RPC (the dispense reply that spawned it) is still
+        in flight and will piggyback the result instead. Whichever side
+        runs second delivers."""
+        server, session, name = self.server, self.session, self.shared.name
+
+        def wrapped() -> None:
+            error: Optional[BaseException] = None
+            try:
+                code()
+            except BaseException as e:  # noqa: BLE001 - note + re-raise
+                error = e
+                raise
+            finally:
+                payload = (server._buf_payload(self)
+                           if error is None else None)
+                with self.lock:
+                    self.task_result = (
+                        encode_error(error) if error is not None else None,
+                        payload)
+                    conn = self.push_conn
+                    if conn is not None:
+                        self.push_done = True
+                if conn is not None:
+                    server._push_task_done(session, name, conn,
+                                           self.task_result)
+
+        # wake_inline: when a release opens this task's gate, it runs on
+        # the releasing thread (trampolined) — the snapshot/apply and its
+        # completion push cost the client exactly one wakeup.
+        return self.shared.node.executor.submit(
+            self.shared.header, kind, self.pv, wrapped,
+            name=f"{label}:{name}:{self._owner_label()}",
+            inline_ready=self.inline_tasks, wake_inline=True)
 
 
 class _Session:
     """All server-side state of one client transaction (its txn record).
 
-    Duck-types the transaction for the monitor: ``_accesses`` maps shared
-    object → access record, exactly like ``Transaction._accesses``.
+    Duck-types the transaction for the monitor and for the base
+    ``ObjectAccess`` methods: ``_accesses`` maps shared object → access
+    record exactly like ``Transaction._accesses``, and the session is what
+    ``shared.touch``/``clear_holder`` see as the holding transaction.
     """
+
+    client_node = None      # ObjectAccess.raw_call's from_node
 
     def __init__(self, txn_uid: str, client_id: str):
         self.txn_uid = txn_uid
         self.client_id = client_id
         self._accesses: Dict[SharedObject, _ServerAccess] = {}
-        self.tasks: Dict[int, Task] = {}
+        self.tasks: Dict[str, Task] = {}     # object name -> release task
         self.held_gates: List[threading.Lock] = []
         self.last_contact = time.monotonic()
         self.expired = False      # set by §3.4 expiry; parked tasks no-op
-        self._next_task = 0
         self.lock = threading.Lock()
 
-    def new_task_id(self) -> int:
-        with self.lock:
-            self._next_task += 1
-            return self._next_task
+    @property
+    def id(self) -> str:
+        return self.txn_uid
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"_Session({self.txn_uid})"
@@ -118,6 +324,23 @@ class _Session:
 
 class NodeServer:
     """One registry node served over TCP."""
+
+    #: Ops that may block (version gates, dispensing 2PL, task joins) or
+    #: burn service time (object methods, log application): each gets its
+    #: own thread so a parked RPC never stalls the multiplexed connection.
+    #: Unknown ops are threaded too — blocking is the conservative guess.
+    _INLINE_OPS = frozenset({
+        "ping", "list_bindings", "mode_of", "header_state", "header_release",
+        "header_terminate", "validate", "release", "terminate",
+        "finish_batch", "rollback_batch", "end_txn", "release_version_locks",
+        "ensure_checkpoint", "buffer_snapshot", "snap_release", "stats",
+        "touch", "clear_holder", "heartbeat", "abandon", "ro_buffer",
+        "lw_apply",
+    })
+
+    #: Ops whose handler needs the originating connection (to route task
+    #: completion pushes back the way the kickoff came).
+    _CONN_OPS = frozenset({"ro_buffer", "lw_apply", "dispense_batch"})
 
     def __init__(self, node_name: str = "node0", host: str = "127.0.0.1",
                  port: int = 0, *, registry: Optional[Registry] = None,
@@ -132,9 +355,15 @@ class NodeServer:
                 node_name, executor_workers=executor_workers)
         self.monitor = TransactionMonitor(
             self.registry, timeout=monitor_timeout, poll_interval=monitor_poll)
+        self._pool = _WorkerPool(name=f"op-{node_name}")
+        self._peers: Dict[str, Any] = {}                # addr -> NodeClient
+        self._note_q: "queue.SimpleQueue" = queue.SimpleQueue()
+        threading.Thread(target=self._pusher_loop,
+                         name=f"note-pusher-{node_name}",
+                         daemon=True).start()
         self._sessions: Dict[str, _Session] = {}
         self._gates: Dict[str, threading.Lock] = {}     # per-object dispense gate
-        self._presence: Dict[str, socket.socket] = {}   # client_id -> conn
+        self._mux: Dict[str, List[_Conn]] = {}          # client_id -> conns
         self._conns: set = set()                        # live connections
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -179,6 +408,13 @@ class NodeServer:
             except OSError:
                 pass
         self.monitor.stop()
+        self._pool.stop()
+        self._note_q.put(None)
+        with self._lock:
+            peers = list(self._peers.values())
+            self._peers.clear()
+        for p in peers:
+            p.close()
         self.registry.shutdown()
 
     def serve_forever(self) -> None:
@@ -197,63 +433,266 @@ class NodeServer:
     def _accept_loop(self) -> None:
         while not self._stop.is_set():
             try:
-                conn, _addr = self._listener.accept()
+                sock, _addr = self._listener.accept()
             except OSError:
                 return
-            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            threading.Thread(target=self._serve_conn, args=(conn,),
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._serve_conn, args=(sock,),
                              name="conn", daemon=True).start()
 
-    def _serve_conn(self, conn: socket.socket) -> None:
-        presence_for: Optional[str] = None
+    def _serve_conn(self, sock: socket.socket) -> None:
+        conn = _Conn(sock)
+        reader = FrameReader(sock)
+        # This thread multiplexes many conversations: tasks woken by the
+        # counter advances of its inline ops run on the executor, never
+        # here (foreign service time must not stall the link).
+        defer_wake_inline()
         with self._lock:
-            self._conns.add(conn)
+            self._conns.add(sock)
         try:
             while not self._stop.is_set():
                 try:
-                    op, kwargs = recv_msg(conn)
+                    req_id, op, kw = reader.recv_msg()
                 except (ConnectionClosed, WireError, OSError):
                     break
-                if op == "hello":
-                    presence_for = kwargs["client_id"]
+                if op == "mux_hello":
+                    # The mux connection doubles as the §3.4 presence
+                    # signal: its drop means this client process died.
+                    conn.client_id = kw["client_id"]
                     with self._lock:
-                        self._presence[presence_for] = conn
-                    send_msg(conn, (OK, None))
-                    continue
-                try:
-                    value = self._dispatch(op, kwargs)
-                    reply = (OK, value)
-                except BaseException as e:  # noqa: BLE001 - serialize to peer
-                    reply = encode_error(e)
-                try:
-                    send_msg(conn, reply)
-                except (ConnectionClosed, OSError):
-                    break
-                except Exception as e:  # noqa: BLE001 - unpicklable OK value
-                    # Keep the connection: report the serialization failure
-                    # instead of dying (the client would mark the whole
-                    # server crash-stop dead).
+                        self._mux.setdefault(conn.client_id, []).append(conn)
                     try:
-                        send_msg(conn, encode_error(e))
-                    except Exception:  # noqa: BLE001
+                        self._send_reply(conn, req_id, OK, None)
+                    except (ConnectionClosed, OSError):
                         break
+                    continue
+                if op in self._CONN_OPS:
+                    kw = dict(kw, _conn=conn)   # push notes return this way
+                if req_id is None:
+                    # One-way: execute inline (FIFO vs later requests on
+                    # this connection); failures become deferred-error
+                    # notes pushed back to the sender.
+                    self._handle_oneway(conn, op, kw)
+                elif op in self._INLINE_OPS:
+                    if not self._handle_request(conn, req_id, op, kw):
+                        break
+                elif self._try_fast(conn, req_id, op, kw):
+                    pass   # handled inline (uncontended fast path)
+                else:
+                    self._pool.submit(
+                        lambda c=conn, r=req_id, o=op, k=kw:
+                        self._handle_request(c, r, o, k))
         finally:
             with self._lock:
-                self._conns.discard(conn)
+                self._conns.discard(sock)
+                last_of_client = False
+                if conn.client_id is not None:
+                    conns = self._mux.get(conn.client_id, [])
+                    if conn in conns:
+                        conns.remove(conn)
+                    if not conns:
+                        self._mux.pop(conn.client_id, None)
+                        last_of_client = True
             try:
-                conn.close()
+                sock.close()
             except OSError:
                 pass
-            if presence_for is not None:
-                with self._lock:
-                    is_current = self._presence.get(presence_for) is conn
-                if is_current:
-                    self._client_vanished(presence_for)
+            if last_of_client:
+                self._client_vanished(conn.client_id)
+
+    def _handle_request(self, conn: _Conn, req_id: int, op: str,
+                        kw: Dict[str, Any]) -> bool:
+        try:
+            value = self._dispatch(op, kw)
+            status = OK
+        except BaseException as e:  # noqa: BLE001 - serialize to peer
+            status, value = ERR, encode_error(e)
+        try:
+            self._send_reply(conn, req_id, status, value)
+        except (ConnectionClosed, OSError):
+            # The reader (or another worker) will observe the broken socket;
+            # make sure it does even if it is parked in recv.
+            try:
+                conn.sock.close()
+            except OSError:
+                pass
+            return False
+        return True
+
+    def _try_fast(self, conn: _Conn, req_id: int, op: str,
+                  kw: Dict[str, Any]) -> bool:
+        """Uncontended fast paths for normally-threaded ops: when the op
+        provably won't block (gates free, commit conditions already open,
+        no logs to burn service time on), run it inline on the reader and
+        skip two thread handoffs. Contention falls back to the pool.
+
+        Inline work here may include bounded state *snapshots* (§2.7
+        buffers, commit checkpoints) — the same class of work the
+        ``buffer_snapshot``/``snap_release`` inline ops already do on the
+        reader. Unbounded service time (object *methods*, log replay)
+        never runs inline."""
+        if op == "dispense_batch" and not kw.get("chain"):
+            try:
+                value, status = self._dispatch(op, dict(kw, _nb=True)), OK
+            except _WouldBlock:
+                return False
+            except BaseException as e:  # noqa: BLE001 - serialize to peer
+                value, status = encode_error(e), ERR
+            try:
+                self._send_reply(conn, req_id, status, value)
+            except (ConnectionClosed, OSError):
+                try:
+                    conn.sock.close()
+                except OSError:
+                    pass
+            return True
+        if op in ("commit_wave1", "commit_solo"):
+            if self._wave1_ready(kw.get("txn"), kw.get("items", ())):
+                self._handle_request(conn, req_id, op, kw)
+                return True
+        return False
+
+    def _wave1_ready(self, txn: str, items: List[tuple]) -> bool:
+        """True iff commit steps 2-4 would run without blocking or service
+        time: every commit condition already holds and no stray write log
+        needs applying. (Monotonic counters: once true, stays true.)"""
+        try:
+            for name, entries in items:
+                if entries:
+                    return False
+                acc = self._acc(txn, name)
+                h = acc.shared.header
+                with h.lock:
+                    if h.ltv < acc.pv - 1:
+                        return False
+            return True
+        except BaseException:  # noqa: BLE001 - let the pool path raise it
+            return False
+
+    def _handle_oneway(self, conn: _Conn, op: str, kw: Dict[str, Any]) -> None:
+        try:
+            self._dispatch(op, kw)
+        except BaseException as e:  # noqa: BLE001 - defer to the client
+            self._queue_note(conn, {
+                "kind": "oneway_err", "op": op, "txn": kw.get("txn"),
+                "name": kw.get("name"), "error": encode_error(e)})
+
+    # -- sending (replies, pushes, piggybacked notes) ------------------------
+    def _send_reply(self, conn: _Conn, req_id: int, status: str,
+                    value: Any) -> None:
+        with conn.send_lock:
+            if conn.pending_out:        # a spilled push frame goes first
+                conn.sock.sendall(conn.pending_out)
+                conn.pending_out = b""
+            notes, conn.notes = conn.notes, []
+            try:
+                send_msg(conn.sock, (req_id, status, value, notes))
+            except (ConnectionClosed, OSError):
+                raise
+            except Exception as e:  # noqa: BLE001 - unpicklable OK value
+                # Keep the connection: report the serialization failure
+                # instead of dying (the client would mark the whole server
+                # crash-stop dead).
+                send_msg(conn.sock, (req_id, ERR, encode_error(e), notes))
+
+    def _queue_note(self, conn: _Conn, note: dict) -> None:
+        """Deliver a note on ``conn``: normally a direct *non-blocking*
+        push (``MSG_DONTWAIT`` — the queuing thread may be another
+        client's reader or the executor, and must never block on this
+        client's stalled receive buffer); on a full socket buffer the
+        frame's tail spills to the pusher thread, and queued notes also
+        ride the next departing reply (piggyback)."""
+        spill = False
+        with conn.send_lock:
+            if conn.pending_out:
+                conn.notes.append(note)   # strict frame order: spill more
+                spill = True
+            else:
+                data = wire_frame((None, NOTE, None, [note]))
+                try:
+                    sent = conn.sock.send(data, socket.MSG_DONTWAIT)
+                except (BlockingIOError, InterruptedError):
+                    sent = 0
+                except OSError:
+                    return                # conn dying: client will learn
+                if sent != len(data):
+                    conn.pending_out = data[sent:]
+                    spill = True
+        if spill:
+            self._note_q.put(conn)
+
+    def _pusher_loop(self) -> None:
+        """Flushes spilled push frames and queued notes, blocking only on
+        the one connection being flushed (cross-client isolation)."""
+        while True:
+            conn = self._note_q.get()
+            if conn is None:
+                return
+            try:
+                with conn.send_lock:
+                    if conn.pending_out:
+                        conn.sock.sendall(conn.pending_out)
+                        conn.pending_out = b""
+                    notes, conn.notes = conn.notes, []
+                    if notes:
+                        send_msg(conn.sock, (None, NOTE, None, notes))
+            except Exception:  # noqa: BLE001 - conn dying: client will learn
+                pass
+
+    def _push_task_done(self, session: _Session, name: str, conn: _Conn,
+                        result: tuple) -> None:
+        # The target is the connection the kickoff arrived on: its loss
+        # means the whole client process is crash-stop dead (the client
+        # fails all local task waits itself), so no fallback is needed.
+        error, payload = result
+        self._queue_note(conn, {"kind": "task_done", "txn": session.txn_uid,
+                                "name": name, "error": error,
+                                "buf": payload})
+
+    def _buf_payload(self, acc: _ServerAccess) -> Optional[bytes]:
+        """Pickled read-buffer state iff it is small enough to ship (the
+        piggyback read protocol); ``None`` keeps reads home-node-only.
+        Shares the sticky ``ship_state`` opt-out with the held-state
+        piggyback, so a big/unpicklable object pays the wasted
+        serialization at most once per access."""
+        if not acc.ship_state:
+            return None
+        with acc.lock:
+            buf = acc.buf
+        if buf is None:
+            return None
+        try:
+            payload = pickle.dumps(buf.state, protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception:  # noqa: BLE001 - unpicklable state stays home
+            acc.ship_state = False
+            return None
+        if len(payload) > PIGGYBACK_MAX:
+            acc.ship_state = False
+            return None
+        return payload
+
+    def _held_payload(self, acc: _ServerAccess) -> Optional[bytes]:
+        """Held-state copy for the piggyback live-read protocol: while the
+        client holds the access, nobody else can modify the object, so its
+        pure reads may run against a shipped copy that every modifying
+        reply refreshes. ``None`` (too big / unpicklable) keeps reads
+        home-node-only; the decision is sticky per access."""
+        if not acc.ship_state:
+            return None
+        try:
+            payload = pickle.dumps(acc.shared.holder.obj,
+                                   protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception:  # noqa: BLE001
+            acc.ship_state = False
+            return None
+        if len(payload) > PIGGYBACK_MAX:
+            acc.ship_state = False
+            return None
+        return payload
 
     def _client_vanished(self, client_id: str) -> None:
-        """Presence connection dropped: crash-stop the client's sessions."""
+        """Last mux connection dropped: crash-stop the client's sessions."""
         with self._lock:
-            self._presence.pop(client_id, None)
             sessions = [s for s in self._sessions.items()
                         if s[1].client_id == client_id]
         for uid, session in sessions:
@@ -264,10 +703,11 @@ class NodeServer:
     def _reaper_loop(self) -> None:
         """Expire sessions whose client stopped heartbeating (§3.4).
 
-        Covers clients without a presence connection, and — unlike the
-        object-level monitor — also transactions that dispensed versions
-        but never *held* anything: their private versions must still be
-        advanced past, or every successor wedges on the version chain."""
+        Covers clients whose mux connection outlives their heartbeats, and
+        — unlike the object-level monitor — also transactions that
+        dispensed versions but never *held* anything: their private
+        versions must still be advanced past, or every successor wedges on
+        the version chain."""
         while not self._stop.wait(self.monitor.poll_interval):
             now = time.monotonic()
             with self._lock:
@@ -289,10 +729,11 @@ class NodeServer:
         live state and nothing newer restored already (oldest-restore-wins
         on the epoch), bump the instance epoch so observers of the dead
         transaction's state cascade-abort, and skip its private version in
-        chain order (:func:`~repro.core.versioning.skip_version`) so successors unwedge without
-        ever bypassing a live predecessor — this covers held,
-        released-but-unterminated, and never-accessed objects alike.
-        Version-lock gates the session still holds are force-released.
+        chain order (:func:`~repro.core.versioning.skip_version`) so
+        successors unwedge without ever bypassing a live predecessor — this
+        covers held, released-but-unterminated, and never-accessed objects
+        alike. Version-lock gates the session still holds are
+        force-released.
 
         ``session.expired`` is set first: the advance below drains waiters,
         including the session's own parked §2.7/§2.8.4 tasks — woken, they
@@ -357,18 +798,28 @@ class NodeServer:
 
     def _check_valid(self, acc: _ServerAccess) -> None:
         """Per-operation §2.3 validity check, enforced at the home node."""
-        with acc.lock:
-            seen = acc.seen_instance
-        if seen is not None and acc.shared.header.instance != seen:
+        if not acc.valid():
             raise InstanceInvalidated(
                 f"object {acc.shared.name!r} was invalidated by a cascading "
                 f"abort (home-node check)")
 
-    def _note_contact(self, session: _Session, acc: _ServerAccess) -> None:
-        if acc.holds_access and not acc.released:
-            acc.shared.touch(session)
-        elif acc.released:
-            acc.shared.clear_holder(session)
+    def _peer(self, address: str):
+        """Client connection to a peer node server (chain dispensing)."""
+        from .client import NodeClient   # lazy: client imports nothing of us
+        with self._lock:
+            peer = self._peers.get(address)
+        if peer is not None and peer.alive:
+            return peer
+        fresh = NodeClient(address, conns=1)
+        with self._lock:
+            cur = self._peers.get(address)
+            if cur is not None and cur.alive:
+                peer = cur
+            else:
+                self._peers[address] = peer = fresh
+        if peer is not fresh:
+            fresh.close()
+        return peer
 
     def _release_gates(self, session: _Session) -> None:
         with session.lock:
@@ -384,14 +835,31 @@ class NodeServer:
         return {"node": self.node_name, "time": time.time(),
                 "objects": len(self.registry.all_objects())}
 
-    def _op_list_bindings(self) -> Dict[str, Any]:
-        return {"node": self.node_name,
-                "bindings": sorted(self.registry.all_objects())}
+    @staticmethod
+    def _declared_modes(obj: Any) -> Dict[str, Mode]:
+        """All ``@access``-annotated methods of ``obj``'s class — shipped
+        with bindings so clients never pay a ``mode_of`` round trip."""
+        modes: Dict[str, Mode] = {}
+        for n in dir(type(obj)):
+            if n.startswith("_"):
+                continue
+            mode = getattr(getattr(type(obj), n, None), "__access_mode__",
+                           None)
+            if mode is not None:
+                modes[n] = mode
+        return modes
 
-    def _op_bind(self, name: str, obj: Any) -> None:
+    def _op_list_bindings(self) -> Dict[str, Any]:
+        objs = self.registry.all_objects()
+        return {"node": self.node_name,
+                "bindings": {name: self._declared_modes(shared.holder.obj)
+                             for name, shared in sorted(objs.items())}}
+
+    def _op_bind(self, name: str, obj: Any) -> Dict[str, Mode]:
         self.registry.bind(name, obj, self.node)
         with self._lock:
             self._gates[name] = threading.Lock()
+        return self._declared_modes(obj)
 
     def _op_mode_of(self, name: str, method: str) -> Mode:
         return method_mode(self._shared(name).holder.obj, method)
@@ -422,8 +890,23 @@ class NodeServer:
         self._shared(name).header.terminate_to(pv)
 
     # -- start: batched version dispensing (§2.10.2) -------------------------
-    def _op_dispense_batch(self, txn: str, client_id: str,
-                           names: List[str]) -> Dict[str, int]:
+    def _op_dispense_batch(self, txn: str, client_id: str, names: List[str],
+                           ro_names: List[str] = (), kind: str = "access",
+                           chain: List[dict] = (),
+                           _conn: Optional[_Conn] = None,
+                           _nb: bool = False) -> Dict[str, Any]:
+        """Lock-and-dispense for this node's batch; then *forward the
+        chain*: the remaining per-node batches, in global 2PL order, go
+        server-to-server (this node calls the next) while this node's
+        gates stay held — a multi-node start costs the end client one
+        round trip, and every gate-hold window spans a server hop instead
+        of a client bounce. The aggregated reply carries all nodes' pvs.
+
+        The §2.7 read-only buffering kickoffs for ``ro_names`` ride along:
+        tasks whose gate is already open complete during this RPC and
+        their results (buffer state included, when small) ride back on the
+        reply — the uncontended §2.7 hot path costs *zero* messages beyond
+        the dispense itself."""
         with self._lock:
             session = self._sessions.get(txn)
             if session is None:
@@ -436,12 +919,20 @@ class NodeServer:
             for shared, name in objs:
                 with self._lock:
                     gate = self._gates.setdefault(name, threading.Lock())
-                gate.acquire()
+                if _nb:
+                    # Reader fast path: give up (and redo on the pool)
+                    # rather than block the connection on a held gate.
+                    if not gate.acquire(blocking=False):
+                        raise _WouldBlock
+                else:
+                    gate.acquire()
                 acquired.append(gate)
+            for shared, name in objs:
                 with shared.header.lock:
                     pv = shared.header.dispense()
                 with session.lock:   # heartbeats iterate _accesses live
-                    session._accesses[shared] = _ServerAccess(shared, pv)
+                    session._accesses[shared] = _ServerAccess(
+                        self, session, shared, pv)
                 pvs[name] = pv
         except BaseException:
             for g in reversed(acquired):
@@ -449,198 +940,260 @@ class NodeServer:
             raise
         with session.lock:
             session.held_gates.extend(acquired)
-        return pvs
+        # Completion-note target: the connection the request came in on if
+        # it belongs to the end client, else (chain-forwarded: the request
+        # came from a peer server) any mux connection the end client keeps
+        # to this node. A miss is safe — joins fall back to task_join.
+        push_to = _conn
+        if push_to is None or push_to.client_id != client_id:
+            with self._lock:
+                conns = self._mux.get(client_id)
+                push_to = conns[0] if conns else None
+        ro: Dict[str, Optional[dict]] = {}
+        for name in ro_names:
+            acc = self._acc(txn, name)
+            acc.inline_tasks = True   # open gate ⇒ complete within this RPC
+            acc.spawn_ro_buffer(kind)
+            acc.inline_tasks = False
+            session.tasks[name] = acc.release_task
+            # Delivery handshake (see _ServerAccess._submit_task): if the
+            # task already completed, carry its result on this reply;
+            # otherwise arm the push and the completion will send a note.
+            with acc.lock:
+                if acc.task_result is not None and not acc.push_done:
+                    acc.push_done = True
+                    ro[name] = {"error": acc.task_result[0],
+                                "buf": acc.task_result[1]}
+                else:
+                    acc.push_conn = push_to
+                    ro[name] = None
+        if chain:
+            head, rest = chain[0], list(chain[1:])
+            sub = self._peer(head["address"]).call(
+                "dispense_batch", txn=txn, client_id=client_id,
+                names=head["names"], ro_names=head["ro_names"], kind=kind,
+                chain=rest)
+            pvs.update(sub["pvs"])
+            ro.update(sub["ro"])
+        return {"pvs": pvs, "ro": ro}
 
     def _op_release_version_locks(self, txn: str) -> None:
         self._release_gates(self._session(txn))
 
     # -- §2.7 / §2.8.4: asynchronous home-node tasks -------------------------
-    def _op_ro_buffer(self, txn: str, name: str, kind: str) -> int:
+    def _op_ro_buffer(self, txn: str, name: str, kind: str,
+                      _conn: Optional[_Conn] = None) -> None:
         session = self._session(txn)
         acc = self._acc(txn, name)
-        shared = acc.shared
-
-        def code() -> None:
-            if session.expired:
-                return        # §3.4: the expiry advanced our version already
-            with shared.header.lock:
-                inst = shared.header.instance
-            with acc.lock:
-                acc.seen_instance = inst
-                acc.buf = CopyBuffer(shared.holder.obj, inst,
-                                     home_node=shared.node)
-            shared.header.release_to(acc.pv)
-            with acc.lock:
-                acc.released = True
-
-        task = self.node.executor.submit(
-            shared.header, kind, acc.pv, code,
-            name=f"ro-buffer:{name}:{txn}")
-        task_id = session.new_task_id()
-        session.tasks[task_id] = task
-        return task_id
+        acc.push_conn = _conn
+        acc.spawn_ro_buffer(kind)
+        session.tasks[name] = acc.release_task
 
     def _op_lw_apply(self, txn: str, name: str, kind: str,
-                     entries: List[tuple]) -> int:
+                     entries: List[tuple],
+                     _conn: Optional[_Conn] = None) -> None:
         session = self._session(txn)
         acc = self._acc(txn, name)
-        shared = acc.shared
+        acc.push_conn = _conn
+        acc.log.entries = list(entries)
+        acc.spawn_lastwrite_apply(kind)
+        session.tasks[name] = acc.release_task
 
-        def code() -> None:
-            # The expired check and the apply happen under the header lock,
-            # which _expire_session also takes before deciding whether to
-            # restore: either we see the expiry and no-op, or the expiry
-            # sees our checkpoint (acc.st, written below) and restores it —
-            # a dead transaction's log can never slip through unrestored.
-            with shared.header.lock:
-                if session.expired:
-                    return    # §3.4: never apply a dead transaction's log
-                inst = shared.header.instance
-                st = CopyBuffer(shared.holder.obj, inst,
-                                home_node=shared.node)
-                obj = shared.holder.obj
-                for method, args, kwargs in entries:
-                    getattr(obj, method)(*args, **kwargs)
-                buf = CopyBuffer(shared.holder.obj, inst,
-                                 home_node=shared.node)
-                with acc.lock:
-                    acc.seen_instance = inst
-                    acc.st = st
-                    acc.buf = buf
-                    acc.modified = True
-                    acc.holds_access = True
-            shared.header.release_to(acc.pv)
-            with acc.lock:
-                acc.released = True
-
-        task = self.node.executor.submit(
-            shared.header, kind, acc.pv, code,
-            name=f"lw-apply:{name}:{txn}")
-        task_id = session.new_task_id()
-        session.tasks[task_id] = task
-        return task_id
-
-    def _op_task_join(self, txn: str, task_id: int) -> Dict[str, Any]:
+    def _op_task_join(self, txn: str, name: str) -> Dict[str, Any]:
         session = self._session(txn)
-        task = session.tasks[task_id]
+        task = session.tasks.get(name)
+        if task is None:
+            raise InstanceInvalidated(
+                f"transaction {txn!r} has no pending task on {name!r}")
         task.join()   # re-raises transactional task errors to the client
-        return {}
+        return {"buf": self._buf_payload(self._acc(txn, name))}
 
     # -- synchronous session state operations --------------------------------
     def _op_open_access(self, txn: str, name: str, kind: str,
                         timeout: Optional[float]) -> Dict[str, Any]:
-        session = self._session(txn)
         acc = self._acc(txn, name)
-        shared = acc.shared
-        h = shared.header
-        if kind == "termination":
-            blocked = h.wait_termination(acc.pv, timeout=timeout)
-        else:
-            blocked = h.wait_access(acc.pv, timeout=timeout)
-        shared.check_reachable()
-        with h.lock:
-            inst = h.instance
-        with acc.lock:
-            acc.seen_instance = inst
-            acc.st = CopyBuffer(shared.holder.obj, inst, home_node=shared.node)
-            acc.holds_access = True
-        shared.touch(session)
-        return {"blocked": blocked, "instance": inst}
+        blocked = acc.open_access(kind, timeout)
+        return {"blocked": blocked, "instance": acc.seen_instance}
+
+    def _op_open_call(self, txn: str, name: str, kind: str,
+                      timeout: Optional[float], entries: List[tuple],
+                      method: str, args: tuple, kwargs: dict,
+                      modifies: bool, want_state: bool = True) -> Dict[str, Any]:
+        """§2.8.2-3 first direct access, fused into one RPC: gate wait +
+        checkpoint + buffered-write apply + the method call itself.
+        ``want_state`` (the client still has pure reads ahead) requests a
+        held-state copy on the reply."""
+        acc = self._acc(txn, name)
+        blocked = acc.open_access(kind, timeout)
+        if entries:
+            acc.log.entries = list(entries)
+            acc.apply_log()
+        self._check_valid(acc)
+        v = acc.raw_call(method, args, kwargs, modifies=modifies)
+        acc.note_contact()
+        return {"blocked": blocked, "instance": acc.seen_instance,
+                "value": v,
+                "state": self._held_payload(acc) if want_state else None}
 
     def _op_txn_call(self, txn: str, name: str, method: str, args: tuple,
-                     kwargs: dict, modifies: bool) -> Any:
-        session = self._session(txn)
+                     kwargs: dict, modifies: bool,
+                     want_state: bool = True) -> Any:
         acc = self._acc(txn, name)
         self._check_valid(acc)
-        acc.shared.check_reachable()
-        v = getattr(acc.shared.holder.obj, method)(*args, **kwargs)
+        v = acc.raw_call(method, args, kwargs, modifies=modifies)
+        acc.note_contact()
         if modifies:
-            acc.modified = True
-        self._note_contact(session, acc)
+            # Refresh the client's held-state copy (piggyback live reads):
+            # the state can only change through this transaction's own
+            # modifying calls, each of which renews the copy. Skipped when
+            # the client has no pure reads left to serve from it.
+            return {"value": v,
+                    "state": self._held_payload(acc) if want_state else None}
         return v
 
     def _op_buf_call(self, txn: str, name: str, method: str, args: tuple,
-                     kwargs: dict) -> Any:
+                     kwargs: dict, want_buf: bool = False) -> Any:
+        """Buffered read. ``want_buf`` additionally returns the buffer's
+        pickled state when small (piggyback read protocol) so the client's
+        subsequent reads of this buffer are local."""
         acc = self._acc(txn, name)
         self._check_valid(acc)
         with acc.lock:
             buf = acc.buf
         if buf is None:
             raise RuntimeError(f"no read buffer for {name!r} in {txn!r}")
-        return buf.call(method, args, kwargs)
+        v = buf.call(method, args, kwargs)
+        if want_buf:
+            return {"value": v, "buf": self._buf_payload(acc)}
+        return v
 
     def _op_apply_log(self, txn: str, name: str,
                       entries: List[tuple]) -> None:
         acc = self._acc(txn, name)
         self._check_valid(acc)
-        obj = acc.shared.holder.obj
-        for method, args, kwargs in entries:
-            getattr(obj, method)(*args, **kwargs)
-        acc.modified = True
+        acc.log.entries = list(entries)
+        acc.apply_log()
 
-    def _op_buffer_snapshot(self, txn: str, name: str) -> None:
+    def _op_buffer_snapshot(self, txn: str, name: str) -> Optional[bytes]:
         acc = self._acc(txn, name)
-        shared = acc.shared
-        with shared.header.lock:
-            inst = shared.header.instance
-        with acc.lock:
-            acc.buf = CopyBuffer(shared.holder.obj, inst,
-                                 home_node=shared.node)
+        acc.snapshot_buf()
+        return self._buf_payload(acc)
+
+    def _op_snap_release(self, txn: str, name: str) -> None:
+        """§2.8.3-4 release point as a one-way: snapshot for trailing
+        reads, then release. The buffer stays home; the client's first
+        trailing read fetches it via ``buf_call(want_buf=True)``."""
+        acc = self._acc(txn, name)
+        acc.snapshot_buf()
+        acc.release()
 
     def _op_ensure_checkpoint(self, txn: str, name: str) -> int:
         acc = self._acc(txn, name)
-        shared = acc.shared
         with acc.lock:
-            if acc.seen_instance is None:
-                with shared.header.lock:
-                    acc.seen_instance = shared.header.instance
-                acc.st = CopyBuffer(shared.holder.obj, acc.seen_instance,
-                                    home_node=shared.node)
-            return acc.seen_instance
+            if acc.seen_instance is not None:
+                return acc.seen_instance
+        acc.ensure_checkpoint()
+        return acc.seen_instance
 
     def _op_release(self, txn: str, name: str) -> None:
-        acc = self._acc(txn, name)
-        with acc.lock:
-            if acc.released:
-                return
-        acc.shared.header.release_to(acc.pv)
-        with acc.lock:
-            acc.released = True
+        self._acc(txn, name).release()
 
     def _op_wait_termination(self, txn: str, name: str,
                              timeout: Optional[float]) -> bool:
-        acc = self._acc(txn, name)
-        return acc.shared.header.wait_termination(acc.pv, timeout=timeout)
+        return self._acc(txn, name).wait_termination(timeout)
+
+    def _op_wait_termination_batch(self, txn: str, names: List[str],
+                                   timeout: Optional[float],
+                                   best_effort: bool = False) -> int:
+        """Commit step 2 for this node's batch: one RPC, one server thread
+        parked on the slowest commit condition. Returns how many of the
+        waits actually blocked (the client's ``waits`` statistic). The
+        batch semantics (best-effort continuation) are the base class's —
+        session accesses ARE ObjectAccess records."""
+        accs = [self._acc(txn, n) for n in names]
+        if not accs:
+            return 0
+        return accs[0].wait_termination_batch_async(
+            accs, timeout, best_effort=best_effort).result()
 
     def _op_validate(self, txn: str, names: List[str]) -> List[str]:
         """Commit step 4, batched per node: names whose instance moved."""
-        bad: List[str] = []
-        for name in names:
+        return [name for name in names if not self._acc(txn, name).valid()]
+
+    def _op_commit_wave1(self, txn: str, items: List[tuple],
+                         timeout: Optional[float]) -> Dict[str, Any]:
+        """Commit steps 2-4 for this node's whole batch in one RPC: wait
+        the commit condition per object, checkpoint/apply/release per
+        object, then validate the batch. ``items`` is ``[(name, log
+        entries), ...]``. Termination (step 5) is deliberately NOT here —
+        it must wait for every node's validation verdict."""
+        blocked = 0
+        for name, _entries in items:
+            if self._acc(txn, name).wait_termination(timeout):
+                blocked += 1
+        for name, entries in items:
             acc = self._acc(txn, name)
-            with acc.lock:
-                seen = acc.seen_instance
-            if seen is not None and acc.shared.header.instance != seen:
-                bad.append(name)
-        return bad
+            if entries:
+                acc.log.entries = list(entries)
+            acc.commit_prep()
+        bad = [name for name, _e in items
+               if not self._acc(txn, name).valid()]
+        return {"blocked": blocked, "bad": bad}
+
+    def _op_commit_solo(self, txn: str, items: List[tuple],
+                        timeout: Optional[float]) -> Dict[str, Any]:
+        """Steps 2-5 of a single-domain commit in one RPC: this node holds
+        the whole access set, so its validation verdict alone decides
+        termination, and the session ends with it."""
+        res = self._op_commit_wave1(txn, items, timeout)
+        if not res["bad"]:
+            self._op_finish_batch(txn, [n for n, _e in items], end=True)
+        return res
 
     def _op_rollback(self, txn: str, name: str) -> None:
         acc = self._acc(txn, name)
-        h = acc.shared.header
-        with acc.lock:
-            seen, st, modified = acc.seen_instance, acc.st, acc.modified
-        if st is not None and modified:
-            with h.lock:
-                if h.instance == seen:
-                    st.restore_into(acc.shared.holder)
-                    h.instance += 1
+        acc.mark_aborted()     # a stale commit wave must not apply after us
+        acc.rollback()
+
+    def _op_rollback_batch(self, txn: str, names: List[str]) -> None:
+        for name in names:
+            acc = self._acc(txn, name)
+            acc.mark_aborted()
+            acc.rollback()
 
     def _op_terminate(self, txn: str, name: str) -> None:
-        session = self._session(txn)
         acc = self._acc(txn, name)
-        acc.shared.header.terminate_to(acc.pv)
-        acc.shared.clear_holder(session)
+        acc.terminate()
         with acc.lock:
             acc.released = True
+
+    def _op_finish_batch(self, txn: str, names: List[str],
+                         best_effort: bool = False,
+                         end: bool = False) -> None:
+        """Commit step 5 / abort step 4 for this node's batch: release and
+        terminate every named access. ``end`` additionally drops the
+        session (folds the trailing ``end_txn`` message into this RPC).
+        ``best_effort`` keeps finishing past a dead access but still
+        reports the first failure afterwards — on the one-way commit path
+        that becomes an ``oneway_err`` note, so a terminate racing a §3.4
+        expiry is at least visible at the client."""
+        first_error: Optional[BaseException] = None
+        for name in names:
+            try:
+                acc = self._acc(txn, name)
+                acc.release()
+                acc.terminate()
+                with acc.lock:
+                    acc.released = True
+            except TransactionError as e:
+                if not best_effort:
+                    raise
+                if first_error is None:
+                    first_error = e
+        if end:
+            self._op_end_txn(txn)
+        if first_error is not None:
+            raise first_error
 
     # -- liveness ------------------------------------------------------------
     def _op_touch(self, txn: str, name: str) -> None:
@@ -674,7 +1227,19 @@ class NodeServer:
     def _op_end_txn(self, txn: str) -> None:
         with self._lock:
             session = self._sessions.pop(txn, None)
-        if session is not None:
+        if session is None:
+            return
+        with session.lock:
+            unterminated = any(not acc.terminated
+                               for acc in session._accesses.values())
+        if unterminated:
+            # Ending a session that still owns live versions (e.g. the
+            # client closed out after a partially-failed chained start it
+            # never learned the versions of): run the §3.4 self-rollback
+            # so the dispensed versions are skipped, not leaked — a leaked
+            # version wedges every successor forever.
+            self._expire_session(session)
+        else:
             self._release_gates(session)
 
     def _op_abandon(self, txn: str) -> None:
@@ -713,6 +1278,10 @@ def main(argv: Optional[List[str]] = None) -> None:
     for p in args.path:
         if p not in sys.path:
             sys.path.insert(0, p)
+    # RPC replies ride thread wakeups (reader -> worker -> reader); the
+    # default 5 ms GIL switch interval adds multi-ms convoy latency under
+    # load, so run the server with a tighter interval.
+    sys.setswitchinterval(0.001)
     server = NodeServer(args.name, args.host, args.port,
                         monitor_timeout=args.monitor_timeout,
                         monitor_poll=args.monitor_poll,

@@ -1,4 +1,4 @@
-"""Length-prefixed binary wire protocol (DESIGN.md §3.1).
+"""Length-prefixed binary wire protocol, v2: tagged frames (DESIGN.md §3.1).
 
 Frame format, lowest layer of the transport::
 
@@ -6,18 +6,31 @@ Frame format, lowest layer of the transport::
     | length: u32 BE | payload: `length` bytes    |
     +----------------+----------------------------+
 
-The payload is a pickled message. Messages are tuples:
+The payload is a pickled message. One multiplexed connection carries many
+concurrent conversations, so messages are *tagged* with a request id:
 
-* request:   ``(op: str, kwargs: dict)`` — one RPC invocation;
-* response:  ``(OK, value)`` or ``(ERR, exception)``.
+* client → server: ``(req_id, op, kwargs)`` — an RPC invocation. A
+  ``req_id`` of ``None`` marks a **one-way** message: the server executes
+  the op, sends no reply, and reports failures (if any) as an
+  ``oneway_err`` note on the same connection (error deferral — the client
+  surfaces it at the transaction's next sync point).
+* server → client: ``(req_id, status, value, notes)`` — the reply to the
+  request tagged ``req_id``; ``status`` is ``OK`` or ``ERR``. When
+  ``req_id`` is ``None`` the message is an unsolicited **push** (``status``
+  is ``NOTE``, ``value`` unused). Either way ``notes`` is a (possibly
+  empty) list of piggybacked notifications: §2.7/§2.8.4 task completions
+  (with the home-node read buffer's state attached when it is small enough
+  to ship — the piggyback read protocol) and deferred one-way errors.
 
-Each pooled connection carries at most one outstanding request (strict
-request/response), so no correlation ids are needed; concurrency comes from
-the connection pool, and long-blocking RPCs (gate waits, task joins) simply
-hold their connection. A zero-length read means the peer closed the socket
-— the transport's crash-stop signal (§3.4), surfaced as
-:class:`ConnectionClosed` and mapped by the client onto
-:class:`~repro.core.api.RemoteObjectFailure`.
+Replies are matched to callers by ``req_id`` on the client's reader thread;
+out-of-order completion is the normal case (a blocking gate-wait RPC parks
+server-side while later quick RPCs on the same socket complete). A reply
+whose ``req_id`` is unknown (e.g. arriving after a client-side timeout
+abandoned the call) is dropped with a log line, never an error.
+
+A zero-length read means the peer closed the socket — the transport's
+crash-stop signal (§3.4), surfaced as :class:`ConnectionClosed` and mapped
+by the client onto :class:`~repro.core.api.RemoteObjectFailure`.
 
 Frames are capped at :data:`MAX_FRAME` as a corrupted-peer guard. Pickle
 implies the trust model documented in :mod:`repro.net`.
@@ -34,6 +47,12 @@ MAX_FRAME = 256 * 1024 * 1024  # corrupted length-word guard
 
 OK = "ok"
 ERR = "err"
+NOTE = "note"
+
+#: Largest pickled buffer state shipped to the client inside a task-done
+#: note (the piggyback read protocol). Larger buffers stay home-node-only
+#: and are read through ``buf_call`` RPCs — state never moves in bulk.
+PIGGYBACK_MAX = 64 * 1024
 
 
 class WireError(RuntimeError):
@@ -79,6 +98,15 @@ def recv_frame(sock: socket.socket) -> bytes:
     return _recv_exact(sock, length) if length else b""
 
 
+def frame(msg: Any) -> bytes:
+    """The complete on-wire bytes of one message (length prefix included)
+    — for senders that need partial-write control (non-blocking pushes)."""
+    payload = encode(msg)
+    if len(payload) > MAX_FRAME:
+        raise WireError(f"frame too large: {len(payload)} bytes")
+    return _LEN.pack(len(payload)) + payload
+
+
 def send_msg(sock: socket.socket, msg: Any) -> None:
     send_frame(sock, encode(msg))
 
@@ -87,14 +115,45 @@ def recv_msg(sock: socket.socket) -> Any:
     return decode(recv_frame(sock))
 
 
-def encode_error(exc: BaseException) -> Tuple[str, Any]:
-    """Build an ``(ERR, exception)`` response, degrading gracefully when the
-    exception itself does not survive pickling."""
+class FrameReader:
+    """Buffered frame reader: one ``recv`` syscall drains as many pipelined
+    frames as the kernel has queued, instead of two syscalls per frame.
+    On a multiplexed connection carrying many small tagged messages this
+    is the dominant syscall reduction. Single-reader use only."""
+
+    __slots__ = ("sock", "_buf")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self._buf = bytearray()
+
+    def _fill(self, n: int) -> None:
+        while len(self._buf) < n:
+            chunk = self.sock.recv(max(65536, n - len(self._buf)))
+            if not chunk:
+                raise ConnectionClosed("peer closed the connection")
+            self._buf += chunk
+
+    def recv_msg(self) -> Any:
+        self._fill(_LEN.size)
+        (length,) = _LEN.unpack(bytes(self._buf[:_LEN.size]))
+        if length > MAX_FRAME:
+            raise WireError(f"frame too large: {length} bytes")
+        end = _LEN.size + length
+        self._fill(end)
+        payload = bytes(self._buf[_LEN.size:end])
+        del self._buf[:end]
+        return decode(payload)
+
+
+def encode_error(exc: BaseException) -> Any:
+    """Return an exception object that survives pickling, degrading to a
+    stringified ``RuntimeError`` when the original does not."""
     try:
         pickle.dumps(exc)
-        return (ERR, exc)
+        return exc
     except Exception:  # noqa: BLE001
-        return (ERR, RuntimeError(f"{type(exc).__name__}: {exc}"))
+        return RuntimeError(f"{type(exc).__name__}: {exc}")
 
 
 def parse_address(address: str) -> Tuple[str, int]:

@@ -101,6 +101,27 @@ def _run_schedule(reg):
            lambda t: (t.accesses(reg.locate("A"), 1, 0, 1),),
            final)
 
+    # 7. pipelined-path coverage: trailing buffered reads after the last
+    # update (snap_release + piggyback fetch), multi-object read-only
+    # buffering (kickoffs riding the dispense), and a cross-node mix.
+    def trailing(t, a, b):
+        a.deposit(3)                      # last update: snapshot + release
+        return a.balance(), a.balance(), b.balance()
+    record("trailing",
+           lambda t: (t.accesses(reg.locate("A"), 2, 0, 1),
+                      t.reads(reg.locate("B"), 1)),
+           trailing)
+
+    # 8. write-log then trailing read on another object, all read-only
+    # objects buffered asynchronously in one transaction
+    def ro_sweep(t, a, b, c):
+        return a.balance() + b.balance() + c.balance()
+    record("ro-sweep",
+           lambda t: (t.reads(reg.locate("A"), 1),
+                      t.reads(reg.locate("B"), 1),
+                      t.reads(reg.locate("C"), 1)),
+           ro_sweep)
+
     state = tuple(reg.locate(n).raw_call("balance") for n in "ABC")
     return trace, state
 
@@ -120,7 +141,7 @@ def test_transport_equivalence(case):
 
     assert trace_inproc == trace_tcp, (
         f"semantics diverged:\n inproc={trace_inproc}\n tcp={trace_tcp}")
-    assert state_inproc == state_tcp == (907, 600, 0)
+    assert state_inproc == state_tcp == (910, 600, 0)
 
 
 def test_eigenbench_tcp_read_dominated_zero_aborts():

@@ -66,12 +66,29 @@ def test_error_encoding_degrades_gracefully():
     class Unpicklable(RuntimeError):
         def __reduce__(self):
             raise TypeError("nope")
-    status, err = wire.encode_error(Unpicklable("boom"))
-    assert status == wire.ERR
+    err = wire.encode_error(Unpicklable("boom"))
     assert isinstance(err, RuntimeError) and "boom" in str(err)
     # a normal exception survives as itself
-    status, err = wire.encode_error(TimeoutError("late"))
+    err = wire.encode_error(TimeoutError("late"))
     assert isinstance(err, TimeoutError)
+
+
+def test_tagged_frames_roundtrip():
+    """v2 message shapes: tagged request, one-way, reply-with-notes, push."""
+    a, b = _sock_pair()
+    msgs = [
+        (7, "open_access", {"txn": "c#1", "name": "A"}),     # request
+        (None, "release", {"txn": "c#1", "name": "A"}),      # one-way
+        (7, wire.OK, {"blocked": False}, []),                # reply
+        (None, wire.NOTE, None,                              # push w/ notes
+         [{"kind": "task_done", "txn": "c#1", "name": "A",
+           "error": None, "buf": b"x"}]),
+    ]
+    for m in msgs:
+        wire.send_msg(a, m)
+    for m in msgs:
+        assert wire.recv_msg(b) == m
+    a.close(), b.close()
 
 
 def test_parse_address():

@@ -29,15 +29,23 @@ def test_eigenbench_all_frameworks_micro():
 
 def test_eigenbench_optsva_beats_sva_read_dominated():
     """The paper's core claim (§4.3): OptSVA-CF > SVA, most under
-    read-dominated contention."""
+    read-dominated contention. Medians of 3 runs per framework: the
+    single-run ratio is at the mercy of scheduler noise on small/shared
+    CI hosts."""
+    import statistics
+
     import benchmarks.eigenbench as eb
     cfg = eb.EigenConfig(nodes=2, clients_per_node=8, arrays_per_node=10,
                          txns_per_client=2, hot_ops=8, read_pct=0.9,
                          op_time_ms=0.5)
-    opt = eb.run_benchmark("optsva-cf", cfg)
-    sva = eb.run_benchmark("sva", cfg)
-    assert opt.throughput_ops > 1.2 * sva.throughput_ops, \
-        (opt.throughput_ops, sva.throughput_ops)
+
+    def median_throughput(fw):
+        return statistics.median(
+            eb.run_benchmark(fw, cfg).throughput_ops for _ in range(3))
+
+    opt = median_throughput("optsva-cf")
+    sva = median_throughput("sva")
+    assert opt > 1.2 * sva, (opt, sva)
 
 
 def test_train_end_to_end_loss_decreases(tmp_path):
