@@ -1,28 +1,63 @@
-"""Bench-delta gate: fail CI when the TCP wire overhead regresses.
+"""Bench-delta gate: fail CI when the TCP wire cost regresses.
 
-Compares a freshly measured transport-overhead JSON against the checked-in
-baseline (the PR's ``BENCH_PR<n>.json``): for every tcp row present in
-both, the fresh ``wire_overhead_us`` must not exceed the baseline's by
-more than ``--max-regress`` (relative). Missing rows in the fresh file are
-an error; extra rows are ignored. Any abort on a tcp row fails the gate —
-the transport must stay semantically clean while getting faster.
+Compares a freshly measured transport-overhead JSON against a checked-in
+baseline — by default the **newest** checked-in ``BENCH_PR<n>.json`` that
+carries tcp rows (highest ``<n>``), so the gate tightens automatically as
+each PR lands its trajectory point. For every tcp row present in both:
+
+* the fresh ``wire_overhead_us`` must not exceed the baseline's by more
+  than ``--max-regress`` (relative) — the wall-clock gate;
+* the fresh ``rpcs_per_txn`` (when both files record it) must not exceed
+  the baseline's by more than ``--max-regress`` either — the message-plan
+  gate, deterministic per schedule and therefore meaningful even on a
+  noisy host.
+
+Missing rows in the fresh file are an error; extra rows (e.g. a scenario
+the baseline predates) are ignored. Any abort on a tcp row fails the gate
+— the transport must stay semantically clean while getting faster.
 
 Usage::
 
-    python -m benchmarks.check_bench_delta BENCH_PR3.json fresh.json \
-        --max-regress 0.20
+    python -m benchmarks.check_bench_delta --fresh fresh.json
+    python -m benchmarks.check_bench_delta --baseline BENCH_PR4.json \
+        --fresh fresh.json --max-regress 0.20
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
-from typing import Dict
+from pathlib import Path
+from typing import Dict, Optional
 
 
 def _tcp_rows(doc: dict) -> Dict[str, dict]:
     return {r["name"]: r for r in doc.get("rows", ())
             if "wire_overhead_us" in r}
+
+
+def find_baseline(directory: str, exclude: Optional[str] = None) -> str:
+    """Newest checked-in ``BENCH_PR<n>.json`` (highest n) with tcp rows."""
+    best_n, best = -1, None
+    exclude_path = Path(exclude).resolve() if exclude else None
+    for f in Path(directory).glob("BENCH_PR*.json"):
+        m = re.fullmatch(r"BENCH_PR(\d+)\.json", f.name)
+        if not m:
+            continue
+        if exclude_path is not None and f.resolve() == exclude_path:
+            continue
+        try:
+            doc = json.loads(f.read_text())
+        except (OSError, ValueError):
+            continue
+        n = int(m.group(1))
+        if _tcp_rows(doc) and n > best_n:
+            best_n, best = n, f
+    if best is None:
+        raise SystemExit(
+            f"no BENCH_PR<n>.json with tcp rows found under {directory!r}")
+    return str(best)
 
 
 def check(baseline: dict, fresh: dict, max_regress: float) -> int:
@@ -32,6 +67,18 @@ def check(baseline: dict, fresh: dict, max_regress: float) -> int:
         print("delta-check: baseline has no tcp rows — nothing to gate")
         return 0
     failures = []
+
+    def gate(name: str, metric: str, base_v: float, new_v: float) -> None:
+        limit = base_v * (1.0 + max_regress)
+        delta = 100.0 * (new_v - base_v) / base_v if base_v else 0.0
+        verdict = "OK" if new_v <= limit else "REGRESSION"
+        print(f"{name}: {metric} baseline={base_v:.2f} fresh={new_v:.2f} "
+              f"({delta:+.1f}%, limit +{100 * max_regress:.0f}%) {verdict}")
+        if new_v > limit:
+            failures.append(
+                f"{name}: {metric} {new_v:.2f} exceeds {limit:.2f} "
+                f"(baseline {base_v:.2f} +{100 * max_regress:.0f}%)")
+
     for name, base in sorted(base_rows.items()):
         row = fresh_rows.get(name)
         if row is None:
@@ -39,17 +86,11 @@ def check(baseline: dict, fresh: dict, max_regress: float) -> int:
             continue
         if row.get("aborts"):
             failures.append(f"{name}: {row['aborts']} aborts (expected 0)")
-        base_us = float(base["wire_overhead_us"])
-        new_us = float(row["wire_overhead_us"])
-        limit = base_us * (1.0 + max_regress)
-        delta = 100.0 * (new_us - base_us) / base_us if base_us else 0.0
-        verdict = "OK" if new_us <= limit else "REGRESSION"
-        print(f"{name}: baseline={base_us:.1f}us fresh={new_us:.1f}us "
-              f"({delta:+.1f}%, limit +{100 * max_regress:.0f}%) {verdict}")
-        if new_us > limit:
-            failures.append(
-                f"{name}: wire_overhead_us {new_us:.1f} exceeds "
-                f"{limit:.1f} (baseline {base_us:.1f} +{100 * max_regress:.0f}%)")
+        gate(name, "wire_overhead_us", float(base["wire_overhead_us"]),
+             float(row["wire_overhead_us"]))
+        if "rpcs_per_txn" in base and "rpcs_per_txn" in row:
+            gate(name, "rpcs_per_txn", float(base["rpcs_per_txn"]),
+                 float(row["rpcs_per_txn"]))
     if failures:
         print("\nbench-delta gate FAILED:")
         for f in failures:
@@ -61,14 +102,35 @@ def check(baseline: dict, fresh: dict, max_regress: float) -> int:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline", help="checked-in BENCH_PR<n>.json")
-    ap.add_argument("fresh", help="freshly measured transport bench JSON")
+    ap.add_argument("paths", nargs="*",
+                    help="legacy positional form: BASELINE FRESH")
+    ap.add_argument("--baseline", default=None,
+                    help="checked-in BENCH_PR<n>.json (default: the "
+                         "newest one with tcp rows under --baseline-dir)")
+    ap.add_argument("--fresh", default=None,
+                    help="freshly measured transport bench JSON")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="where checked-in BENCH_PR*.json live")
     ap.add_argument("--max-regress", type=float, default=0.20,
-                    help="allowed relative wire_overhead_us increase")
+                    help="allowed relative increase per gated metric")
     args = ap.parse_args()
-    with open(args.baseline) as f:
+    baseline_path, fresh_path = args.baseline, args.fresh
+    if args.paths:
+        if len(args.paths) == 2 and not (baseline_path or fresh_path):
+            baseline_path, fresh_path = args.paths
+        elif len(args.paths) == 1 and not fresh_path:
+            fresh_path = args.paths[0]
+        else:
+            ap.error("pass either BASELINE FRESH positionally or "
+                     "--baseline/--fresh")
+    if fresh_path is None:
+        ap.error("a fresh results file is required")
+    if baseline_path is None:
+        baseline_path = find_baseline(args.baseline_dir, exclude=fresh_path)
+        print(f"delta-check: auto-selected baseline {baseline_path}")
+    with open(baseline_path) as f:
         baseline = json.load(f)
-    with open(args.fresh) as f:
+    with open(fresh_path) as f:
         fresh = json.load(f)
     sys.exit(check(baseline, fresh, args.max_regress))
 

@@ -83,6 +83,12 @@ class EigenConfig:
     op_time_ms: float = 0.3
     network_delay_ms: float = 0.0
     seed: int = 42
+    #: ``mix`` — the classic ratio-mix plans; ``bank`` — long-chain bank
+    #: transfers: each transaction walks ``chain_len`` accounts moving a
+    #: balance along the chain (read-modify-write per hop, consecutive
+    #: ops per object — the operation-fusion hot path).
+    workload: str = "mix"
+    chain_len: int = 4
 
 
 @dataclass
@@ -95,6 +101,10 @@ class Result:
     abort_rate_pct: float
     wall_s: float
     waits: int = 0                     # actual blocking waits, all frameworks
+    # -- wire metrics (tcp transport only; 0.0 in-proc) ----------------------
+    rpcs_per_txn: float = 0.0          # client round trips per committed txn
+    oneways_per_txn: float = 0.0       # client one-way messages per txn
+    handoffs_per_txn: float = 0.0      # replies crossing a thread handoff
 
 
 Step = Tuple[Any, str, Optional[int]]  # (shared_obj, "read"/"write", value)
@@ -127,6 +137,50 @@ def _gen_plan(rng: random.Random, cfg: EigenConfig, hot: List, mild: List
     return steps
 
 
+def _gen_bank_plan(rng: random.Random, cfg: EigenConfig, hot: List,
+                   mild: List, history: Optional[List] = None) -> List[Step]:
+    """Long-chain "bank transfer": move a value along ``chain_len``
+    distinct accounts — read the source, write it back, read the next,
+    write it, ... Every hop is a consecutive read+write pair on one
+    object, the exact shape the §2.8 operation-fusion path batches into
+    single ``txn_call_batch`` RPCs. ``history`` is the *per-client*
+    window spanning this client's previous transactions — ``locality``
+    biases each chain toward it (accounts already in the current chain
+    are excluded: chain hops are distinct). ``read_pct`` is ignored (the
+    chain fixes the 1:1 ratio)."""
+    pool = list(hot) + list(mild)
+    if history is None:
+        history = []
+
+    def pick_distinct(taken):
+        for _ in range(64):
+            window = [o for o in history[-cfg.history:] if o not in taken]
+            if window and rng.random() < cfg.locality:
+                obj = rng.choice(window)
+            else:
+                obj = rng.choice(pool)
+            if obj not in taken:
+                history.append(obj)
+                return obj
+        for obj in pool:        # tiny pools: fall back to a linear sweep
+            if obj not in taken:
+                history.append(obj)
+                return obj
+        return None
+
+    chain: List[Any] = []
+    for _ in range(min(cfg.chain_len, len(pool))):
+        obj = pick_distinct(chain)
+        if obj is None:
+            break
+        chain.append(obj)
+    steps: List[Step] = []
+    for obj in chain:
+        steps.append((obj, "read", None))
+        steps.append((obj, "write", rng.randrange(1 << 16)))
+    return steps
+
+
 def _plan_counts(steps: Sequence[Step]) -> Dict[Any, Tuple[int, int]]:
     counts: Dict[Any, Tuple[int, int]] = {}
     for obj, op, _ in steps:
@@ -151,9 +205,26 @@ def run_optsva(reg: Registry, steps: List[Step], stats: Dict) -> None:
     proxies = {obj: t.accesses(obj, r, w, 0) for obj, (r, w) in counts.items()}
 
     def body(t):
-        for obj, op, val in steps:
-            p = proxies[obj]
-            p.read() if op == "read" else p.write(val)
+        # Consecutive same-object steps go through invoke_many: the
+        # a-priori plan makes the run visible, and the remote transport
+        # fuses it into one txn_call_batch RPC (operation fusion, §2.8);
+        # semantics are identical to per-op invocation either way.
+        i, n = 0, len(steps)
+        while i < n:
+            obj = steps[i][0]
+            j = i + 1
+            while j < n and steps[j][0] is obj:
+                j += 1
+            if j - i == 1:
+                _o, op, val = steps[i]
+                p = proxies[obj]
+                p.read() if op == "read" else p.write(val)
+            else:
+                t.invoke_many(proxies[obj],
+                              [("read", (), {}) if op == "read"
+                               else ("write", (val,), {})
+                               for _o, op, val in steps[i:j]])
+            i = j
 
     _run_pessimistic(t, body, stats)
 
@@ -321,6 +392,14 @@ def run_benchmark(framework: str, cfg: EigenConfig,
     reg, hot, mild_by_client, teardown = build(cfg)
     n_clients = cfg.nodes * cfg.clients_per_node
 
+    if transport == "tcp":
+        # Topology setup (bind/list_bindings) is not part of the per-txn
+        # message plan: zero the wire counters before the clients start.
+        for node in reg.nodes:
+            c = getattr(node, "client", None)
+            if c is not None:
+                c.n_rpc = c.n_oneway = c.n_inline = c.n_handoff = 0
+
     runner = FRAMEWORKS[framework]
     stats_per_client = [dict(commits=0, aborts=0, retries=0, ops=0, waits=0)
                         for _ in range(n_clients)]
@@ -328,8 +407,14 @@ def run_benchmark(framework: str, cfg: EigenConfig,
     plans: List[List[List[Step]]] = []
     for ci in range(n_clients):
         rng = random.Random((cfg.seed, framework, ci).__hash__())
-        plans.append([_gen_plan(rng, cfg, hot, mild_by_client[ci])
-                      for _ in range(cfg.txns_per_client)])
+        if cfg.workload == "bank":
+            hist: List[Any] = []    # locality window spans the client's txns
+            plans.append([_gen_bank_plan(rng, cfg, hot, mild_by_client[ci],
+                                         hist)
+                          for _ in range(cfg.txns_per_client)])
+        else:
+            plans.append([_gen_plan(rng, cfg, hot, mild_by_client[ci])
+                          for _ in range(cfg.txns_per_client)])
 
     barrier = threading.Barrier(n_clients + 1)
 
@@ -349,6 +434,16 @@ def run_benchmark(framework: str, cfg: EigenConfig,
     for th in threads:
         th.join()
     wall = time.monotonic() - t0
+    n_rpc = n_oneway = n_handoff = 0
+    if transport == "tcp":
+        # Per-txn wire metrics: sum the NodeClient counters of every
+        # connected remote node before teardown closes them.
+        for node in reg.nodes:
+            c = getattr(node, "client", None)
+            if c is not None:
+                n_rpc += c.n_rpc
+                n_oneway += c.n_oneway
+                n_handoff += c.n_handoff
     teardown()
 
     commits = sum(s["commits"] for s in stats_per_client)
@@ -361,7 +456,10 @@ def run_benchmark(framework: str, cfg: EigenConfig,
                   throughput_ops=ops / wall,
                   aborts=aborts, retries=retries, commits=commits,
                   abort_rate_pct=100.0 * (aborts + retries) / max(attempted, 1),
-                  wall_s=wall, waits=waits)
+                  wall_s=wall, waits=waits,
+                  rpcs_per_txn=round(n_rpc / max(commits, 1), 2),
+                  oneways_per_txn=round(n_oneway / max(commits, 1), 2),
+                  handoffs_per_txn=round(n_handoff / max(commits, 1), 2))
 
 
 def sweep(frameworks: Sequence[str], cfg: EigenConfig, vary: str,
@@ -386,6 +484,12 @@ def main() -> None:
                          "real server subprocess per node, honest wire")
     ap.add_argument("--sweep", default="none",
                     choices=["none", "clients", "nodes", "nodes-mild"])
+    ap.add_argument("--workload", default="mix", choices=["mix", "bank"],
+                    help="mix: classic ratio plans; bank: long-chain "
+                         "transfers (read-modify-write per account — the "
+                         "operation-fusion hot path)")
+    ap.add_argument("--chain-len", type=int, default=4,
+                    help="accounts per bank-transfer chain")
     ap.add_argument("--clients-per-node", type=int, default=4)
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--txns", type=int, default=5)
@@ -404,18 +508,21 @@ def main() -> None:
                       clients_per_node=args.clients_per_node,
                       txns_per_client=args.txns,
                       read_pct=read_pct,
-                      op_time_ms=args.op_ms)
+                      op_time_ms=args.op_ms,
+                      workload=args.workload, chain_len=args.chain_len)
     if args.full:
         cfg = EigenConfig(nodes=16, clients_per_node=16, txns_per_client=10,
-                          read_pct=read_pct, op_time_ms=3.0)
+                          read_pct=read_pct, op_time_ms=3.0,
+                          workload=args.workload, chain_len=args.chain_len)
 
     print("framework,value,throughput_ops_s,abort_rate_pct,commits,aborts,"
-          "retries,waits")
+          "retries,waits,rpcs_per_txn,handoffs_per_txn")
     if args.sweep == "none":
         for fw in fws:
             res = run_benchmark(fw, cfg, transport=args.transport)
             print(f"{fw},-,{res.throughput_ops:.1f},{res.abort_rate_pct:.1f},"
-                  f"{res.commits},{res.aborts},{res.retries},{res.waits}")
+                  f"{res.commits},{res.aborts},{res.retries},{res.waits},"
+                  f"{res.rpcs_per_txn},{res.handoffs_per_txn}")
     else:
         if args.sweep == "clients":
             pairs = sweep(fws, cfg, "clients_per_node", [2, 4, 8, 16],
@@ -430,7 +537,8 @@ def main() -> None:
         for v, res in pairs:
             print(f"{res.framework},{v},{res.throughput_ops:.1f},"
                   f"{res.abort_rate_pct:.1f},{res.commits},{res.aborts},"
-                  f"{res.retries},{res.waits}")
+                  f"{res.retries},{res.waits},{res.rpcs_per_txn},"
+                  f"{res.handoffs_per_txn}")
 
 
 if __name__ == "__main__":

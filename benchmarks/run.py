@@ -170,18 +170,24 @@ def bench_scheduler_overhead(full: bool = False,
 # Transport-overhead bench (PR2, re-measured per PR): in-proc vs real TCP wire #
 # --------------------------------------------------------------------------- #
 def bench_transport_overhead(full: bool = False,
-                             out: str = "BENCH_PR3.json") -> None:
+                             out: str = "BENCH_PR4.json") -> None:
     """Per-transaction cost of the real wire (``repro.net``), honestly.
 
     The same Eigenbench schedule (read-dominated 9:1 — the paper's
-    headline scenario — plus a 5:5 mixed one) runs twice: ``inproc``
+    headline scenario — a 5:5 mixed one, and the long-chain bank-transfer
+    workload exercising the operation-fusion path) runs twice: ``inproc``
     (simulated nodes, zero-latency calls) and ``tcp`` (one real server
     subprocess per node, every operation delegated to its home node over
     the multiplexed pipelined connection). The delta is the wire: framing
     + syscalls + the round trips the protocol could not pipeline away.
-    Results land in the PR's ``BENCH_PR<n>.json`` trajectory point;
-    ``benchmarks/check_bench_delta.py`` fails CI when the tcp overhead
-    regresses against the checked-in baseline.
+    Each tcp row also records the per-transaction *message plan* —
+    ``rpcs_per_txn`` (client round trips), ``oneways_per_txn``, and
+    ``handoffs_per_txn`` (replies that crossed a thread handoff instead
+    of being read inline by their caller-leader) — which are
+    deterministic per schedule and therefore gate-able even on a noisy
+    host. Results land in the PR's ``BENCH_PR<n>.json`` trajectory point;
+    ``benchmarks/check_bench_delta.py`` fails CI when the tcp overhead or
+    the RPC count regresses against the newest checked-in baseline.
     """
     import benchmarks.eigenbench as eb
     from benchmarks.report import write_bench_json
@@ -197,6 +203,10 @@ def bench_transport_overhead(full: bool = False,
             nodes=2, clients_per_node=4, arrays_per_node=4,
             txns_per_client=txns, hot_ops=10, read_pct=0.5,
             op_time_ms=0.0),
+        "bank": eb.EigenConfig(
+            nodes=2, clients_per_node=4, arrays_per_node=4,
+            txns_per_client=txns, op_time_ms=0.0,
+            workload="bank", chain_len=6),
     }
 
     def median_us(cfg, transport):
@@ -218,22 +228,29 @@ def bench_transport_overhead(full: bool = False,
                        f"aborts={r.aborts};waits={r.waits}")
             if transport == "tcp":
                 derived += (f";wire_overhead_us={overhead:.1f};"
-                            f"slowdown={factor:.2f}x")
+                            f"slowdown={factor:.2f}x;"
+                            f"rpcs_per_txn={r.rpcs_per_txn};"
+                            f"handoffs_per_txn={r.handoffs_per_txn}")
             emit(f"transport/{cname}/{transport}", us, derived)
             json_rows.append({
                 "name": f"transport/{cname}/{transport}",
                 "us_per_call": round(us, 1), "derived": derived,
                 "commits": r.commits, "aborts": r.aborts, "waits": r.waits})
         json_rows[-1].update(wire_overhead_us=round(overhead, 1),
-                             slowdown=round(factor, 2))
+                             slowdown=round(factor, 2),
+                             rpcs_per_txn=r_tcp.rpcs_per_txn,
+                             oneways_per_txn=r_tcp.oneways_per_txn,
+                             handoffs_per_txn=r_tcp.handoffs_per_txn)
     write_bench_json(out, json_rows, meta={
-        "bench": "transport_overhead", "pr": 3, "op_time_ms": 0.0,
+        "bench": "transport_overhead", "pr": 4, "op_time_ms": 0.0,
         "txns_per_client": txns, "repeats": repeats,
         "note": ("tcp = one node-server subprocess per registry node "
                  "(repro.net), honest wire over the multiplexed pipelined "
-                 "transport; inproc = simulated nodes. us_per_call is "
-                 "wall-clock per committed transaction, median of "
-                 "`repeats` runs.")})
+                 "transport with leader/follower demux + operation fusion; "
+                 "inproc = simulated nodes. us_per_call is wall-clock per "
+                 "committed transaction, median of `repeats` runs. "
+                 "rpcs/oneways/handoffs are client-side message counts "
+                 "per committed transaction from the median run.")})
 
 
 # --------------------------------------------------------------------------- #
@@ -298,8 +315,9 @@ def main() -> None:
                          "fig13,roofline,step")
     ap.add_argument("--bench-out", default="BENCH_PR1.json",
                     help="JSON trajectory point for the sched table")
-    ap.add_argument("--transport-out", default="BENCH_PR3.json",
-                    help="JSON trajectory point for the transport table")
+    ap.add_argument("--transport-out", default="BENCH_PR4.json",
+                    help="JSON trajectory point for the transport table "
+                         "(per-PR: pass BENCH_PR<n>.json for PR n)")
     args = ap.parse_args()
     tables = (["sched", "transport", "fig10", "fig11", "fig12", "fig13",
                "roofline", "step"]

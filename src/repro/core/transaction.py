@@ -244,6 +244,20 @@ class ObjectAccess:
             self.modified = True
         return v
 
+    def write_held(self, method: str, args: tuple, kwargs: dict) -> None:
+        """§2.8.4 write while the object is held (preceding reads/updates
+        passed the access condition). Pure writes are value-less in the
+        paper's model, so transports may pipeline the call: the remote
+        transport turns it into a one-way message (deferred errors) once
+        the transaction has no reads left on the object."""
+        self.raw_call(method, args, kwargs, modifies=True)
+
+    # Operation fusion (``raw_call_batch``/``open_and_call_batch``) is a
+    # remote-transport surface only: the fusion guard in Transaction.
+    # _fusable_run never fuses accesses whose dispense_domain is None (a
+    # per-op in-process call is already as cheap as a batched one), so no
+    # base implementation exists — see RemoteObjectAccess.
+
     def buf_call(self, method: str, args: tuple, kwargs: dict) -> Any:
         """Execute a read against the post-release copy buffer (§2.7)."""
         return self.buf.call(method, args, kwargs)
@@ -726,13 +740,16 @@ class Transaction:
     def _write(self, a: ObjectAccess, method: str, args: tuple, kwargs: dict) -> Any:
         if a.holds_access:
             # Preceding reads/updates hold the object: operate directly.
+            # Pure writes are value-less (the log-buffered path below always
+            # returned None), so this path returns None too — which lets the
+            # remote transport pipeline trailing writes as one-ways.
             self._validity_check()
-            v = a.raw_call(method, args, kwargs, modifies=True)
+            a.write_held(method, args, kwargs)
             a.wc += 1
             if a.writes_updates_done():
                 # Paper §2.8.4 says "cloned to st"; that must be buf (see module doc).
                 a.snapshot_and_release()
-            return v
+            return None
         # No preceding reads/updates: log-buffer the write, no synchronization.
         a.record_write(method, args, kwargs)
         a.wc += 1
@@ -740,6 +757,146 @@ class Transaction:
             # Final write (and no updates will follow): asynchronous apply+release.
             a.spawn_lastwrite_apply(self._gate_kind)
         return None
+
+    # -- operation fusion (§2.8 / DESIGN.md §3.1 v3) -------------------------
+    def invoke_many(self, proxy: Union[TxProxy, SharedObject, str],
+                    ops: List[tuple]) -> List[Any]:
+        """Invoke a run of operations against ONE object with *exactly*
+        sequential semantics — as if each had been called through the proxy
+        in order — fusing consecutive plain direct calls on a held remote
+        object into single ``txn_call_batch`` RPCs (operation fusion).
+
+        ``ops`` is ``[(method, args, kwargs), ...]``. The a-priori
+        operation plan of the CF model is what makes runs visible before
+        execution; anything the fusion rules cannot prove safe (opens,
+        buffered reads, release transitions mid-run, in-process objects)
+        falls back to the per-operation path, so behavior — including
+        supremum aborts, early release points, and mid-run errors (prefix
+        applied, suffix not) — is identical either way.
+        """
+        if isinstance(proxy, TxProxy):
+            shared = object.__getattribute__(proxy, "_shared")
+        else:
+            shared = self._resolve(proxy)
+        if self._terminated:
+            raise IllegalState("transaction already terminated")
+        if not self._started:
+            raise IllegalState("transaction not started; call begin()/start()")
+        out: List[Any] = []
+        i = 0
+        while i < len(ops):
+            run, opening = self._fusable_run(shared, ops, i)
+            if run <= 1:
+                method, args, kwargs = ops[i]
+                out.append(self._invoke(shared, method, args, kwargs))
+                i += 1
+            else:
+                out.extend(self._invoke_fused(shared, ops[i:i + run],
+                                              opening))
+                i += run
+        return out
+
+    def _fusable_run(self, shared: SharedObject, ops: List[tuple],
+                     i: int) -> tuple:
+        """``(n, opening)``: length of the maximal fusable run of ``ops``
+        starting at ``i``, and whether it begins with the §2.8.2-3 open
+        (gate wait + checkpoint fused in — a read-modify-write hop on a
+        fresh object is one RPC). A run is plain direct calls against one
+        remote object, stopping *before* a supremum violation (the per-op
+        path raises it with sequential semantics) and *after* the first op
+        whose §2.8.2-4 post-transition fires (release at suprema /
+        snapshot-and-release after the last write or update). Returns
+        ``(1, False)`` whenever fusing cannot beat the per-op path: an
+        in-process object, a released access or pending release task
+        (buffered reads are already local), a leading read served by a
+        local held-state copy (0 RPCs), or a leading log-buffered write
+        (recorded client-side for free, §2.8.4)."""
+        a = self._accesses[shared]
+        if (a.dispense_domain is None or a.released
+                or a.release_task is not None or a.sup.read_only):
+            return 1, False
+        opening = not a.holds_access
+        first_mode = shared.mode_of(ops[i][0])
+        if opening and first_mode is Mode.WRITE:
+            return 1, False     # log-buffered write: free, no RPC to fuse
+        if (not opening and first_mode is Mode.READ
+                and getattr(a, "live_copy", None) is not None):
+            return 1, False     # local (0-RPC) read: the per-op path is free
+        rc, wc, uc = a.rc, a.wc, a.uc
+        n = 0
+        for method, _args, _kwargs in ops[i:]:
+            mode = shared.mode_of(method)
+            if mode is Mode.READ:
+                if rc + 1 > a.sup.reads:
+                    break
+                rc += 1
+            elif mode is Mode.WRITE:
+                if wc + 1 > a.sup.writes:
+                    break
+                wc += 1
+            else:
+                if uc + 1 > a.sup.updates:
+                    break
+                uc += 1
+            n += 1
+            if (rc == a.sup.reads and wc == a.sup.writes
+                    and uc == a.sup.updates):
+                break       # all suprema met: release fires after this op
+            if (mode is not Mode.READ and wc == a.sup.writes
+                    and uc == a.sup.updates):
+                break       # last write/update: snapshot+release fires
+        return n, opening
+
+    def _invoke_fused(self, shared: SharedObject, run_ops: List[tuple],
+                      opening: bool) -> List[Any]:
+        """Execute one fusable run as a single batched home-node operation
+        (``opening`` folds the §2.8.2-3 gate wait + checkpoint in), then
+        apply the sequential §2.8.2-4 bookkeeping: per-op counters and
+        stats for the applied prefix, the original exception of a mid-run
+        failure (suffix not executed), and the end-of-run release
+        transition of the last op's mode."""
+        a = self._accesses[shared]
+        shared.check_reachable()
+        modes = [shared.mode_of(m) for m, _a, _k in run_ops]
+        calls = [(m, args, kwargs, mode is not Mode.READ)
+                 for (m, args, kwargs), mode in zip(run_ops, modes)]
+        self._validity_check()
+        try:
+            if opening:
+                blocked, values, error = a.open_and_call_batch(
+                    self._gate_kind, self.wait_timeout, calls)
+                if blocked:
+                    self.stats.waits += 1
+            else:
+                values, error = a.raw_call_batch(
+                    calls, all_writes=all(m is Mode.WRITE for m in modes))
+        except InstanceInvalidated as e:
+            self._force_abort(str(e))
+        last_mode = None
+        for mode in modes[:len(values)]:
+            if mode is Mode.READ:
+                a.rc += 1
+                self.stats.reads += 1
+            elif mode is Mode.WRITE:
+                a.wc += 1
+                self.stats.writes += 1
+            else:
+                a.uc += 1
+                self.stats.updates += 1
+            last_mode = mode
+        if error is not None:
+            if isinstance(error, InstanceInvalidated):
+                self._force_abort(str(error))
+            raise error
+        if last_mode is Mode.READ:
+            if a.all_suprema_met():
+                a.release()
+        elif a.writes_updates_done():
+            a.snapshot_and_release()
+        a.note_contact()
+        # Pure writes are value-less (see _write): mask their positions.
+        return [None if mode is Mode.WRITE else v
+                for v, mode in zip(values, modes)]
 
     # -- shared helpers --------------------------------------------------------
     def _validity_check(self) -> None:

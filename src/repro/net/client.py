@@ -1,20 +1,37 @@
-"""RPC client: one multiplexed, pipelined connection per node (DESIGN.md §3.1).
+"""RPC client: multiplexed pipelined connections with **leader/follower
+demultiplexing** (DESIGN.md §3.1 v3).
 
-One :class:`NodeClient` per (client process, node server), owning **one**
-framed TCP connection. Every request is tagged with a request id; a
-dedicated reader thread demultiplexes replies to per-call
-:class:`Future`\\ s, so any number of caller threads share the socket and a
-blocking RPC (gate wait, task join) costs an outstanding request id, not a
-held connection. :meth:`NodeClient.call_async` issues without waiting —
-the pipelining primitive the transaction hot path is built on.
+One :class:`NodeClient` per (client process, node server), owning a small
+fixed set of framed TCP connections with per-thread affinity. Every request
+is tagged with a request id; :meth:`NodeClient.call_async` issues without
+waiting — the pipelining primitive the transaction hot path is built on.
+
+**Leader/follower.** A caller blocked on a :class:`Future` does not park
+behind a reader thread: it takes over its connection's read loop (becomes
+the *leader*), demultiplexes incoming frames inline — resolving other
+callers' futures and handling pushes as they appear — and returns the
+moment its own reply arrives, promoting a waiting *follower* to leader on
+the way out. The common RPC therefore completes with **zero thread
+handoffs**: the reply is read by the very thread that wants it, on its own
+timeslice. A per-connection *fallback* reader thread covers the windows
+when nobody is waiting (pushed task notes, deferred-error notes, one-way
+traffic, idle links): it sleeps while a leader holds the connection and
+only drains frames that arrive leaderless, so it never steals a reply a
+caller could have read inline. Leadership hygiene: a departing leader
+first drains every frame already sitting in its buffered reader (a frame
+buffered but unread is invisible to the fallback's readiness poll), and a
+leader that times out mid-wait releases the socket and promotes a
+follower — no frame is lost or delivered twice because exactly one thread
+ever reads the connection.
 
 **One-way messages** (:meth:`notify`) carry no request id and expect no
 reply: §2.7 read-only-buffering kickoffs, §2.8.4 last-write apply kickoffs,
-release/terminate notifications, heartbeats. Server-side failures of
-one-way ops come back as ``oneway_err`` *notes* and are recorded per
-transaction; :meth:`raise_deferred` surfaces them at the transaction's next
-sync point (error deferral, per the paper's asynchrony model: an
-asynchronous operation's error belongs to the operation that awaits it).
+trailing held-object writes (operation fusion, §2.8), release/terminate
+notifications, heartbeats. Server-side failures of one-way ops come back
+as ``oneway_err`` *notes* and are recorded per transaction;
+:meth:`raise_deferred` surfaces them at the transaction's next sync point
+(error deferral, per the paper's asynchrony model: an asynchronous
+operation's error belongs to the operation that awaits it).
 
 **Pushed task notes**: when a §2.7/§2.8.4 home-node task completes, the
 server pushes a ``task_done`` note on this same connection (piggybacked on
@@ -32,18 +49,21 @@ the transaction machinery already routes through its abort path.
 
 Liveness rides the same link: the connection announces itself with
 ``mux_hello`` (the server maps it to this process's sessions — the OS
-closing it is the instant crash-stop signal that replaces PR 2's dedicated
-presence connection), and while this process has live transactions a
-daemon thread sends one-way ``heartbeat`` messages naming them.
+closing it is the instant crash-stop signal), and while this process has
+live transactions a daemon thread sends one-way ``heartbeat`` messages
+naming them.
 """
 from __future__ import annotations
 
+import collections
 import itertools
 import logging
 import os
 import pickle
+import select
 import socket
 import threading
+import time
 import uuid
 from typing import Any, Dict, List, Optional, Set, Tuple
 
@@ -57,30 +77,56 @@ log = logging.getLogger("repro.net.client")
 #: Stable identity of this client *process* across all its transactions.
 CLIENT_ID = f"{socket.gethostname()}:{os.getpid()}:{uuid.uuid4().hex[:6]}"
 
+#: Fallback reader's yield interval while replies are owed and their
+#: about-to-lead callers should read them inline (see _fallback_loop).
+FALLBACK_GRACE = 0.002
+
 
 class Future:
-    """Completion handle for one in-flight request."""
+    """Completion handle for one in-flight request.
 
-    __slots__ = ("_done", "_value", "_error")
+    When issued by :meth:`NodeClient.call_async`, :meth:`result` does not
+    merely park on an event — it enters the connection's leader/follower
+    protocol, so the waiter reads its own reply inline whenever the
+    connection is free.
+    """
+
+    __slots__ = ("_done", "_value", "_error", "on_done", "_client", "_mux")
 
     def __init__(self):
         self._done = threading.Event()
         self._value: Any = None
         self._error: Optional[BaseException] = None
+        #: invoked (once set) right after completion — the follower wakeup
+        #: hook of the leader/follower protocol.
+        self.on_done = None
+        self._client: Optional["NodeClient"] = None
+        self._mux: Optional["_Mux"] = None
 
     def set_result(self, value: Any) -> None:
         self._value = value
         self._done.set()
+        cb = self.on_done
+        if cb is not None:
+            cb()
 
     def set_error(self, error: BaseException) -> None:
         self._error = error
         self._done.set()
+        cb = self.on_done
+        if cb is not None:
+            cb()
 
     def done(self) -> bool:
         return self._done.is_set()
 
     def result(self, timeout: Optional[float] = None) -> Any:
-        if not self._done.wait(timeout):
+        if not self._done.is_set():
+            if self._client is not None and self._mux is not None:
+                self._client._await_reply(self._mux, self, timeout)
+            else:
+                self._done.wait(timeout)
+        if not self._done.is_set():
             raise TimeoutError("RPC reply did not arrive in time")
         if self._error is not None:
             raise self._error
@@ -119,24 +165,59 @@ def load_buf(payload: Optional[bytes]) -> Optional[_LocalBuf]:
 
 
 class _TaskWait:
-    """Local completion state of one fire-and-forget home-node task."""
+    """Local completion state of one fire-and-forget home-node task.
 
-    __slots__ = ("done", "error", "buf")
+    Resolution goes through :meth:`resolve`, which fires the optional
+    ``on_done`` hook after setting the event — the same completion shape
+    as :class:`Future`. Joins deliberately wait on the plain event (a
+    join is gated on *other* transactions' progress; taking read
+    leadership for such an open-ended wait measured 3-4x worse under
+    contention): the note is delivered by whichever leader or fallback
+    reads it.
+    """
+
+    __slots__ = ("done", "error", "buf", "on_done")
 
     def __init__(self):
         self.done = threading.Event()
         self.error: Optional[BaseException] = None
         self.buf: Optional[_LocalBuf] = None
+        self.on_done = None
+
+    def resolve(self) -> None:
+        self.done.set()
+        cb = self.on_done
+        if cb is not None:
+            cb()
 
 
 class _Mux:
-    """One established multiplexed connection (socket + write-side lock)."""
+    """One established multiplexed connection.
 
-    __slots__ = ("sock", "send_lock")
+    ``leader_lock`` is the read-side leadership token: its holder — a
+    blocked caller, or the fallback thread during leaderless windows — is
+    the only thread that may touch ``reader``. ``lead_free`` mirrors the
+    lock for waiters that must park until leadership is released;
+    ``followers`` holds the wakeup events of callers parked behind the
+    current leader, in arrival order, for promotion on leader exit.
+    """
+
+    __slots__ = ("sock", "send_lock", "reader", "leader_lock", "lead_free",
+                 "followers", "f_lock", "owed")
 
     def __init__(self, sock: socket.socket):
         self.sock = sock
         self.send_lock = threading.Lock()
+        self.reader = FrameReader(sock)
+        self.leader_lock = threading.Lock()
+        self.lead_free = threading.Event()
+        self.lead_free.set()
+        self.followers: "collections.deque" = collections.deque()
+        self.f_lock = threading.Lock()
+        #: replies owed on this connection (in-flight request count,
+        #: guarded by the client lock) — the fallback reader's signal
+        #: that a caller-leader is imminent and the socket is theirs.
+        self.owed = 0
 
 
 class NodeClient:
@@ -147,8 +228,10 @@ class NodeClient:
     connection, so every message sequence a single transaction produces is
     FIFO on its wire (one-way kickoffs are processed before the requests
     pipelined behind them), while independent client threads get
-    independent reader/writer pipelines — one serial reader never becomes
-    the throughput ceiling of the whole process.
+    independent reader/writer pipelines. The read side of each connection
+    is driven by whichever caller is currently awaiting a reply on it
+    (leader/follower, see module docstring); the per-connection fallback
+    thread only reads during leaderless windows.
     """
 
     def __init__(self, address: str, *, connect_timeout: float = 5.0,
@@ -171,6 +254,11 @@ class NodeClient:
         self._ended: Set[str] = set()           # server already dropped these
         self._hb_thread: Optional[threading.Thread] = None
         self._closed = threading.Event()
+        # -- transport statistics (per-txn wire metrics in the bench) --------
+        self.n_rpc = 0          # round-trip requests issued
+        self.n_oneway = 0       # one-way messages sent
+        self.n_inline = 0       # replies read by their own awaiting caller
+        self.n_handoff = 0      # replies delivered across a thread handoff
 
     # -- connection ----------------------------------------------------------
     def _mux_for_thread(self) -> _Mux:
@@ -192,7 +280,7 @@ class NodeClient:
                 sock = socket.create_connection((self.host, self.port),
                                                 timeout=self.connect_timeout)
                 sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                # Handshake before the reader exists: announce this process
+                # Handshake before any reader exists: announce this process
                 # (the server maps the connection to our sessions — the drop
                 # of our last connection is the §3.4 instant crash-stop
                 # signal) and await the ack on the still-private socket.
@@ -216,12 +304,16 @@ class NodeClient:
             mux = _Mux(sock)
             self._muxes[idx] = mux
             threading.Thread(
-                target=self._reader_loop, args=(mux,),
-                name=f"mux-reader-{self.address}-{idx}", daemon=True).start()
+                target=self._fallback_loop, args=(mux,),
+                name=f"mux-fallback-{self.address}-{idx}", daemon=True).start()
             return mux
 
-    def _send(self, msg: Any) -> None:
+    def _send(self, msg: Any) -> _Mux:
         mux = self._mux_for_thread()
+        self._send_on(mux, msg)
+        return mux
+
+    def _send_on(self, mux: _Mux, msg: Any) -> None:
         try:
             with mux.send_lock:
                 send_msg(mux.sock, msg)
@@ -230,30 +322,189 @@ class NodeClient:
             raise RemoteObjectFailure(
                 f"node server {self.address} failed mid-send: {e}") from e
 
-    # -- reader thread (one per mux connection) ------------------------------
-    def _reader_loop(self, mux: _Mux) -> None:
-        reader = FrameReader(mux.sock)
-        try:
-            while True:
-                req_id, status, value, notes = reader.recv_msg()
-                for note in notes or ():
-                    self._handle_note(note)
-                if req_id is None or status == NOTE:
-                    continue
-                with self._lock:
-                    fut = self._pending.pop(req_id, None)
-                if fut is None:
-                    # Late reply after a client-side timeout abandoned the
-                    # call: drop it — the conversation moved on.
-                    log.warning("dropping reply with unknown request id %r "
-                                "from %s (late reply after timeout?)",
-                                req_id, self.address)
-                    continue
-                if status == OK:
-                    fut.set_result(value)
+    # -- read side: leader/follower demux ------------------------------------
+    def _dispatch_msg(self, msg: Any, own: Optional[Future] = None,
+                      mux: Optional[_Mux] = None) -> None:
+        """Demultiplex one inbound message (notes, pushes, replies) to its
+        consumers. ``own`` is the dispatching leader's awaited future, for
+        the inline-vs-handoff statistics; ``mux`` the connection the
+        message arrived on, for its owed-reply account."""
+        req_id, status, value, notes = msg
+        for note in notes or ():
+            self._handle_note(note)
+        if req_id is None or status == NOTE:
+            return
+        with self._lock:
+            fut = self._pending.pop(req_id, None)
+            if fut is not None:
+                if mux is not None and mux.owed > 0:
+                    mux.owed -= 1
+                if fut is own:
+                    self.n_inline += 1
                 else:
-                    fut.set_error(value)
-        except (ConnectionClosed, WireError, OSError) as e:
+                    self.n_handoff += 1
+        if fut is None:
+            # Late reply after a client-side timeout abandoned the
+            # call: drop it — the conversation moved on.
+            log.warning("dropping reply with unknown request id %r "
+                        "from %s (late reply after timeout?)",
+                        req_id, self.address)
+            return
+        if status == OK:
+            fut.set_result(value)
+        else:
+            fut.set_error(value)
+
+    def _await_reply(self, mux: _Mux, fut: Future,
+                     timeout: Optional[float]) -> None:
+        """Wait for ``fut`` by the leader/follower protocol (the core loop
+        is :meth:`_drive`)."""
+        self._drive(mux, fut, fut,
+                    None if timeout is None else time.monotonic() + timeout)
+
+    def _drive(self, mux: _Mux, waitable: Any, own: Optional[Future],
+               deadline: Optional[float]) -> None:
+        """The leader/follower core: wait for ``waitable`` (a
+        :class:`Future`) by leading the connection's read loop when
+        leadership is free, otherwise parking as a follower until
+        completion, a departing leader's promotion, or the deadline.
+        Returns with the waitable done or the deadline passed.
+
+        Only *reply* waits drive the read loop. Task joins (§2.7/§2.8.4)
+        deliberately do not: they are gated on other transactions'
+        progress and may park for a long time — a long-lived leader
+        funnels every concurrent caller's reply through itself (thread
+        handoffs for everyone, measured 3-4x worse under contention).
+        RPC waits are short-lived by comparison: leadership turns over at
+        every completed reply."""
+        is_done = waitable.done
+        wake = threading.Event()
+        waitable.on_done = wake.set
+        if is_done():
+            return
+        while True:
+            if is_done():
+                return
+            if deadline is not None and time.monotonic() >= deadline:
+                return
+            if mux.leader_lock.acquire(blocking=False):
+                mux.lead_free.clear()
+                try:
+                    self._lead(mux, is_done, own, deadline)
+                finally:
+                    mux.leader_lock.release()
+                    mux.lead_free.set()
+                    self._promote(mux)
+                if is_done():
+                    return
+                continue    # led until timeout (or marked dead): loop exits
+            # Follower: park until completion, a promotion, or the
+            # deadline. The wait is sliced (0.5 s) so any lost-promotion
+            # race heals at the next slice instead of hanging.
+            with mux.f_lock:
+                mux.followers.append(wake)
+            try:
+                slice_ = (0.5 if deadline is None
+                          else max(0.0, min(0.5, deadline - time.monotonic())))
+                wake.wait(slice_)
+            finally:
+                with mux.f_lock:
+                    try:
+                        mux.followers.remove(wake)
+                    except ValueError:
+                        pass    # consumed by a promotion
+            wake.clear()
+
+    def _lead(self, mux: _Mux, is_done: Any, fut: Optional[Future],
+              deadline: Optional[float]) -> None:
+        """Drive the connection's read loop until the awaited completion
+        (``is_done``) fires — and the buffered reader holds no further
+        frame: a buffered-but-unread frame would be invisible to the
+        fallback's readiness poll — or the deadline passes. Exactly one
+        thread runs this per connection (the ``leader_lock`` holder), so
+        no frame is ever read twice."""
+        reader, sock = mux.reader, mux.sock
+        while True:
+            if reader.has_frame():
+                try:
+                    self._dispatch_msg(reader.recv_msg(), fut, mux)
+                except WireError as e:
+                    self._mark_dead(f"connection corrupt: {e}")
+                    return
+                continue
+            if is_done():
+                return
+            try:
+                if deadline is None:
+                    # No deadline: block straight in recv (one syscall per
+                    # drain) — our reply, or the crash-stop EOF, ends it.
+                    self._dispatch_msg(reader.recv_msg(), fut, mux)
+                    continue
+                wait = deadline - time.monotonic()
+                if wait <= 0:
+                    return      # timed out as leader: caller promotes
+                readable, _, _ = select.select([sock], [], [], wait)
+                if not readable:
+                    return      # timed out as leader
+                self._dispatch_msg(reader.recv_msg(), fut, mux)
+            except (ConnectionClosed, WireError, OSError, ValueError) as e:
+                if not self._closed.is_set():
+                    self._mark_dead(f"connection lost: {e}")
+                return
+
+    def _promote(self, mux: _Mux) -> None:
+        """Leader handoff: wake the longest-parked follower so it can take
+        over the read loop. A lost race (a fresh caller grabs leadership
+        first) is harmless — the promoted follower just parks again, and
+        the fallback thread is the liveness backstop either way."""
+        with mux.f_lock:
+            if mux.followers:
+                mux.followers.popleft().set()
+
+    def _fallback_loop(self, mux: _Mux) -> None:
+        """Reader of last resort: drains frames that arrive while *no
+        caller* is awaiting a reply (pushed task notes, deferred-error
+        notes, idle links). Parks whenever a leader holds the connection.
+        The discriminator is the connection's **owed-reply account**
+        (``mux.owed``). While replies are owed, their callers take
+        leadership within microseconds — a fallback sitting in select
+        would wake for every one of them (a spurious context switch per
+        message, the exact cost the demux removes), so it just yields in
+        short beats instead, bounded so a never-awaited future cannot
+        starve pushes. With nothing owed, arriving data can only be a
+        push: the fallback parks in select and delivers it the instant it
+        lands (a §2.7 join note must not wait on a poll interval)."""
+        sock = mux.sock
+        spins = 0
+        try:
+            while not self._closed.is_set() and self.alive:
+                if not mux.lead_free.wait(0.5):
+                    continue            # a leader is reading; stay parked
+                with self._lock:
+                    owed = mux.owed
+                if owed > 0 and spins < 25:
+                    spins += 1          # a caller-leader is imminent
+                    time.sleep(FALLBACK_GRACE)
+                    continue
+                spins = 0
+                readable, _, _ = select.select([sock], [], [], 0.5)
+                if not readable:
+                    continue
+                if not mux.leader_lock.acquire(blocking=False):
+                    continue            # a caller beat us to the frames
+                mux.lead_free.clear()
+                try:
+                    while True:
+                        if not mux.reader.has_frame():
+                            readable, _, _ = select.select([sock], [], [], 0)
+                            if not readable:
+                                break
+                        self._dispatch_msg(mux.reader.recv_msg(), mux=mux)
+                finally:
+                    mux.leader_lock.release()
+                    mux.lead_free.set()
+                    self._promote(mux)
+        except (ConnectionClosed, WireError, OSError, ValueError) as e:
             if not self._closed.is_set():
                 self._mark_dead(f"connection lost: {e}")
 
@@ -268,7 +519,7 @@ class NodeClient:
                 wait = self._tasks.setdefault(key, _TaskWait())
             wait.error = note.get("error")
             wait.buf = load_buf(note.get("buf"))
-            wait.done.set()
+            wait.resolve()
         elif kind == "oneway_err":
             txn = note.get("txn")
             err = note.get("error") or RuntimeError("one-way op failed")
@@ -294,27 +545,35 @@ class NodeClient:
             if note.get("op") in ("ro_buffer", "lw_apply") and note.get("name"):
                 wait = self._task_wait(txn, note["name"])
                 wait.error = err
-                wait.done.set()
+                wait.resolve()
         else:  # pragma: no cover - forward compatibility
             log.warning("ignoring unknown note kind %r from %s",
                         kind, self.address)
 
     # -- RPC -----------------------------------------------------------------
     def call_async(self, op: str, **kwargs: Any) -> Future:
-        """Issue ``op`` without waiting; returns a :class:`Future`."""
+        """Issue ``op`` without waiting; returns a :class:`Future` whose
+        ``result()`` participates in the leader/follower demux."""
         fut = Future()
+        mux = self._mux_for_thread()   # may connect; never under the lock
         with self._lock:
             if not self.alive:
                 raise RemoteObjectFailure(
                     f"node server {self.address} is unreachable (crash-stop)")
             req_id = next(self._req_ids)
             self._pending[req_id] = fut
+            self.n_rpc += 1
+            mux.owed += 1   # before the send: the reply may race us back
         try:
-            self._send((req_id, op, kwargs))
+            self._send_on(mux, (req_id, op, kwargs))
         except BaseException:
             with self._lock:
                 self._pending.pop(req_id, None)
+                if mux.owed > 0:
+                    mux.owed -= 1
             raise
+        fut._mux = mux
+        fut._client = self
         return fut
 
     def call(self, op: str, rpc_timeout: Optional[float] = None,
@@ -323,7 +582,7 @@ class NodeClient:
 
         ``rpc_timeout`` bounds the *wait*, not the server-side execution: on
         expiry the future is abandoned (its late reply will be dropped by
-        the reader) and :class:`TimeoutError` raised."""
+        whoever reads it) and :class:`TimeoutError` raised."""
         fut = self.call_async(op, **kwargs)
         try:
             return fut.result(rpc_timeout)
@@ -332,12 +591,16 @@ class NodeClient:
                 stale = [rid for rid, f in self._pending.items() if f is fut]
                 for rid in stale:
                     del self._pending[rid]
+                mux = fut._mux
+                if stale and mux is not None and mux.owed > 0:
+                    mux.owed -= 1   # its late reply won't settle the account
             raise
 
     def notify(self, op: str, **kwargs: Any) -> None:
         """Fire-and-forget one-way message: no reply, errors deferred
         (server reports them as ``oneway_err`` notes; see
         :meth:`raise_deferred`)."""
+        self.n_oneway += 1   # stats-only: not worth a lock on the hot path
         self._send((None, op, kwargs))
 
     # -- deferred errors and task notes --------------------------------------
@@ -367,7 +630,7 @@ class NodeClient:
         wait = self._task_wait(txn_uid, name)
         wait.error = error
         wait.buf = load_buf(buf)
-        wait.done.set()
+        wait.resolve()
 
     # -- failure (§3.4 crash-stop) -------------------------------------------
     def _mark_dead(self, reason: str) -> None:
@@ -384,13 +647,13 @@ class NodeClient:
         err = RemoteObjectFailure(
             f"node server {self.address} is unreachable ({reason})")
         # No waiter hangs: every in-flight future and task join observes
-        # the death immediately.
+        # the death immediately (leaders and followers wake via on_done).
         for fut in pending:
             fut.set_error(err)
         for w in waits:
             if not w.done.is_set():
                 w.error = err
-                w.done.set()
+                w.resolve()
         for mux in muxes:
             try:
                 mux.sock.close()
@@ -467,7 +730,7 @@ class NodeClient:
         for w in waits:
             if not w.done.is_set():
                 w.error = err
-                w.done.set()
+                w.resolve()
         for mux in muxes:
             try:
                 mux.sock.close()

@@ -38,6 +38,22 @@ class Account:
         return Account(self.bal)
 
 
+class GuardedAccount(Account):
+    """Account whose withdrawals enforce a non-negative balance — gives
+    transport tests a method that *raises* mid-transaction (e.g. in the
+    middle of a fused ``txn_call_batch``)."""
+
+    @access(Mode.UPDATE)
+    def withdraw(self, v: int) -> int:
+        if v > self.bal:
+            raise ValueError(f"insufficient funds: {v} > {self.bal}")
+        self.bal -= v
+        return self.bal
+
+    def __tx_snapshot__(self) -> "GuardedAccount":
+        return GuardedAccount(self.bal)
+
+
 class SlowAccount(Account):
     """Account whose operations take ``op_time`` seconds at the home node —
     makes CF delegation visible in timings."""

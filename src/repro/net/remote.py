@@ -22,6 +22,12 @@
   - early release and single terminates are **one-way notifications**;
     their server-side failures are deferred and surfaced at the
     transaction's next sync point (``raise_deferred``);
+  - **operation fusion** (DESIGN.md §3.1 v3): a run of consecutive
+    operations on one held object is one ``txn_call_batch`` RPC
+    (error-index semantics: prefix applied, suffix not), a run starting
+    at first access rides the ``open_call`` RPC (``tail=``), and writes
+    past the transaction's last read of the object — single or an
+    all-write run — are one-ways with deferred acks;
   - the commit/abort steps issue **per-node batched RPCs asynchronously**
     (``*_async`` → :class:`~repro.net.client.Future`), so one commit wave
     costs one overlapped round trip across all home nodes;
@@ -83,6 +89,12 @@ class RemoteTask:
         acc = self.acc
         client = acc.client
         client.raise_deferred(acc.txn_uid)   # sync point: kickoff errors
+        # Deliberately a plain event wait, NOT a leadership-taking drive:
+        # a join is gated on OTHER transactions' progress and can park for
+        # a long time — holding the connection's read leadership that long
+        # would funnel every concurrent caller's reply through this
+        # thread (measured 3-4x worse under contention). The note is
+        # delivered by whichever leader or fallback reads it.
         wait = client.task_wait(acc.txn_uid, acc.shared.name)
         if not wait.done.wait(_JOIN_PUSH_GRACE):
             # No note yet: ask explicitly (blocks server-side until the
@@ -440,6 +452,33 @@ class RemoteObjectAccess(ObjectAccess):
         self.live_copy = load_buf(res.get("state"))
         return res["blocked"], res["value"]
 
+    def open_and_call_batch(self, kind: str, timeout: Optional[float],
+                            calls: List[tuple]) -> tuple:
+        """Operation fusion across the open: gate wait + checkpoint +
+        buffered-write apply + the whole FIFO run ``[(method, args,
+        kwargs, modifies), ...]`` in ONE RPC — a read-modify-write hop on
+        a fresh object costs a single round trip. Returns ``(blocked,
+        values, error)`` with ``txn_call_batch`` error-index semantics
+        (prefix applied, suffix not)."""
+        self.client.raise_deferred(self.txn_uid)
+        entries = list(self.log.entries)
+        self.log.entries.clear()
+        m0, a0, k0, mod0 = calls[0]
+        n_reads = sum(1 for c in calls if not c[3])
+        res = self.client.call("open_call", txn=self.txn_uid,
+                               name=self.shared.name, kind=kind,
+                               timeout=timeout, entries=entries,
+                               method=m0, args=a0, kwargs=k0, modifies=mod0,
+                               want_state=self._reads_ahead(n_reads),
+                               tail=[tuple(c) for c in calls[1:]])
+        self.seen_instance = res["instance"]
+        self.holds_access = True
+        values, error = res["values"], res["error"]
+        if entries or any(c[3] for c in calls[:len(values)]):
+            self.modified = True
+        self.live_copy = load_buf(res.get("state"))
+        return res["blocked"], values, error
+
     def raw_call(self, method: str, args: tuple, kwargs: dict, *,
                  modifies: bool) -> Any:
         self.client.raise_deferred(self.txn_uid)
@@ -465,6 +504,54 @@ class RemoteObjectAccess(ObjectAccess):
         (beyond ``pending`` in flight)? If not, a held-state copy has no
         consumer — don't ask the server to serialize one."""
         return self.sup.reads - self.rc - pending > 0
+
+    def write_held(self, method: str, args: tuple, kwargs: dict) -> None:
+        """§2.8.4 write on a held object. Past the transaction's last read
+        of this object the value-less write needs no synchronous reply: it
+        ships as a pipelined one-way — FIFO ahead of every later request
+        on the same connection, so any subsequent synchronous operation
+        observes it — with server-side failures deferred to the next sync
+        point. One round trip saved per trailing write. While reads remain,
+        the synchronous path keeps refreshing the held-state copy that
+        serves them locally."""
+        if self._reads_ahead(0):
+            self.raw_call(method, args, kwargs, modifies=True)
+            return
+        self.client.notify("txn_call", txn=self.txn_uid,
+                           name=self.shared.name, method=method, args=args,
+                           kwargs=kwargs, modifies=True, want_state=False)
+        self.modified = True
+        self.live_copy = None   # live state moved without a refresh
+
+    def raw_call_batch(self, calls: List[tuple], *,
+                       all_writes: bool = False) -> tuple:
+        """Operation fusion: one ``txn_call_batch`` RPC executes the whole
+        run FIFO-atomically at the home node (atomic by exclusion — we
+        hold the access) and replies with the values plus an error index
+        on a mid-run failure, from which the caller restores sequential
+        semantics. An all-write run past the last read degenerates to a
+        single one-way (no values to wait for; errors deferred)."""
+        self.client.raise_deferred(self.txn_uid)
+        if all_writes and not self._reads_ahead(0):
+            self.client.notify("txn_call_batch", txn=self.txn_uid,
+                               name=self.shared.name, calls=list(calls),
+                               want_state=False, raise_errors=True)
+            self.modified = True
+            self.live_copy = None
+            return [None] * len(calls), None
+        n_reads = sum(1 for c in calls if not c[3])
+        any_mod = n_reads < len(calls)
+        res = self.client.call(
+            "txn_call_batch", txn=self.txn_uid, name=self.shared.name,
+            calls=list(calls),
+            want_state=any_mod and self._reads_ahead(n_reads))
+        values, error = res["values"], res["error"]
+        if any(c[3] for c in calls[:len(values)]):
+            self.modified = True
+            # The reply refreshes the held-state copy or invalidates it
+            # (state moved; no refresh shipped on error / by request).
+            self.live_copy = load_buf(res.get("state"))
+        return values, error
 
     def buf_call(self, method: str, args: tuple, kwargs: dict) -> Any:
         self.client.raise_deferred(self.txn_uid)

@@ -24,8 +24,14 @@ service-time-bearing method calls) to a thread each, so a parked RPC never
 stalls the link — replies complete out of order, matched by request id.
 One-way messages are always processed inline, which gives them FIFO
 ordering relative to later requests on the same connection (a pipelined
-kickoff is guaranteed to be registered before the join that follows it);
-their failures are pushed back as ``oneway_err`` notes (error deferral).
+kickoff is guaranteed to be registered before the join that follows it,
+and a deferred-ack trailing write is guaranteed to be applied before any
+later synchronous operation observes the object); their failures are
+pushed back as ``oneway_err`` notes (error deferral). Operation fusion
+(DESIGN.md §3.1 v3) executes client-visible *runs* server-side:
+``txn_call_batch`` (and the ``tail=`` batch of ``open_call``) runs a
+FIFO-atomic call sequence against one held access with an error-index
+reply — prefix applied, suffix never executed.
 When a §2.7/§2.8.4 task completes, a ``task_done`` note — carrying the
 read buffer's state when small (piggyback read protocol) — is pushed on
 the owning client's connection(s).
@@ -81,7 +87,7 @@ from repro.core.versioning import skip_version
 
 from .wire import (ConnectionClosed, ERR, FrameReader, NOTE, OK,
                    PIGGYBACK_MAX, WireError, encode_error,
-                   frame as wire_frame, send_msg)
+                   frame as wire_frame, oob, send_frames, send_msg)
 
 _SERVER_SUP = Suprema(reads=INF, writes=INF, updates=INF)
 
@@ -362,6 +368,7 @@ class NodeServer:
                          name=f"note-pusher-{node_name}",
                          daemon=True).start()
         self._sessions: Dict[str, _Session] = {}
+        self._costs: Dict[str, float] = {}      # per-object service-time EWMA
         self._gates: Dict[str, threading.Lock] = {}     # per-object dispense gate
         self._mux: Dict[str, List[_Conn]] = {}          # client_id -> conns
         self._conns: set = set()                        # live connections
@@ -481,7 +488,7 @@ class NodeServer:
                 else:
                     self._pool.submit(
                         lambda c=conn, r=req_id, o=op, k=kw:
-                        self._handle_request(c, r, o, k))
+                        self._handle_timed(c, r, o, k))
         finally:
             with self._lock:
                 self._conns.discard(sock)
@@ -519,6 +526,69 @@ class NodeServer:
             return False
         return True
 
+    #: EWMA of per-call service time above which an object's method calls
+    #: are dispatched to the worker pool instead of inline on the reader:
+    #: genuinely compute-bearing CF methods (the paper models ~3 ms) must
+    #: not stall the multiplexed link, but the two thread handoffs of a
+    #: pool dispatch dominate the cost of a *quick* method by an order of
+    #: magnitude — and for a sub-millisecond method the stall is no worse
+    #: than the handoff it replaces. Wall-clock EWMAs on a loaded host
+    #: include scheduler noise, so the threshold is deliberately generous.
+    INLINE_SLOW_S = 0.002
+
+    def _note_cost(self, name: Optional[str], dt: float) -> None:
+        if name is not None:
+            old = self._costs.get(name, dt)
+            self._costs[name] = 0.7 * old + 0.3 * dt
+
+    def _fast_call(self, conn: _Conn, req_id: int, op: str,
+                   kw: Dict[str, Any], weight: int = 1) -> bool:
+        """Inline a non-blocking method-bearing op on the reader when the
+        object's observed service time says it is quick (optimistically
+        inline at first sight; a slow object is learned once and pooled
+        thereafter). ``weight`` scales the estimate for batches."""
+        name = kw.get("name")
+        if self._costs.get(name, 0.0) * weight > self.INLINE_SLOW_S:
+            return False
+        t0 = time.perf_counter()
+        self._handle_request(conn, req_id, op, kw)
+        self._note_cost(name, (time.perf_counter() - t0) / max(weight, 1))
+        return True
+
+    def _open_ready(self, txn: str, name: str, kind: str) -> bool:
+        """True iff the §2.8.2 open would not block: the access (or
+        termination) gate is already open for this session's pv.
+        (Monotonic counters: once true, stays true.) Errors — no session,
+        unknown object — return True: raising is quick, do it inline."""
+        try:
+            acc = self._acc(txn, name)
+        except BaseException:  # noqa: BLE001 - error replies are cheap
+            return True
+        h = acc.shared.header
+        with h.lock:
+            done = h.ltv if kind == "termination" else h.lv
+            return done >= acc.pv - 1
+
+    #: Pool-dispatched ops whose duration still feeds the service-time
+    #: EWMA, so a transiently-inflated estimate (scheduler noise) decays
+    #: back under the inline threshold instead of sticking forever.
+    #: ``open_call`` is deliberately absent: its pooled duration includes
+    #: the gate *wait*, which is contention, not service time.
+    _COST_OPS = frozenset({"txn_call", "buf_call", "raw_call",
+                           "txn_call_batch"})
+
+    def _handle_timed(self, conn: _Conn, req_id: int, op: str,
+                      kw: Dict[str, Any]) -> bool:
+        if op not in self._COST_OPS:
+            return self._handle_request(conn, req_id, op, kw)
+        weight = 1
+        if op == "txn_call_batch":
+            weight = len(kw.get("calls") or ()) or 1
+        t0 = time.perf_counter()
+        handled = self._handle_request(conn, req_id, op, kw)
+        self._note_cost(kw.get("name"), (time.perf_counter() - t0) / weight)
+        return handled
+
     def _try_fast(self, conn: _Conn, req_id: int, op: str,
                   kw: Dict[str, Any]) -> bool:
         """Uncontended fast paths for normally-threaded ops: when the op
@@ -529,8 +599,23 @@ class NodeServer:
         Inline work here may include bounded state *snapshots* (§2.7
         buffers, commit checkpoints) — the same class of work the
         ``buffer_snapshot``/``snap_release`` inline ops already do on the
-        reader. Unbounded service time (object *methods*, log replay)
-        never runs inline."""
+        reader — and, new in v3, *method calls on objects whose measured
+        service time is quick* (the EWMA guard of :meth:`_fast_call`):
+        the common zero-to-cheap-compute call answers on the reader with
+        zero server-side handoffs, while compute-bearing objects keep the
+        pool. Gate-blocking opens fall back unless the gate is provably
+        open (:meth:`_open_ready`)."""
+        if op in ("txn_call", "buf_call", "raw_call"):
+            return self._fast_call(conn, req_id, op, kw)
+        if op == "txn_call_batch":
+            return self._fast_call(conn, req_id, op, kw,
+                                   weight=len(kw.get("calls") or ()) or 1)
+        if op == "open_call" and not kw.get("entries"):
+            if self._open_ready(kw["txn"], kw["name"], kw.get("kind",
+                                                             "access")):
+                return self._fast_call(conn, req_id, op, kw,
+                                       weight=1 + len(kw.get("tail") or ()))
+            return False
         if op == "dispense_batch" and not kw.get("chain"):
             try:
                 value, status = self._dispatch(op, dict(kw, _nb=True)), OK
@@ -630,12 +715,16 @@ class NodeServer:
                 return
             try:
                 with conn.send_lock:
+                    chunks = []
                     if conn.pending_out:
-                        conn.sock.sendall(conn.pending_out)
+                        chunks.append(conn.pending_out)
                         conn.pending_out = b""
                     notes, conn.notes = conn.notes, []
                     if notes:
-                        send_msg(conn.sock, (None, NOTE, None, notes))
+                        chunks.append(wire_frame((None, NOTE, None, notes)))
+                    if chunks:
+                        # spilled tail + queued notes: one vectored send
+                        send_frames(conn.sock, chunks)
             except Exception:  # noqa: BLE001 - conn dying: client will learn
                 pass
 
@@ -669,7 +758,7 @@ class NodeServer:
         if len(payload) > PIGGYBACK_MAX:
             acc.ship_state = False
             return None
-        return payload
+        return oob(payload)    # ships as a raw trailing segment (wire v3)
 
     def _held_payload(self, acc: _ServerAccess) -> Optional[bytes]:
         """Held-state copy for the piggyback live-read protocol: while the
@@ -688,7 +777,7 @@ class NodeServer:
         if len(payload) > PIGGYBACK_MAX:
             acc.ship_state = False
             return None
-        return payload
+        return oob(payload)    # ships as a raw trailing segment (wire v3)
 
     def _client_vanished(self, client_id: str) -> None:
         """Last mux connection dropped: crash-stop the client's sessions."""
@@ -1018,9 +1107,15 @@ class NodeServer:
     def _op_open_call(self, txn: str, name: str, kind: str,
                       timeout: Optional[float], entries: List[tuple],
                       method: str, args: tuple, kwargs: dict,
-                      modifies: bool, want_state: bool = True) -> Dict[str, Any]:
+                      modifies: bool, want_state: bool = True,
+                      tail: List[tuple] = ()) -> Dict[str, Any]:
         """§2.8.2-3 first direct access, fused into one RPC: gate wait +
-        checkpoint + buffered-write apply + the method call itself.
+        checkpoint + buffered-write apply + the method call itself — plus
+        ``tail``, the rest of a fusable operation run ``[(method, args,
+        kwargs, modifies), ...]`` executed FIFO right behind it (operation
+        fusion: the whole read-modify-write hop of a bank-transfer chain
+        is one round trip). A mid-tail failure reports ``(error_index,
+        error)`` with the prefix applied, like ``txn_call_batch``.
         ``want_state`` (the client still has pure reads ahead) requests a
         held-state copy on the reply."""
         acc = self._acc(txn, name)
@@ -1029,11 +1124,22 @@ class NodeServer:
             acc.log.entries = list(entries)
             acc.apply_log()
         self._check_valid(acc)
-        v = acc.raw_call(method, args, kwargs, modifies=modifies)
+        values: List[Any] = [acc.raw_call(method, args, kwargs,
+                                          modifies=modifies)]
+        error = error_index = None
+        for i, (m, a, k, mod) in enumerate(tail):
+            try:
+                self._check_valid(acc)
+                values.append(acc.raw_call(m, a, k, modifies=mod))
+            except BaseException as e:  # noqa: BLE001 - serialize to peer
+                error, error_index = encode_error(e), i + 1
+                break
         acc.note_contact()
         return {"blocked": blocked, "instance": acc.seen_instance,
-                "value": v,
-                "state": self._held_payload(acc) if want_state else None}
+                "value": values[0], "values": values,
+                "error_index": error_index, "error": error,
+                "state": (self._held_payload(acc)
+                          if want_state and error is None else None)}
 
     def _op_txn_call(self, txn: str, name: str, method: str, args: tuple,
                      kwargs: dict, modifies: bool,
@@ -1050,6 +1156,45 @@ class NodeServer:
             return {"value": v,
                     "state": self._held_payload(acc) if want_state else None}
         return v
+
+    def _op_txn_call_batch(self, txn: str, name: str, calls: List[tuple],
+                           want_state: bool = True,
+                           raise_errors: bool = False) -> Dict[str, Any]:
+        """Operation fusion (§2.8): a run of consecutive operations against
+        one *held* object, executed FIFO-atomically in a single RPC.
+        ``calls`` is ``[(method, args, kwargs, modifies), ...]``. Atomicity
+        is by exclusion — the transaction holds the access, so nothing
+        interleaves — and errors carry an **index**: on a failure at call
+        ``i`` the prefix ``[0, i)`` is applied, the suffix is not executed,
+        and the reply reports ``(error_index, error)`` so the client can
+        restore exact sequential semantics (counters for the prefix, the
+        original exception for call ``i``).
+
+        Also accepted as a **one-way** (an all-write batch past the
+        transaction's last read needs no values): ``raise_errors`` makes a
+        mid-batch failure raise after the prefix applied, so the one-way
+        machinery defers it as an ``oneway_err`` note to the next sync
+        point instead of it vanishing with the discarded reply."""
+        acc = self._acc(txn, name)
+        values: List[Any] = []
+        error = error_index = None
+        modified = False
+        for i, (method, args, kwargs, modifies) in enumerate(calls):
+            try:
+                self._check_valid(acc)
+                values.append(acc.raw_call(method, args, kwargs,
+                                           modifies=modifies))
+                modified = modified or modifies
+            except BaseException as e:  # noqa: BLE001 - serialize to peer
+                if raise_errors:
+                    raise
+                error, error_index = encode_error(e), i
+                break
+        acc.note_contact()
+        state = (self._held_payload(acc)
+                 if modified and want_state and error is None else None)
+        return {"values": values, "error_index": error_index,
+                "error": error, "state": state}
 
     def _op_buf_call(self, txn: str, name: str, method: str, args: tuple,
                      kwargs: dict, want_buf: bool = False) -> Any:

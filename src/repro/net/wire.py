@@ -1,13 +1,25 @@
-"""Length-prefixed binary wire protocol, v2: tagged frames (DESIGN.md §3.1).
+"""Length-prefixed binary wire protocol, v3: segmented tagged frames
+(DESIGN.md §3.1).
 
 Frame format, lowest layer of the transport::
 
-    +----------------+----------------------------+
-    | length: u32 BE | payload: `length` bytes    |
-    +----------------+----------------------------+
+    +----------------+--------------------------------------------------+
+    | length: u32 BE | payload: `length` bytes                          |
+    +----------------+--------------------------------------------------+
 
-The payload is a pickled message. One multiplexed connection carries many
-concurrent conversations, so messages are *tagged* with a request id:
+    payload := [nbufs: u8] [pick_len: u32 BE] ([buf_len: u32 BE])*nbufs
+               [pickle bytes] ([buffer bytes])*nbufs
+
+The pickle is protocol 5 with **out-of-band buffers**: bulk byte payloads
+(piggybacked read-buffer and held-state copies) travel as raw trailing
+segments instead of being re-copied into the pickle stream — senders wrap
+them with :func:`oob` and the codec is otherwise transparent (receivers
+get plain ``bytes`` back). Senders transmit the segment list with one
+vectored ``sendmsg`` (:func:`send_msg` / :func:`send_frames`), so neither
+the header nor the payload is ever concatenated into a fresh buffer.
+
+One multiplexed connection carries many concurrent conversations, so
+messages are *tagged* with a request id:
 
 * client → server: ``(req_id, op, kwargs)`` — an RPC invocation. A
   ``req_id`` of ``None`` marks a **one-way** message: the server executes
@@ -22,11 +34,13 @@ concurrent conversations, so messages are *tagged* with a request id:
   (with the home-node read buffer's state attached when it is small enough
   to ship — the piggyback read protocol) and deferred one-way errors.
 
-Replies are matched to callers by ``req_id`` on the client's reader thread;
-out-of-order completion is the normal case (a blocking gate-wait RPC parks
-server-side while later quick RPCs on the same socket complete). A reply
-whose ``req_id`` is unknown (e.g. arriving after a client-side timeout
-abandoned the call) is dropped with a log line, never an error.
+Replies are matched to callers by ``req_id`` — normally by the *caller
+itself*, leading its connection's read loop (the leader/follower demux in
+``client.py``); out-of-order completion is the normal case (a blocking
+gate-wait RPC parks server-side while later quick RPCs on the same socket
+complete). A reply whose ``req_id`` is unknown (e.g. arriving after a
+client-side timeout abandoned the call) is dropped with a log line, never
+an error.
 
 A zero-length read means the peer closed the socket — the transport's
 crash-stop signal (§3.4), surfaced as :class:`ConnectionClosed` and mapped
@@ -40,9 +54,10 @@ from __future__ import annotations
 import pickle
 import socket
 import struct
-from typing import Any, Tuple
+from typing import Any, List, Tuple
 
 _LEN = struct.Struct("!I")
+_SEG = struct.Struct("!BI")            # nbufs, pick_len
 MAX_FRAME = 256 * 1024 * 1024  # corrupted length-word guard
 
 OK = "ok"
@@ -54,6 +69,11 @@ NOTE = "note"
 #: and are read through ``buf_call`` RPCs — state never moves in bulk.
 PIGGYBACK_MAX = 64 * 1024
 
+#: Below this size an :func:`oob` payload stays in-band: a trailing
+#: segment costs 4 header bytes plus an iovec entry, which only pays for
+#: itself once the copy it avoids is non-trivial.
+OOB_MIN = 2 * 1024
+
 
 class WireError(RuntimeError):
     """Malformed traffic (oversized frame, undecodable payload)."""
@@ -63,21 +83,104 @@ class ConnectionClosed(ConnectionError):
     """The peer closed the connection (crash-stop detection signal)."""
 
 
-def encode(msg: Any) -> bytes:
-    return pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+def oob(data: bytes) -> Any:
+    """Mark a bulk byte payload for out-of-band transport: it ships as a
+    raw trailing frame segment (no re-copy into the pickle stream) and
+    reconstructs as plain ``bytes`` at the receiver. Small payloads stay
+    in-band — the segment overhead would outweigh the saved copy."""
+    if len(data) >= OOB_MIN:
+        return pickle.PickleBuffer(data)
+    return data
 
 
-def decode(payload: bytes) -> Any:
+def encode_segments(msg: Any) -> List[Any]:
+    """The complete on-wire representation of one message as a segment
+    list ``[header, pickle, *oob_buffers]`` — ready for one vectored
+    ``sendmsg``, no concatenation."""
+    bufs: List[pickle.PickleBuffer] = []
     try:
-        return pickle.loads(payload)
+        pick = pickle.dumps(msg, protocol=5, buffer_callback=bufs.append)
+    except Exception as e:  # noqa: BLE001 - surface as a wire problem
+        raise WireError(f"unencodable message: {e!r}") from e
+    if not bufs:
+        # Small-message fast path (the common tagged frame): one
+        # contiguous buffer, so the sender's sendmsg degenerates to a
+        # single plain send — no iovec bookkeeping for a 100-byte frame.
+        total = _SEG.size + len(pick)
+        if total > MAX_FRAME:
+            raise WireError(f"frame too large: {total} bytes")
+        if len(pick) < 65536:
+            return [_LEN.pack(total) + _SEG.pack(0, len(pick)) + pick]
+        return [_LEN.pack(total) + _SEG.pack(0, len(pick)), pick]
+    views = [b.raw() for b in bufs]
+    total = (_SEG.size + _LEN.size * len(views) + len(pick)
+             + sum(len(v) for v in views))
+    if total > MAX_FRAME:
+        raise WireError(f"frame too large: {total} bytes")
+    head = (_LEN.pack(total) + _SEG.pack(len(views), len(pick))
+            + b"".join(_LEN.pack(len(v)) for v in views))
+    return [head, pick, *views]
+
+
+def decode_payload(view: Any) -> Any:
+    """Decode one v3 payload (everything after the length word).
+    ``view`` may be any bytes-like; out-of-band segments are materialized
+    as independent ``bytes`` (safe to retain after the caller recycles
+    its receive buffer)."""
+    try:
+        nbufs, pick_len = _SEG.unpack_from(view, 0)
+        off = _SEG.size
+        lens = []
+        for _ in range(nbufs):
+            (n,) = _LEN.unpack_from(view, off)
+            lens.append(n)
+            off += _LEN.size
+        pick = view[off:off + pick_len]
+        off += pick_len
+        bufs = []
+        for n in lens:
+            bufs.append(bytes(view[off:off + n]))
+            off += n
+        return pickle.loads(pick, buffers=bufs)
+    except WireError:
+        raise
     except Exception as e:  # noqa: BLE001 - corrupt peer, not our bug
         raise WireError(f"undecodable payload: {e!r}") from e
 
 
-def send_frame(sock: socket.socket, payload: bytes) -> None:
-    if len(payload) > MAX_FRAME:
-        raise WireError(f"frame too large: {len(payload)} bytes")
-    sock.sendall(_LEN.pack(len(payload)) + payload)
+def sendmsg_all(sock: socket.socket, segments: List[Any]) -> None:
+    """``sendall`` semantics over one vectored ``sendmsg``: the normal
+    case is a single syscall for the whole segment list; a partial write
+    (full socket buffer) resumes from the exact byte."""
+    if len(segments) == 1:
+        sock.sendall(segments[0])           # common small-frame case
+        return
+    views = [memoryview(s) for s in segments]
+    while views:
+        sent = sock.sendmsg(views[:64])     # stay well under IOV_MAX
+        while views and sent >= len(views[0]):
+            sent -= len(views[0])
+            views.pop(0)
+        if sent and views:
+            views[0] = views[0][sent:]
+
+
+def send_msg(sock: socket.socket, msg: Any) -> None:
+    sendmsg_all(sock, encode_segments(msg))
+
+
+def send_frames(sock: socket.socket, chunks: List[Any]) -> None:
+    """Coalesce several already-framed byte strings (from :func:`frame`)
+    into one vectored send — queued outbound frames cost one syscall."""
+    sendmsg_all(sock, chunks)
+
+
+def frame(msg: Any) -> bytes:
+    """The complete on-wire bytes of one message (length prefix included)
+    as one contiguous buffer — for senders that need partial-write control
+    (non-blocking pushes)."""
+    return b"".join(bytes(s) if not isinstance(s, bytes) else s
+                    for s in encode_segments(msg))
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -98,28 +201,23 @@ def recv_frame(sock: socket.socket) -> bytes:
     return _recv_exact(sock, length) if length else b""
 
 
-def frame(msg: Any) -> bytes:
-    """The complete on-wire bytes of one message (length prefix included)
-    — for senders that need partial-write control (non-blocking pushes)."""
-    payload = encode(msg)
-    if len(payload) > MAX_FRAME:
-        raise WireError(f"frame too large: {len(payload)} bytes")
-    return _LEN.pack(len(payload)) + payload
-
-
-def send_msg(sock: socket.socket, msg: Any) -> None:
-    send_frame(sock, encode(msg))
-
-
 def recv_msg(sock: socket.socket) -> Any:
-    return decode(recv_frame(sock))
+    return decode_payload(recv_frame(sock))
 
 
 class FrameReader:
     """Buffered frame reader: one ``recv`` syscall drains as many pipelined
     frames as the kernel has queued, instead of two syscalls per frame.
     On a multiplexed connection carrying many small tagged messages this
-    is the dominant syscall reduction. Single-reader use only."""
+    is the dominant syscall reduction.
+
+    The receive buffer is a single reusable ``bytearray``; parsing runs
+    over memoryviews of it and only out-of-band segments are copied out
+    (they outlive the buffer). Single-reader use only — the client's
+    leader/follower demux guarantees that by construction (exactly one
+    leader per connection), and :meth:`has_frame` lets a departing leader
+    drain every already-buffered frame without another syscall.
+    """
 
     __slots__ = ("sock", "_buf")
 
@@ -134,16 +232,33 @@ class FrameReader:
                 raise ConnectionClosed("peer closed the connection")
             self._buf += chunk
 
+    def has_frame(self) -> bool:
+        """True iff a complete frame is already buffered (zero syscalls)."""
+        if len(self._buf) < _LEN.size:
+            return False
+        (length,) = _LEN.unpack_from(self._buf, 0)
+        return len(self._buf) >= _LEN.size + length
+
     def recv_msg(self) -> Any:
         self._fill(_LEN.size)
-        (length,) = _LEN.unpack(bytes(self._buf[:_LEN.size]))
+        (length,) = _LEN.unpack_from(self._buf, 0)
         if length > MAX_FRAME:
             raise WireError(f"frame too large: {length} bytes")
         end = _LEN.size + length
         self._fill(end)
-        payload = bytes(self._buf[_LEN.size:end])
+        view = memoryview(self._buf)
+        try:
+            msg = decode_payload(view[_LEN.size:end])
+        except BaseException:
+            # The in-flight exception's traceback pins views of _buf
+            # (decode locals): rebuild instead of resizing the exported
+            # buffer, which would raise BufferError.
+            view.release()
+            self._buf = self._buf[end:]
+            raise
+        view.release()
         del self._buf[:end]
-        return decode(payload)
+        return msg
 
 
 def encode_error(exc: BaseException) -> Any:

@@ -122,6 +122,21 @@ def _run_schedule(reg):
                       t.reads(reg.locate("C"), 1)),
            ro_sweep)
 
+    # 9. the fused path (PR 4): consecutive runs on one object through
+    # invoke_many — open-fused read-modify-write, a held batch, and a
+    # trailing one-way write — must trace identically to per-op both
+    # in-proc (where fusion falls back to per-op) and over TCP.
+    def fused(t, a, b):
+        va = t.invoke_many(a, [("balance", (), {}), ("deposit", (11,), {}),
+                               ("balance", (), {})])
+        vb = t.invoke_many(b, [("deposit", (1,), {}), ("withdraw", (1,), {}),
+                               ("balance", (), {}), ("reset", (), {})])
+        return tuple(va), tuple(vb)
+    record("fused",
+           lambda t: (t.accesses(reg.locate("A"), 2, 0, 1),
+                      t.accesses(reg.locate("B"), 1, 1, 2)),
+           fused)
+
     state = tuple(reg.locate(n).raw_call("balance") for n in "ABC")
     return trace, state
 
@@ -141,7 +156,7 @@ def test_transport_equivalence(case):
 
     assert trace_inproc == trace_tcp, (
         f"semantics diverged:\n inproc={trace_inproc}\n tcp={trace_tcp}")
-    assert state_inproc == state_tcp == (910, 600, 0)
+    assert state_inproc == state_tcp == (921, 0, 0)
 
 
 def test_eigenbench_tcp_read_dominated_zero_aborts():

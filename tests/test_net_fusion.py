@@ -1,0 +1,181 @@
+"""Operation-fusion semantics (PR 4, DESIGN.md §3.1 v3).
+
+Covers the fused hot path: ``invoke_many`` runs batching consecutive ops
+on one held (or freshly opened) remote object into single RPCs, the
+error-index contract of ``txn_call_batch`` (prefix applied, suffix not,
+original exception at the client), trailing held-object writes as
+one-ways with deferred-error semantics, and equivalence of the fused
+path with per-op sequencing.
+"""
+import pytest
+
+from repro.core import AbortError, Registry, Transaction
+from repro.core.api import SupremumViolation
+from repro.net.demo import Account, GuardedAccount
+from repro.net.server import NodeServer
+
+
+@pytest.fixture()
+def server():
+    srv = NodeServer("fuse0", monitor_timeout=5.0).start()
+    yield srv
+    srv.stop()
+
+
+def _connect(server, bindings):
+    reg = Registry()
+    node = reg.connect(server.address)
+    for name, obj in bindings.items():
+        node.bind(name, obj)
+    reg.connect(server.address)
+    return reg, node
+
+
+# --------------------------------------------------------------------------- #
+# fused runs: message plan and values                                          #
+# --------------------------------------------------------------------------- #
+def test_fused_run_is_one_rpc_with_sequential_values(server):
+    reg, node = _connect(server, {"F": Account(100)})
+    F = reg.locate("F")
+    t = Transaction(reg)
+    p = t.accesses(F, 3, 0, 2)
+    t.begin()
+    before = node.client.n_rpc
+    out = t.invoke_many(p, [
+        ("balance", (), {}),       # read (opens — fused into the same RPC)
+        ("deposit", (10,), {}),    # update
+        ("balance", (), {}),       # read
+    ])
+    assert node.client.n_rpc - before == 1, "the run must fuse into one RPC"
+    assert out == [100, None, 110]
+    t.commit()
+    assert F.raw_call("balance") == 110
+    reg.shutdown()
+
+
+def test_trailing_write_past_last_read_is_oneway(server):
+    """A held-object write with no reads left on the object ships as a
+    one-way (no round trip); the next synchronous op still observes it
+    (FIFO on the connection)."""
+    reg, node = _connect(server, {"W": Account(10)})
+    W = reg.locate("W")
+    t = Transaction(reg)
+    p = t.accesses(W, 0, 1, 1)
+    t.begin()
+    p.deposit(1)                       # update: opens, holds
+    before_rpc = node.client.n_rpc
+    before_ow = node.client.n_oneway
+    p.reset()                          # write, no reads ahead -> one-way
+    assert node.client.n_rpc == before_rpc
+    assert node.client.n_oneway > before_ow
+    t.commit()
+    assert W.raw_call("balance") == 0
+    reg.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# error-index semantics                                                        #
+# --------------------------------------------------------------------------- #
+def test_batch_error_prefix_applied_suffix_not(server):
+    """An error in the middle of a fused batch: the prefix is applied at
+    the home node, the suffix is never executed, and the client observes
+    the original exception at the failing op's position."""
+    reg, node = _connect(server, {"G": GuardedAccount(100)})
+    G = reg.locate("G")
+    t = Transaction(reg)
+    p = t.accesses(G, 4, 0, 4)
+    observed = {}
+
+    def body(tt):
+        try:
+            tt.invoke_many(p, [
+                ("deposit", (5,), {}),          # applied
+                ("withdraw", (50,), {}),        # applied
+                ("withdraw", (10_000,), {}),    # raises ValueError
+                ("deposit", (777,), {}),        # must never execute
+            ])
+        except ValueError as e:
+            observed["error"] = e
+            # still holding the object: the prefix must be visible...
+            observed["mid"] = p.balance()
+        return None
+
+    t.start(body)
+    assert "error" in observed and "insufficient funds" in str(observed["error"])
+    assert observed["mid"] == 55       # 100 + 5 - 50; the 777 never landed
+    assert G.raw_call("balance") == 55
+    reg.shutdown()
+
+
+def test_batch_supremum_violation_aborts_exactly_like_per_op(server):
+    """A run whose tail would exceed a supremum: the fusable prefix runs,
+    then the violating op aborts with SupremumViolation — the same
+    observable outcome as per-op sequencing."""
+    reg, node = _connect(server, {"S": Account(10)})
+    S = reg.locate("S")
+    t = Transaction(reg)
+    p = t.accesses(S, 1, 0, 1)
+    t.begin()
+    with pytest.raises(SupremumViolation):
+        t.invoke_many(p, [
+            ("balance", (), {}),
+            ("deposit", (1,), {}),
+            ("deposit", (1,), {}),      # exceeds max_updates=1
+        ])
+    assert t._terminated
+    # the forced abort restored the checkpoint, exactly like per-op
+    assert S.raw_call("balance") == 10
+    reg.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# deferred one-way write errors                                                #
+# --------------------------------------------------------------------------- #
+def test_deferred_oneway_write_error_surfaces_at_next_sync_point(server):
+    """A trailing one-way write that fails server-side (dead session)
+    surfaces at the transaction's *next sync point* — the commit reports
+    an abort instead of succeeding silently."""
+    reg, node = _connect(server, {"D1": Account(10), "D2": Account(10)})
+    t = Transaction(reg, wait_timeout=5.0)
+    d1 = t.accesses(reg.locate("D1"), 0, 1, 1)
+    d2 = t.accesses(reg.locate("D2"), 1, 0, 1)
+    t.begin()
+    d1.deposit(1)                      # opens, holds D1
+    d2.deposit(1)
+    acc = next(iter(t._accesses.values()))
+    server._op_abandon(txn=acc.txn_uid)   # §3.4: session declared dead
+    d1.reset()                         # one-way write into the dead session
+    with pytest.raises(AbortError):
+        t.commit()                     # next sync point: deferred error
+    assert t._terminated
+    reg.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# fused path ≡ per-op path                                                     #
+# --------------------------------------------------------------------------- #
+def test_fused_equals_per_op_trace(server):
+    """The same op plan through invoke_many and through per-op proxy
+    calls: identical values, identical final state."""
+    plan = [("balance", (), {}), ("deposit", (7,), {}),
+            ("balance", (), {}), ("withdraw", (2,), {}),
+            ("balance", (), {}), ("reset", (), {})]
+
+    def run(use_fusion, name):
+        t = Transaction(_REG)
+        p = t.accesses(_REG.locate(name), 3, 1, 2)
+
+        def body(tt):
+            if use_fusion:
+                return tt.invoke_many(p, plan)
+            return [getattr(p, m)(*a, **k) for m, a, k in plan]
+
+        out = t.start(body)
+        return out, _REG.locate(name).raw_call("balance")
+
+    global _REG
+    _REG, node = _connect(server, {"E1": Account(50), "E2": Account(50)})
+    fused = run(True, "E1")
+    per_op = run(False, "E2")
+    assert fused == per_op
+    _REG.shutdown()

@@ -1,0 +1,203 @@
+"""Leader/follower demux races (PR 4, DESIGN.md §3.1 v3).
+
+The caller awaiting a reply leads its connection's read loop; these tests
+cover the protocol's race windows: a leader that times out mid-read must
+hand the socket to a promoted follower with no frame lost or delivered
+twice; pushes arriving while a caller-leader holds the socket must be
+processed by that leader; and the fallback thread must keep draining
+pushes during leaderless windows.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core.api import InstanceInvalidated
+from repro.net import wire
+from repro.net.client import NodeClient
+from repro.net.demo import Account
+from repro.net.server import NodeServer
+
+
+def _fake_server():
+    """A scripted single-connection server: accepts one mux connection,
+    answers the hello, then hands (reader, sock) to the test body."""
+    import socket
+
+    listener = socket.socket()
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+    addr = "%s:%d" % listener.getsockname()
+    state = {}
+
+    def accept():
+        conn, _ = listener.accept()
+        reader = wire.FrameReader(conn)
+        req_id, op, kw = reader.recv_msg()            # mux_hello
+        assert op == "mux_hello"
+        wire.send_msg(conn, (req_id, wire.OK, None, []))
+        state["conn"], state["reader"] = conn, reader
+
+    th = threading.Thread(target=accept, daemon=True)
+    th.start()
+    return listener, addr, state, th
+
+
+def test_leader_timeout_promotes_follower_no_lost_frames():
+    """Caller A (short timeout) becomes leader; its reply never comes.
+    On expiry A must release the socket and promote caller B, who then
+    reads B's own reply inline — nothing lost, nothing double-delivered,
+    and the connection stays healthy for later traffic."""
+    listener, addr, state, accept_th = _fake_server()
+    c = NodeClient(addr, conns=1)
+
+    results = {}
+
+    def caller_a():
+        try:
+            c.call("slow_op", rpc_timeout=0.4)
+        except TimeoutError:
+            results["a"] = "timeout"
+
+    def caller_b():
+        results["b"] = c.call("op_b", rpc_timeout=10.0)
+
+    ta = threading.Thread(target=caller_a)
+    ta.start()
+    time.sleep(0.1)          # A is leading (parked in the read loop)
+    tb = threading.Thread(target=caller_b)
+    tb.start()
+
+    accept_th.join(timeout=5)
+    reader, conn = state["reader"], state["conn"]
+    req_a = reader.recv_msg()[0]          # A's request
+    req_b = reader.recv_msg()[0]          # B's request
+    ta.join(timeout=5)                    # A timed out as leader...
+    assert results.get("a") == "timeout"
+    wire.send_msg(conn, (req_b, wire.OK, "for-b", []))
+    tb.join(timeout=5)                    # ...and B (promoted) reads inline
+    assert results.get("b") == "for-b"
+    # A's late reply is dropped with a log line, nothing crashes:
+    wire.send_msg(conn, (req_a, wire.OK, "late", []))
+    # the connection still works for a fresh call
+    def answer_next():
+        rid = reader.recv_msg()[0]
+        wire.send_msg(conn, (rid, wire.OK, "fresh", []))
+    th = threading.Thread(target=answer_next, daemon=True)
+    th.start()
+    assert c.call("op_c", rpc_timeout=10.0) == "fresh"
+    assert c.alive
+    th.join(timeout=5)
+    c.close()
+    listener.close()
+
+
+def test_push_arrives_while_caller_leads():
+    """A note pushed while a caller-leader holds the socket must be
+    handled by that leader (deferred error recorded) before its own
+    reply resolves — no push is starved by an active leader."""
+    listener, addr, state, accept_th = _fake_server()
+    c = NodeClient(addr, conns=1)
+    uid = "push-test#1"
+    with c._lock:
+        c._active_txns.add(uid)
+
+    got = {}
+
+    def caller():
+        got["v"] = c.call("slow", rpc_timeout=10.0)
+
+    th = threading.Thread(target=caller)
+    th.start()
+    accept_th.join(timeout=5)
+    reader, conn = state["reader"], state["conn"]
+    req = reader.recv_msg()[0]
+    # push first (standalone note), then the reply
+    wire.send_msg(conn, (None, wire.NOTE, None,
+                         [{"kind": "oneway_err", "op": "release",
+                           "txn": uid, "error": InstanceInvalidated("boom")}]))
+    wire.send_msg(conn, (req, wire.OK, "done", []))
+    th.join(timeout=5)
+    assert got.get("v") == "done"
+    with pytest.raises(InstanceInvalidated):
+        c.raise_deferred(uid)
+    c.close()
+    listener.close()
+
+
+def test_fallback_drains_push_with_no_caller_waiting():
+    """During leaderless windows the fallback reader must deliver pushes
+    (here: a task_done note) without any caller driving the socket."""
+    listener, addr, state, accept_th = _fake_server()
+    c = NodeClient(addr, conns=1)
+    uid = "fallback-test#1"
+    with c._lock:
+        c._active_txns.add(uid)
+    c.call_async("warmup")              # establishes the mux connection
+    accept_th.join(timeout=5)
+    reader, conn = state["reader"], state["conn"]
+    rid = reader.recv_msg()[0]
+    wire.send_msg(conn, (rid, wire.OK, None, []))
+    wait = c.task_wait(uid, "X")
+    time.sleep(0.1)                     # nobody is awaiting: leaderless
+    wire.send_msg(conn, (None, wire.NOTE, None,
+                         [{"kind": "task_done", "txn": uid, "name": "X",
+                           "error": None, "buf": None}]))
+    assert wait.done.wait(5.0), "fallback reader must deliver the push"
+    c.close()
+    listener.close()
+
+
+def test_inline_replies_dominate_under_sequential_calls():
+    """The zero-handoff claim, measured: a sequence of synchronous calls
+    from one thread should read essentially every reply inline (the
+    caller is the leader); handoffs stay a small minority."""
+    srv = NodeServer("lead0", monitor_timeout=5.0).start()
+    try:
+        c = NodeClient(srv.address, conns=1)
+        c.call("bind", name="L", obj=Account(3))
+        for _ in range(30):
+            assert c.call("raw_call", name="L", method="balance",
+                          args=(), kwargs={}) == 3
+        assert c.n_inline >= 25, (c.n_inline, c.n_handoff)
+        c.close()
+    finally:
+        srv.stop()
+
+
+def test_concurrent_callers_every_future_resolves_once():
+    """Stress the promotion machinery: many threads, one connection, a
+    parked blocking RPC in front — every future gets exactly its own
+    value (double delivery would scramble them), nobody hangs."""
+    srv = NodeServer("lead1", monitor_timeout=5.0).start()
+    try:
+        c = NodeClient(srv.address, conns=1)
+        for i in range(4):
+            c.call("bind", name=f"n{i}", obj=Account(100 + i))
+        blocked = c.call_async("header_wait", name="n0", kind="access",
+                               pv=7, timeout=None)
+        errors = []
+
+        def worker(i):
+            try:
+                for k in range(20):
+                    v = c.call("raw_call", name=f"n{i % 4}",
+                               method="balance", args=(), kwargs={},
+                               rpc_timeout=30.0)
+                    assert v == 100 + (i % 4), (i, k, v)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(10)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert not blocked.done()
+        c.call("header_release", name="n0", pv=6)
+        assert blocked.result(timeout=10.0) is True
+        c.close()
+    finally:
+        srv.stop()

@@ -34,14 +34,63 @@ def test_large_frame_roundtrip():
 def test_partial_reads_reassemble():
     """recv_frame must tolerate the kernel splitting frames arbitrarily."""
     a, b = _sock_pair()
-    data = wire.encode(("op", {"k": "v" * 10_000}))
-    framed = len(data).to_bytes(4, "big") + data
+    framed = wire.frame(("op", {"k": "v" * 10_000}))
     def dribble():
         for i in range(0, len(framed), 1017):
             a.sendall(framed[i:i + 1017])
     th = threading.Thread(target=dribble)
     th.start()
     assert wire.recv_msg(b) == ("op", {"k": "v" * 10_000})
+    th.join()
+    a.close(), b.close()
+
+
+def test_oob_payload_roundtrips_as_bytes():
+    """v3: an ``oob``-wrapped bulk payload travels as a raw trailing
+    segment and reconstructs as plain bytes; small payloads stay in-band
+    (plain bytes either way — the codec is transparent)."""
+    a, b = _sock_pair()
+    big = b"\xc3" * (wire.OOB_MIN * 3)
+    small = b"tiny"
+    msg = (7, wire.OK, {"buf": wire.oob(big), "note": wire.oob(small)}, [])
+    assert isinstance(wire.oob(big), type(__import__("pickle").PickleBuffer(b"")))
+    wire.send_msg(a, msg)
+    got = wire.recv_msg(b)
+    assert got[2]["buf"] == big and isinstance(got[2]["buf"], bytes)
+    assert got[2]["note"] == small
+    # same through the buffered reader
+    wire.send_msg(a, msg)
+    got = wire.FrameReader(b).recv_msg()
+    assert got[2]["buf"] == big
+    a.close(), b.close()
+
+
+def test_frame_reader_has_frame_and_multi_frame_drain():
+    """has_frame reports buffered complete frames without syscalls, so a
+    departing leader can drain everything one recv pulled in."""
+    a, b = _sock_pair()
+    msgs = [(i, wire.OK, f"v{i}", []) for i in range(5)]
+    wire.send_frames(a, [wire.frame(m) for m in msgs])
+    reader = wire.FrameReader(b)
+    assert reader.recv_msg() == msgs[0]      # one recv buffers the rest
+    assert reader.has_frame()
+    for m in msgs[1:]:
+        assert reader.recv_msg() == m
+    assert not reader.has_frame()
+    a.close(), b.close()
+
+
+def test_send_frames_coalesces_queued_frames():
+    """Several queued outbound frames arrive intact through one vectored
+    send (partial-write resumption included)."""
+    a, b = _sock_pair()
+    msgs = [(None, "op%d" % i, {"blob": b"z" * 30_000}) for i in range(8)]
+    th = threading.Thread(
+        target=lambda: wire.send_frames(a, [wire.frame(m) for m in msgs]))
+    th.start()
+    reader = wire.FrameReader(b)
+    for m in msgs:
+        assert reader.recv_msg() == m
     th.join()
     a.close(), b.close()
 
