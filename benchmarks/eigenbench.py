@@ -382,12 +382,109 @@ def _build_tcp(cfg: EigenConfig):
     return reg, hot, mild_by_client, teardown
 
 
+def _plan_rng(cfg: EigenConfig, framework: str, ci: int) -> random.Random:
+    """Per-client plan RNG, seeded with a *stable* string key: str seeding
+    hashes via sha512, so plans are identical across processes and hosts
+    (``PYTHONHASHSEED``-independent) — required for the exact message-plan
+    CI gate over the sim transport."""
+    return random.Random(f"eigen:{cfg.seed}:{framework}:{ci}")
+
+
+def _build_sim(cfg: EigenConfig):
+    """Deterministic simulation topology: every node is a
+    :class:`~repro.net.simnet.SimNode` inside this process under the
+    seeded virtual-time scheduler; every client is a simulated process."""
+    from repro.net.simnet import build_simnet
+
+    net = build_simnet(cfg.seed, cfg.nodes)
+    op_time = cfg.op_time_ms / 1e3
+    setup = net.client_registry("setup")
+    remote_nodes = sorted(setup.nodes, key=lambda n: n.name)
+    n_clients = cfg.nodes * cfg.clients_per_node
+    hot: List = []
+    mild_by_client: Dict[int, List] = {}
+    for ni, rn in enumerate(remote_nodes):
+        for i in range(cfg.arrays_per_node):
+            hot.append(rn.bind(f"hot-{ni}-{i}", RefCell(0, op_time or None)))
+    for ci in range(n_clients):
+        rn = remote_nodes[ci % cfg.nodes]
+        mild_by_client[ci] = [
+            rn.bind(f"mild-{ci}-{i}", RefCell(0, op_time or None))
+            for i in range(cfg.arrays_per_node)]
+    return net, setup, hot, mild_by_client
+
+
+def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
+    """The ``sim`` transport harness: clients are simnet actors, the wall
+    clock is virtual, and the per-txn message plan (``rpcs_per_txn``,
+    ``oneways_per_txn``) is exactly reproducible for a given (cfg, seed) —
+    the deterministic primary signal of the CI bench gate."""
+    net, setup, hot, mild_by_client = _build_sim(cfg)
+    n_clients = cfg.nodes * cfg.clients_per_node
+    runner = FRAMEWORKS[framework]
+    stats_per_client = [dict(commits=0, aborts=0, retries=0, ops=0, waits=0)
+                        for _ in range(n_clients)]
+
+    plans: List[List[List[Step]]] = []
+    for ci in range(n_clients):
+        rng = _plan_rng(cfg, framework, ci)
+        if cfg.workload == "bank":
+            hist: List[Any] = []
+            plans.append([_gen_bank_plan(rng, cfg, hot, mild_by_client[ci],
+                                         hist)
+                          for _ in range(cfg.txns_per_client)])
+        else:
+            plans.append([_gen_plan(rng, cfg, hot, mild_by_client[ci])
+                          for _ in range(cfg.txns_per_client)])
+
+    def client(ci: int) -> None:
+        # Each client is its own simulated *process*: a private registry
+        # over its own per-node transports (like one OS process on TCP).
+        reg = net.client_registry(f"c{ci}")
+        by_name = {}
+        st = stats_per_client[ci]
+        for steps in plans[ci]:
+            local = [(by_name.setdefault(o.name, reg.locate(o.name)), op, v)
+                     for o, op, v in steps]
+            runner(reg, local, st)
+            st["ops"] += len(steps)
+
+    for ci in range(n_clients):
+        net.spawn(lambda c=ci: client(c), f"c{ci}")
+    t0 = time.monotonic()
+    net.run()
+    wall = time.monotonic() - t0
+    virtual = net.now()
+    n_rpc = n_oneway = 0
+    for (cid, _node), t in net._transports.items():
+        if cid.startswith("c"):
+            n_rpc += t.n_rpc
+            n_oneway += t.n_oneway
+    net.shutdown()
+
+    commits = sum(s["commits"] for s in stats_per_client)
+    aborts = sum(s["aborts"] for s in stats_per_client)
+    retries = sum(s["retries"] for s in stats_per_client)
+    ops = sum(s["ops"] for s in stats_per_client)
+    waits = sum(s["waits"] for s in stats_per_client)
+    attempted = commits + aborts + retries
+    return Result(framework=framework,
+                  throughput_ops=ops / max(virtual, 1e-9),
+                  aborts=aborts, retries=retries, commits=commits,
+                  abort_rate_pct=100.0 * (aborts + retries) / max(attempted, 1),
+                  wall_s=wall, waits=waits,
+                  rpcs_per_txn=round(n_rpc / max(commits, 1), 2),
+                  oneways_per_txn=round(n_oneway / max(commits, 1), 2))
+
+
 def run_benchmark(framework: str, cfg: EigenConfig,
                   transport: str = "inproc") -> Result:
-    if transport == "tcp" and framework not in TCP_FRAMEWORKS:
+    if transport in ("tcp", "sim") and framework not in TCP_FRAMEWORKS:
         raise ValueError(
-            f"framework {framework!r} does not run over TCP "
+            f"framework {framework!r} does not run over {transport} "
             f"(supported: {', '.join(TCP_FRAMEWORKS)})")
+    if transport == "sim":
+        return _run_benchmark_sim(framework, cfg)
     build = _build_tcp if transport == "tcp" else _build_inproc
     reg, hot, mild_by_client, teardown = build(cfg)
     n_clients = cfg.nodes * cfg.clients_per_node
@@ -406,7 +503,7 @@ def run_benchmark(framework: str, cfg: EigenConfig,
     # generate all plans up front (a-priori access sets)
     plans: List[List[List[Step]]] = []
     for ci in range(n_clients):
-        rng = random.Random((cfg.seed, framework, ci).__hash__())
+        rng = _plan_rng(cfg, framework, ci)
         if cfg.workload == "bank":
             hist: List[Any] = []    # locality window spans the client's txns
             plans.append([_gen_bank_plan(rng, cfg, hot, mild_by_client[ci],
@@ -479,9 +576,13 @@ def main() -> None:
     ap.add_argument("--scenario", default="9:1",
                     help="read:write ratio, e.g. 9:1, 5:5, 1:9")
     ap.add_argument("--transport", default="inproc",
-                    choices=["inproc", "tcp"],
+                    choices=["inproc", "tcp", "sim"],
                     help="inproc: simulated nodes in one process; tcp: one "
-                         "real server subprocess per node, honest wire")
+                         "real server subprocess per node, honest wire; "
+                         "sim: deterministic virtual-time simulation "
+                         "(seeded scheduler, exact message-plan metrics)")
+    ap.add_argument("--seed", type=int, default=42,
+                    help="schedule seed (plans + the sim scheduler)")
     ap.add_argument("--sweep", default="none",
                     choices=["none", "clients", "nodes", "nodes-mild"])
     ap.add_argument("--workload", default="mix", choices=["mix", "bank"],
@@ -501,18 +602,19 @@ def main() -> None:
     r, w = (int(x) for x in args.scenario.split(":"))
     read_pct = r / (r + w)
     if args.frameworks == "all":
-        fws = list(TCP_FRAMEWORKS if args.transport == "tcp" else FRAMEWORKS)
+        fws = list(TCP_FRAMEWORKS if args.transport in ("tcp", "sim")
+                   else FRAMEWORKS)
     else:
         fws = args.frameworks.split(",")
     cfg = EigenConfig(nodes=args.nodes,
                       clients_per_node=args.clients_per_node,
                       txns_per_client=args.txns,
                       read_pct=read_pct,
-                      op_time_ms=args.op_ms,
+                      op_time_ms=args.op_ms, seed=args.seed,
                       workload=args.workload, chain_len=args.chain_len)
     if args.full:
         cfg = EigenConfig(nodes=16, clients_per_node=16, txns_per_client=10,
-                          read_pct=read_pct, op_time_ms=3.0,
+                          read_pct=read_pct, op_time_ms=3.0, seed=args.seed,
                           workload=args.workload, chain_len=args.chain_len)
 
     print("framework,value,throughput_ops_s,abort_rate_pct,commits,aborts,"

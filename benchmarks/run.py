@@ -170,7 +170,7 @@ def bench_scheduler_overhead(full: bool = False,
 # Transport-overhead bench (PR2, re-measured per PR): in-proc vs real TCP wire #
 # --------------------------------------------------------------------------- #
 def bench_transport_overhead(full: bool = False,
-                             out: str = "BENCH_PR4.json") -> None:
+                             out: str = "BENCH_PR5.json") -> None:
     """Per-transaction cost of the real wire (``repro.net``), honestly.
 
     The same Eigenbench schedule (read-dominated 9:1 — the paper's
@@ -220,6 +220,13 @@ def bench_transport_overhead(full: bool = False,
     for cname, cfg in configs.items():
         inproc_us, r_in = median_us(cfg, "inproc")
         tcp_us, r_tcp = median_us(cfg, "tcp")
+        # The deterministic message plan under simnet: ONE run (repeats
+        # would measure the same thing — the schedule is a pure function
+        # of the seed), exact to the message. This is the primary signal
+        # of the CI bench-delta gate; the wall-clock rows above are the
+        # warn-only secondary (shared-host scheduling noise swings them
+        # 2-4x between windows, CHANGES.md PR 3/4).
+        r_sim = eb.run_benchmark("optsva-cf", cfg, transport="sim")
         overhead = tcp_us - inproc_us
         factor = tcp_us / inproc_us if inproc_us else 0.0
         for transport, us, r in (("inproc", inproc_us, r_in),
@@ -241,13 +248,28 @@ def bench_transport_overhead(full: bool = False,
                              rpcs_per_txn=r_tcp.rpcs_per_txn,
                              oneways_per_txn=r_tcp.oneways_per_txn,
                              handoffs_per_txn=r_tcp.handoffs_per_txn)
+        sim_derived = (f"rpcs_per_txn={r_sim.rpcs_per_txn};"
+                       f"oneways_per_txn={r_sim.oneways_per_txn};"
+                       f"commits={r_sim.commits};aborts={r_sim.aborts};"
+                       f"waits={r_sim.waits}")
+        emit(f"transport/{cname}/sim", 0.0, sim_derived)
+        json_rows.append({
+            "name": f"transport/{cname}/sim", "transport": "sim",
+            "us_per_call": 0.0, "derived": sim_derived,
+            "commits": r_sim.commits, "aborts": r_sim.aborts,
+            "waits": r_sim.waits, "seed": cfg.seed,
+            "rpcs_per_txn": r_sim.rpcs_per_txn,
+            "oneways_per_txn": r_sim.oneways_per_txn})
     write_bench_json(out, json_rows, meta={
-        "bench": "transport_overhead", "pr": 4, "op_time_ms": 0.0,
+        "bench": "transport_overhead", "pr": 5, "op_time_ms": 0.0,
         "txns_per_client": txns, "repeats": repeats,
         "note": ("tcp = one node-server subprocess per registry node "
                  "(repro.net), honest wire over the multiplexed pipelined "
                  "transport with leader/follower demux + operation fusion; "
-                 "inproc = simulated nodes. us_per_call is wall-clock per "
+                 "inproc = simulated nodes; sim = deterministic virtual-"
+                 "time simulation (repro.net.simnet) whose message-plan "
+                 "metrics are exact per seed and gated with EXACT equality "
+                 "by check_bench_delta. us_per_call is wall-clock per "
                  "committed transaction, median of `repeats` runs. "
                  "rpcs/oneways/handoffs are client-side message counts "
                  "per committed transaction from the median run.")})
@@ -315,7 +337,7 @@ def main() -> None:
                          "fig13,roofline,step")
     ap.add_argument("--bench-out", default="BENCH_PR1.json",
                     help="JSON trajectory point for the sched table")
-    ap.add_argument("--transport-out", default="BENCH_PR4.json",
+    ap.add_argument("--transport-out", default="BENCH_PR5.json",
                     help="JSON trajectory point for the transport table "
                          "(per-PR: pass BENCH_PR<n>.json for PR n)")
     args = ap.parse_args()

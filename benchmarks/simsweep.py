@@ -1,0 +1,344 @@
+"""Seed-sweep fuzzer over the deterministic simulation transport (simnet).
+
+Each seed generates a small OptSVA-CF deployment (2-3 nodes, a handful of
+client processes running bank-transfer chains, write-only mark ledgers,
+and read-only audits) plus — on most seeds — one §3.4 crash-stop
+injection at a labeled protocol step, then runs the whole thing under
+:class:`repro.net.simnet.SimNet`'s seeded virtual-time scheduler and
+checks the paper's §2-§3.4 invariants:
+
+* **conservation** — transfers are atomic: the global balance sum never
+  changes, and each account's final balance equals its initial balance
+  plus the net deltas of exactly the *committed* transfers (catches lost
+  writes, partial commits, applied-but-unrestored logs);
+* **exactly-once marks** — a committed write-only transaction's unique
+  tag appears in the ledger exactly once; an aborted or crashed one never
+  (§2.8.4 log application, §3.4 "a dead transaction's log is never
+  applied");
+* **consistent audits** — every *committed* read-only transaction saw a
+  consistent snapshot: its sum over all accounts equals the invariant
+  total (last-use early release must never expose a torn state to a
+  transaction that goes on to commit);
+* **pessimism** — fault-free seeds commit everything: zero aborts, zero
+  retries (the no-abort guarantee of the pessimistic protocol);
+* **convergence** — at quiescence every version header satisfies
+  ``gv == lv == ltv``: no leaked/wedged private versions, the §3.4
+  rollback-to-oldest + chain-order skip invariant;
+* **no lost/double frames** — transport accounting: everything sent was
+  delivered exactly once or deliberately dropped by a crash;
+* **replayability** — re-running a seed yields a byte-identical schedule
+  trace (checked for a sample of seeds per sweep, and for every failing
+  seed so the trace it prints is trustworthy).
+
+Usage::
+
+    python -m benchmarks.simsweep --seeds 200                  # PR gate
+    python -m benchmarks.simsweep --seeds 5000 --trace-dir sim_traces
+    python -m benchmarks.simsweep --seed 1234 --print-trace    # replay one
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import AbortError, Transaction
+from repro.core.api import TransactionError
+from repro.net.demo import LedgerAccount
+from repro.net.simnet import SimDeadlock, build_simnet
+
+#: The labeled §3.4 crash-stop injection points (ISSUE 5 acceptance:
+#: the PR-sized sweep must exercise at least 4 distinct ones).
+INJECTION_POINTS = [
+    ("mid-dispense", "dispense_batch", "after_send"),
+    ("mid-open", "open_call", "after_send"),
+    ("lw-apply", "lw_apply", "after_send"),
+    ("pre-terminate", "finish_batch", "before_send"),
+]
+
+
+def _topology(rng: random.Random) -> Tuple[int, int, int, int]:
+    """(nodes, accounts_per_node, clients, txns_per_client) for one seed."""
+    return (rng.choice([2, 2, 3]), rng.choice([2, 3]),
+            rng.choice([3, 4, 5]), rng.choice([2, 3]))
+
+
+def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
+             keep_net: bool = False) -> Dict[str, Any]:
+    """Run one seeded schedule; returns the result record (see keys below).
+
+    ``failures`` is the list of violated invariants (empty == seed
+    passed); ``trace`` is the byte-replayable schedule.
+    """
+    rng = random.Random(f"simsweep:{seed}")
+    n_nodes, accts_per_node, n_clients, txns_per_client = _topology(rng)
+    initial = 1000
+    net = build_simnet(seed, n_nodes)
+
+    setup = net.client_registry("setup")
+    nodes = sorted(setup.nodes, key=lambda n: n.name)
+    account_names: List[str] = []
+    for ni, rn in enumerate(nodes):
+        for ai in range(accts_per_node):
+            name = f"acct-{ni}-{ai}"
+            rn.bind(name, LedgerAccount(initial))
+            account_names.append(name)
+    node_of = {f"acct-{ni}-{ai}": ni for ni in range(n_nodes)
+               for ai in range(accts_per_node)}
+    total = initial * len(account_names)
+
+    # -- fault plan (deterministic per seed) ---------------------------------
+    injected: Optional[str] = None
+    crashed_node: Optional[str] = None
+    if node_faults and seed % 7 == 3:
+        crashed_node = f"node{n_nodes - 1}"
+        net.crash_node_at(crashed_node, rng.uniform(0.001, 0.008))
+    elif faults and seed % 3 != 0:
+        label, op, phase = INJECTION_POINTS[seed % len(INJECTION_POINTS)]
+        nth = 1 + (seed // len(INJECTION_POINTS)) % 2
+        if op == "finish_batch":
+            # Crash before the FIRST terminate: full §3.4 rollback on
+            # every node, so the strong conservation invariant applies.
+            # Crashing between the per-node step-5 one-ways instead hits
+            # the (paper-inherent, simnet-documented) partial-terminate
+            # window where one node commits and another rolls back —
+            # see DESIGN.md §7.
+            nth = 1
+        elif op == "lw_apply":
+            nth = 1     # c0 runs exactly one write-only transaction
+        net.inject_crash("c0", op, nth=nth, phase=phase, label=label)
+        injected = label
+
+    # -- workload ------------------------------------------------------------
+    committed_transfers: List[Tuple[List[str], int]] = []
+    committed_marks: List[Tuple[str, str]] = []     # (account, tag)
+    attempted_marks: List[Tuple[str, str]] = []
+    audit_sums: List[int] = []
+    stats = {"commits": 0, "aborts": 0}
+    failures: List[str] = []
+
+    def transfer_txn(reg, t_rng) -> None:
+        k = t_rng.choice([2, 3])
+        chain = t_rng.sample(account_names, min(k, len(account_names)))
+        if len({node_of[n] for n in chain}) < 2 and len(nodes) > 1:
+            # force a cross-node chain so multi-domain commit (and its
+            # finish_batch wave) is on the table
+            other = [n for n in account_names
+                     if node_of[n] != node_of[chain[0]]]
+            chain[-1] = t_rng.choice(other)
+        amt = t_rng.randrange(1, 50)
+        t = Transaction(reg)
+        proxies = {}
+        for i, name in enumerate(chain):
+            ups = 1 if i in (0, len(chain) - 1) else 2
+            proxies[name] = t.accesses(reg.locate(name), 1, 0, ups)
+
+        def body(tt):
+            for a, b in zip(chain, chain[1:]):
+                proxies[a].withdraw(amt)
+                proxies[b].deposit(amt)
+            return proxies[chain[0]].balance()
+
+        t.start(body)
+        committed_transfers.append((chain, amt))
+        stats["commits"] += 1
+
+    def mark_txn(reg, t_rng, cid: str, tag: str) -> None:
+        name = t_rng.choice(account_names)
+        t = Transaction(reg)
+        p = t.writes(reg.locate(name), 1)
+        attempted_marks.append((name, tag))
+        t.start(lambda tt: p.mark(tag))
+        committed_marks.append((name, tag))
+        stats["commits"] += 1
+
+    def audit_txn(reg, t_rng) -> None:
+        t = Transaction(reg)
+        proxies = [t.reads(reg.locate(n), 1) for n in account_names]
+        got = t.start(lambda tt: sum(p.balance() for p in proxies))
+        audit_sums.append(got)
+        stats["commits"] += 1
+
+    def client(cid: str) -> None:
+        reg = net.client_registry(cid)
+        c_rng = random.Random(f"simsweep:{seed}:{cid}")
+        # c0 (the injection target) runs a fixed mix that contains every
+        # injectable op: transfers (dispense/open/finish), then a
+        # write-only mark (lw_apply), then an audit.
+        kinds = (["transfer", "transfer", "mark", "audit"]
+                 if cid == "c0" else
+                 [c_rng.choice(["transfer", "transfer", "mark", "audit"])
+                  for _ in range(txns_per_client)])
+        for i, kind in enumerate(kinds):
+            try:
+                if kind == "transfer":
+                    transfer_txn(reg, c_rng)
+                elif kind == "mark":
+                    mark_txn(reg, c_rng, cid, f"{cid}.t{i}")
+                else:
+                    audit_txn(reg, c_rng)
+            except AbortError:
+                stats["aborts"] += 1
+            except TransactionError:
+                # RemoteObjectFailure after a home-node crash-stop: the
+                # transaction already rolled back on surviving nodes
+                # (§3.4); the client carries on.
+                stats["aborts"] += 1
+
+    for ci in range(n_clients):
+        net.spawn(lambda cid=f"c{ci}": client(cid), f"c{ci}")
+
+    try:
+        net.run()
+    except SimDeadlock as e:
+        failures.append(f"deadlock: {e.args[0].splitlines()[0]}")
+
+    # -- invariants ----------------------------------------------------------
+    alive_accounts = [n for n in account_names
+                      if crashed_node is None
+                      or f"node{node_of[n]}" != crashed_node]
+    balances = {}
+    marks = {}
+    for name in alive_accounts:
+        shared = setup.locate(name)
+        balances[name] = shared.raw_call("balance")
+        marks[name] = shared.raw_call("read_marks")
+
+    if crashed_node is None:
+        expected = {n: initial for n in account_names}
+        for chain, amt in committed_transfers:
+            expected[chain[0]] -= amt
+            expected[chain[-1]] += amt
+        if sum(balances.values()) != total:
+            failures.append(
+                f"conservation: sum={sum(balances.values())} != {total}")
+        for name in account_names:
+            if balances[name] != expected[name]:
+                failures.append(f"balance[{name}]={balances[name]} "
+                                f"!= expected {expected[name]}")
+        for got in audit_sums:
+            if got != total:
+                failures.append(f"committed audit saw torn sum {got} "
+                                f"!= {total}")
+    committed = set(committed_marks)
+    for name in alive_accounts:
+        seen = marks[name]
+        for tag in seen:
+            if (name, tag) not in committed:
+                failures.append(
+                    f"uncommitted mark {tag!r} applied on {name}")
+        for (mname, tag) in committed:
+            if mname == name and seen.count(tag) != 1:
+                failures.append(f"mark {tag!r} applied "
+                                f"{seen.count(tag)}x on {name}")
+    if injected is None and crashed_node is None and stats["aborts"]:
+        failures.append(f"pessimism: {stats['aborts']} aborts in a "
+                        f"fault-free schedule")
+    if injected is not None and not net.fired_injections:
+        failures.append(f"injection {injected!r} never fired")
+    bad = net.converged()
+    if bad:
+        failures.append(f"unconverged headers: {bad}")
+    if net.sent != net.delivered + net.dropped:
+        failures.append(f"frame accounting: sent={net.sent} != "
+                        f"delivered={net.delivered}+dropped={net.dropped}")
+
+    out = {
+        "seed": seed, "failures": failures, "trace": net.trace_text(),
+        "commits": stats["commits"], "aborts": stats["aborts"],
+        "injected": net.fired_injections[0] if net.fired_injections else
+                    ("node-crash" if crashed_node else None),
+        "nodes": n_nodes, "clients": n_clients,
+    }
+    if keep_net:
+        out["net"] = net
+    else:
+        net.shutdown()
+    return out
+
+
+def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
+          replay_check: int = 10,
+          trace_dir: Optional[str] = None) -> int:
+    failed: List[Dict[str, Any]] = []
+    coverage: Dict[str, int] = {}
+    replayed = 0
+    for seed in seeds:
+        res = run_seed(seed, faults=faults, node_faults=node_faults)
+        if res["injected"]:
+            coverage[res["injected"]] = coverage.get(res["injected"], 0) + 1
+        if res["failures"] or replayed < replay_check:
+            res2 = run_seed(seed, faults=faults, node_faults=node_faults)
+            replayed += 1
+            if res2["trace"] != res["trace"]:
+                res["failures"].append(
+                    "NON-DETERMINISTIC: replay trace diverged")
+        if res["failures"]:
+            failed.append(res)
+            print(f"seed {seed}: FAIL {res['failures']}")
+            if trace_dir:
+                d = Path(trace_dir)
+                d.mkdir(parents=True, exist_ok=True)
+                (d / f"seed-{seed}.trace").write_text(res["trace"])
+                print(f"  trace -> {d / f'seed-{seed}.trace'}")
+            else:
+                print("  --- replayable schedule (tail) ---")
+                for line in res["trace"].splitlines()[-40:]:
+                    print(f"  {line}")
+    n = len(list(seeds))
+    print(f"\nsimsweep: {n} seeds, {n - len(failed)} passed, "
+          f"{len(failed)} failed; replay-checked {replayed}")
+    print(f"crash-injection coverage: "
+          f"{ {k: coverage[k] for k in sorted(coverage)} }")
+    rc = 1 if failed else 0
+    if faults and n >= 50:
+        distinct = len([k for k in coverage if k != "node-crash"])
+        if distinct < 4:
+            print(f"FAIL: only {distinct} distinct §3.4 injection points "
+                  f"exercised (need >= 4)")
+            rc = 1
+    return rc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=200,
+                    help="number of seeds to sweep")
+    ap.add_argument("--start", type=int, default=0, help="first seed")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="run exactly one seed (debug/replay)")
+    ap.add_argument("--no-faults", action="store_true",
+                    help="disable crash injection (pure schedule search)")
+    ap.add_argument("--node-faults", action="store_true",
+                    help="also crash-stop home nodes on some seeds "
+                         "(relaxed invariants on those)")
+    ap.add_argument("--replay-check", type=int, default=10,
+                    help="re-run this many seeds and require "
+                         "byte-identical traces")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write failing-seed traces here (CI artifact dir)")
+    ap.add_argument("--print-trace", action="store_true",
+                    help="with --seed: print the full schedule trace")
+    args = ap.parse_args()
+
+    if args.seed is not None:
+        res = run_seed(args.seed, faults=not args.no_faults,
+                       node_faults=args.node_faults)
+        if args.print_trace:
+            sys.stdout.write(res["trace"])
+        print(f"seed {args.seed}: commits={res['commits']} "
+              f"aborts={res['aborts']} injected={res['injected']} "
+              f"failures={res['failures']}")
+        sys.exit(1 if res["failures"] else 0)
+
+    sys.exit(sweep(range(args.start, args.start + args.seeds),
+                   faults=not args.no_faults,
+                   node_faults=args.node_faults,
+                   replay_check=args.replay_check,
+                   trace_dir=args.trace_dir))
+
+
+if __name__ == "__main__":
+    main()

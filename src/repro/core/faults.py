@@ -19,19 +19,27 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from .registry import Registry, SharedObject
 
 
 class TransactionMonitor:
-    """Watchdog that rolls back objects abandoned by crashed transactions."""
+    """Watchdog that rolls back objects abandoned by crashed transactions.
+
+    ``clock`` is the failure detector's time source (default: real
+    monotonic time). A deterministic simulation passes its virtual clock so
+    staleness is judged in virtual seconds and expiry becomes a scheduled
+    event instead of a wall-clock race (DESIGN.md §7).
+    """
 
     def __init__(self, registry: Registry, *, timeout: float = 2.0,
-                 poll_interval: float = 0.1):
+                 poll_interval: float = 0.1,
+                 clock: Callable[[], float] = time.monotonic):
         self.registry = registry
         self.timeout = timeout
         self.poll_interval = poll_interval
+        self.clock = clock
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.rollbacks: List[str] = []
@@ -48,7 +56,7 @@ class TransactionMonitor:
 
     def _loop(self) -> None:
         while not self._stop.wait(self.poll_interval):
-            now = time.monotonic()
+            now = self.clock()
             for shared in self.registry.all_objects().values():
                 self._check_object(shared, now)
 
@@ -73,10 +81,14 @@ class TransactionMonitor:
                 if shared.holding_txn is not txn:
                     return  # already cleaned up / txn resumed and finished
                 shared.holding_txn = None
-            if acc.st is not None and acc.modified:
+            if (acc.st is not None and acc.modified
+                    and h.restore_allowed(acc.seen_instance, acc.pv)):
                 acc.st.restore_into(shared.holder)
             # Invalidate: the crashed txn (if merely slow) and anyone who read
             # its early-released state must abort when they next check.
+            # Recorded so the version-aware restore guard can account for
+            # this bump.
+            h.note_restore(acc.pv)
             h.instance += 1
             # Self-release: advance both counters past the crashed holder,
             # collecting the waiters this unblocks.

@@ -194,8 +194,9 @@ class SvaTransaction:
             h = a.shared.header
             if a.st is not None and a.modified:
                 with h.lock:
-                    if h.instance == a.seen_instance:
+                    if h.restore_allowed(a.seen_instance, a.pv):
                         a.st.restore_into(a.shared.holder)
+                        h.note_restore(a.pv)
                         h.instance += 1
         for a in self._order:
             if not a.released:

@@ -318,15 +318,17 @@ class ObjectAccess:
         return self.valid()
 
     def rollback(self) -> None:
-        """Abort step 3: restore from the checkpoint, oldest-restore-wins."""
+        """Abort step 3: restore from the checkpoint, oldest-restore-wins
+        (version-aware: see :meth:`VersionHeader.restore_allowed` — a
+        younger transaction's restore must never suppress ours)."""
         h = self.shared.header
         with self.lock:
             seen, st, modified = self.seen_instance, self.st, self.modified
         if st is not None and modified:
             with h.lock:
-                if h.instance == seen:
-                    # Not already restored to an older version: restore + invalidate.
+                if h.restore_allowed(seen, self.pv):
                     st.restore_into(self.shared.holder)
+                    h.note_restore(self.pv)
                     h.instance += 1
 
     def terminate(self) -> None:

@@ -49,6 +49,33 @@ from typing import Callable, List, Optional
 _header_ids = itertools.count(1)
 _waiter_seq = itertools.count()
 
+# -- pluggable blocking wait (deterministic simulation hook) -----------------
+# A thread that must not block on real OS primitives (a simnet actor under
+# the virtual clock, DESIGN.md §7) installs a per-thread waiter: a callable
+# ``fn(event, timeout) -> bool`` with ``threading.Event.wait`` semantics.
+# Default (no hook) is the native event wait — the TCP/in-process paths are
+# completely unaffected.
+_wait_tl = threading.local()
+
+
+def set_blocking_wait(fn: Optional[Callable]) -> None:
+    """Install (or clear, with ``None``) this thread's blocking-wait hook.
+
+    ``fn(event, timeout)`` must block until ``event`` is set or ``timeout``
+    (seconds, possibly virtual) elapses, returning ``event.is_set()`` —
+    exactly :meth:`threading.Event.wait`'s contract. Every version-condition
+    wait on this thread then routes through it, which is what lets a
+    deterministic scheduler own the interleaving of gate waits."""
+    _wait_tl.fn = fn
+
+
+def blocking_wait(event: threading.Event, timeout: Optional[float]) -> bool:
+    """Wait for ``event`` via this thread's hook (or natively)."""
+    fn = getattr(_wait_tl, "fn", None)
+    if fn is None:
+        return event.wait(timeout)
+    return fn(event, timeout)
+
 # Waiter heap entry: [threshold, seq, callback]; callback is set to None to
 # cancel in place (lazy deletion — the drain discards cancelled entries).
 _ACCESS = "access"
@@ -60,7 +87,7 @@ class VersionHeader:
 
     __slots__ = (
         "uid", "lock", "gv", "lv", "ltv", "instance",
-        "_access_waiters", "_term_waiters", "_listeners",
+        "_access_waiters", "_term_waiters", "_listeners", "_restores",
         "cond_evals", "wakeups", "owner_node",
     )
 
@@ -73,6 +100,10 @@ class VersionHeader:
         self.instance: int = 0
         self._access_waiters: List[list] = []  # heap on lv threshold
         self._term_waiters: List[list] = []    # heap on ltv threshold
+        #: abort/crash restore log: (epoch at restore, restorer's pv) per
+        #: instance bump — the version-aware oldest-restore-wins guard
+        #: (:meth:`restore_allowed`) reads it.
+        self._restores: List[tuple] = []
         # Optional counter-change listeners (seed-era broadcast hook; kept
         # for the benchmark's seed-executor replica, unused otherwise).
         self._listeners: List[Callable[[], None]] = []
@@ -150,6 +181,7 @@ class VersionHeader:
                 self.lv = pv
             if self.ltv < pv:
                 self.ltv = pv
+            self._compact_restores_locked()
             fire = self._drain_ready_locked()
         self._fire(fire)
 
@@ -162,11 +194,54 @@ class VersionHeader:
             self.lv = pv
         if self.ltv < pv:
             self.ltv = pv
+        self._compact_restores_locked()
         return self._drain_ready_locked()
 
     def fire_callbacks(self, callbacks: List[Callable[[], None]]) -> None:
         """Fire drained waiter callbacks (outside the version lock)."""
         self._fire(callbacks)
+
+    def restore_allowed(self, seen: Optional[int], pv: int) -> bool:
+        """Version-aware oldest-restore-wins (abort step 3 / §3.4 crash
+        rollback). Caller holds ``lock``.
+
+        A transaction restoring its checkpoint must skip the restore iff
+        an *older* transaction (smaller ``pv``) already restored since the
+        checkpoint was taken — that older state subsumes ours. The naive
+        ``instance == seen`` guard also skips when only YOUNGER
+        transactions restored, which silently keeps the aborting
+        transaction's own effects applied: T2 modifies o, T3 (pv 3 > 2)
+        opens on top, T3 crashes and restores its checkpoint (which still
+        CONTAINS T2's uncommitted writes) bumping the epoch, T2 then
+        aborts — under the naive guard T2's restore is skipped and its
+        writes survive the abort (lost-money bug, found by the simnet
+        seed sweep). Since every epoch bump records ``(epoch, restorer
+        pv)`` in ``_restores``, the guard can tell the two cases apart;
+        an unaccounted bump falls back to the conservative skip."""
+        if seen is None:
+            return False
+        if self.instance == seen:
+            return True
+        since = [rpv for epoch, rpv in self._restores if epoch >= seen]
+        if len(since) != self.instance - seen:
+            return False       # unaccounted bumps: conservative old rule
+        return all(rpv > pv for rpv in since)
+
+    def note_restore(self, pv: int) -> None:
+        """Record an abort/crash restore by ``pv`` (call under ``lock``,
+        BEFORE bumping ``instance``)."""
+        self._restores.append((self.instance, pv))
+
+    def _compact_restores_locked(self) -> None:
+        """Drop the restore log at full chain quiescence (``gv == lv ==
+        ltv``): every dispensed version has terminated, so no live access
+        record can still hold a ``seen_instance`` that predates the
+        retained window — the log can only be consulted by *future*
+        checkpoints, whose epochs are >= the current instance. Keeps
+        :meth:`restore_allowed`'s scan O(aborts since last quiescence)
+        instead of O(all aborts ever)."""
+        if self._restores and self.ltv == self.gv:
+            self._restores.clear()
 
     def bump_instance(self) -> None:
         """Invalidate the current instance (abort restored older state).
@@ -192,7 +267,7 @@ class VersionHeader:
         wake = ev.set                          # one bound method: identity key
         if not self.park(kind, pv, wake):
             return False
-        if ev.wait(timeout):
+        if blocking_wait(ev, timeout):
             return True
         # Timed out: cancel the parked waiter. If it fired in the race
         # window the wait actually succeeded.

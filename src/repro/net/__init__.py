@@ -26,20 +26,30 @@ Modules:
   ``Transaction``, ``TransactionMonitor``, and ``txstore`` run unchanged
   over either transport;
 * :mod:`repro.net.spawn`  — subprocess helpers used by benchmarks, tests,
-  and the distributed quickstart.
+  and the distributed quickstart;
+* :mod:`repro.net.transport` — the narrow client-side ``Transport``
+  interface both wires implement (plus the shared deferred-error /
+  task-note bookkeeping);
+* :mod:`repro.net.simnet` — the deterministic simulation transport
+  (DESIGN.md §7): every node in one process under a virtual clock, a
+  seeded scheduler owning delivery order/latency/faults, byte-replayable
+  schedule traces.
 
 Trust model: frames carry pickles, so a node server must only be exposed to
 trusted peers (localhost or a private cluster network) — exactly the
 deployment model of Java RMI serialization in the source system.
 """
-from .client import CLIENT_ID, NodeClient
+from .client import NodeClient
 from .remote import RemoteNode, RemoteObjectAccess, RemoteSharedObject
-from .server import NodeServer
+from .server import NodeCore, NodeServer
+from .simnet import SimNet, SimNode, SimTransport, build_simnet
 from .spawn import ServerHandle, spawn_server
+from .transport import CLIENT_ID, Transport
 from .wire import ConnectionClosed, WireError
 
 __all__ = [
     "CLIENT_ID", "NodeClient", "RemoteNode", "RemoteObjectAccess",
-    "RemoteSharedObject", "NodeServer", "ServerHandle", "spawn_server",
-    "ConnectionClosed", "WireError",
+    "RemoteSharedObject", "NodeCore", "NodeServer", "ServerHandle",
+    "SimNet", "SimNode", "SimTransport", "Transport", "build_simnet",
+    "spawn_server", "ConnectionClosed", "WireError",
 ]

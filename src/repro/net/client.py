@@ -58,28 +58,34 @@ from __future__ import annotations
 import collections
 import itertools
 import logging
-import os
-import pickle
 import select
 import socket
 import threading
 import time
-import uuid
-from typing import Any, Dict, List, Optional, Set, Tuple
+from typing import Any, Dict, List, Optional
 
 from repro.core.api import RemoteObjectFailure
 
+from .transport import (CLIENT_ID, LocalBuf, TaskWait, Transport, load_buf)
 from .wire import (ConnectionClosed, FrameReader, NOTE, OK, WireError,
                    parse_address, recv_msg, send_msg)
 
 log = logging.getLogger("repro.net.client")
 
-#: Stable identity of this client *process* across all its transactions.
-CLIENT_ID = f"{socket.gethostname()}:{os.getpid()}:{uuid.uuid4().hex[:6]}"
+# Backwards-compatible aliases: the bookkeeping classes moved to
+# repro.net.transport when the Transport interface was carved out.
+_LocalBuf = LocalBuf
+_TaskWait = TaskWait
 
 #: Fallback reader's yield interval while replies are owed and their
 #: about-to-lead callers should read them inline (see _fallback_loop).
 FALLBACK_GRACE = 0.002
+
+#: How long a task join waits for the pushed completion note before falling
+#: back to an explicit ``task_join`` RPC (covers any lost-push edge case
+#: — e.g. a chain-dispensed node that had no client connection to push
+#: on — with one bounded round trip instead of a hang).
+JOIN_PUSH_GRACE = 1.0
 
 
 class Future:
@@ -133,64 +139,6 @@ class Future:
         return self._value
 
 
-class _LocalBuf:
-    """Client-side copy of a home-node read buffer (piggyback protocol).
-
-    Holds the unpickled ``__tx_snapshot__`` state a ``task_done`` note (or a
-    ``buffer_snapshot`` reply) shipped because it was small; buffered reads
-    then execute locally with zero round trips. Duck-types the ``call``
-    surface of :class:`~repro.core.buffers.CopyBuffer`.
-    """
-
-    __slots__ = ("state",)
-
-    def __init__(self, state: Any):
-        self.state = state
-
-    def call(self, method: str, args: tuple, kwargs: dict) -> Any:
-        return getattr(self.state, method)(*args, **kwargs)
-
-    def __repr__(self) -> str:  # pragma: no cover
-        return f"_LocalBuf({type(self.state).__name__})"
-
-
-def load_buf(payload: Optional[bytes]) -> Optional[_LocalBuf]:
-    """Unpickle a piggybacked buffer state; ``None`` stays ``None``."""
-    if payload is None:
-        return None
-    try:
-        return _LocalBuf(pickle.loads(payload))
-    except Exception:  # noqa: BLE001 - class not importable here: read remotely
-        return None
-
-
-class _TaskWait:
-    """Local completion state of one fire-and-forget home-node task.
-
-    Resolution goes through :meth:`resolve`, which fires the optional
-    ``on_done`` hook after setting the event — the same completion shape
-    as :class:`Future`. Joins deliberately wait on the plain event (a
-    join is gated on *other* transactions' progress; taking read
-    leadership for such an open-ended wait measured 3-4x worse under
-    contention): the note is delivered by whichever leader or fallback
-    reads it.
-    """
-
-    __slots__ = ("done", "error", "buf", "on_done")
-
-    def __init__(self):
-        self.done = threading.Event()
-        self.error: Optional[BaseException] = None
-        self.buf: Optional[_LocalBuf] = None
-        self.on_done = None
-
-    def resolve(self) -> None:
-        self.done.set()
-        cb = self.on_done
-        if cb is not None:
-            cb()
-
-
 class _Mux:
     """One established multiplexed connection.
 
@@ -220,8 +168,8 @@ class _Mux:
         self.owed = 0
 
 
-class NodeClient:
-    """Multiplexed RPC endpoint for one node server.
+class NodeClient(Transport):
+    """Multiplexed RPC endpoint for one node server (the TCP transport).
 
     A small fixed set of mux connections (``conns``) is shared by all
     caller threads with *per-thread affinity*: each thread is pinned to one
@@ -236,29 +184,18 @@ class NodeClient:
 
     def __init__(self, address: str, *, connect_timeout: float = 5.0,
                  heartbeat_interval: float = 0.5, conns: int = 4):
-        self.address = address
+        super().__init__(address)
         self.host, self.port = parse_address(address)
         self.connect_timeout = connect_timeout
         self.heartbeat_interval = heartbeat_interval
-        self.alive = True
         self._muxes: List[Optional[_Mux]] = [None] * max(1, conns)
         self._tl = threading.local()            # per-thread conn affinity
         self._rr = itertools.count()            # round-robin assignment
         self._conn_lock = threading.Lock()      # connection establishment
-        self._lock = threading.Lock()           # client state
         self._req_ids = itertools.count(1)
         self._pending: Dict[int, Future] = {}
-        self._tasks: Dict[Tuple[str, str], _TaskWait] = {}
-        self._deferred: Dict[str, List[BaseException]] = {}
-        self._active_txns: Set[str] = set()
-        self._ended: Set[str] = set()           # server already dropped these
         self._hb_thread: Optional[threading.Thread] = None
         self._closed = threading.Event()
-        # -- transport statistics (per-txn wire metrics in the bench) --------
-        self.n_rpc = 0          # round-trip requests issued
-        self.n_oneway = 0       # one-way messages sent
-        self.n_inline = 0       # replies read by their own awaiting caller
-        self.n_handoff = 0      # replies delivered across a thread handoff
 
     # -- connection ----------------------------------------------------------
     def _mux_for_thread(self) -> _Mux:
@@ -284,7 +221,7 @@ class NodeClient:
                 # (the server maps the connection to our sessions — the drop
                 # of our last connection is the §3.4 instant crash-stop
                 # signal) and await the ack on the still-private socket.
-                send_msg(sock, (0, "mux_hello", {"client_id": CLIENT_ID}))
+                send_msg(sock, (0, "mux_hello", {"client_id": self.client_id}))
                 req_id, status, value, _notes = recv_msg(sock)
                 if req_id != 0 or status != OK:
                     raise ConnectionClosed("mux_hello rejected")
@@ -508,48 +445,6 @@ class NodeClient:
             if not self._closed.is_set():
                 self._mark_dead(f"connection lost: {e}")
 
-    def _handle_note(self, note: Dict[str, Any]) -> None:
-        kind = note.get("kind")
-        if kind == "task_done":
-            key = (note["txn"], note["name"])
-            with self._lock:
-                if note["txn"] not in self._active_txns:
-                    log.debug("dropping task note for finished txn %r", key)
-                    return
-                wait = self._tasks.setdefault(key, _TaskWait())
-            wait.error = note.get("error")
-            wait.buf = load_buf(note.get("buf"))
-            wait.resolve()
-        elif kind == "oneway_err":
-            txn = note.get("txn")
-            err = note.get("error") or RuntimeError("one-way op failed")
-            log.debug("deferred one-way error for txn %r op %r: %r",
-                      txn, note.get("op"), err)
-            if txn is None:
-                return
-            with self._lock:
-                active = txn in self._active_txns
-                if active:
-                    self._deferred.setdefault(txn, []).append(err)
-            if not active:
-                # Arrived after the transaction finished locally (e.g. a
-                # pipelined step-5 terminate racing a §3.4 expiry): there
-                # is no sync point left to raise it at — the epoch
-                # machinery keeps the system consistent, but make the
-                # partial termination visible.
-                log.warning("one-way %r failed for finished txn %r: %r",
-                            note.get("op"), txn, err)
-                return
-            # A failed kickoff never produces a completion note: fail the
-            # task wait too, or its joiner would hang forever.
-            if note.get("op") in ("ro_buffer", "lw_apply") and note.get("name"):
-                wait = self._task_wait(txn, note["name"])
-                wait.error = err
-                wait.resolve()
-        else:  # pragma: no cover - forward compatibility
-            log.warning("ignoring unknown note kind %r from %s",
-                        kind, self.address)
-
     # -- RPC -----------------------------------------------------------------
     def call_async(self, op: str, **kwargs: Any) -> Future:
         """Issue ``op`` without waiting; returns a :class:`Future` whose
@@ -603,34 +498,25 @@ class NodeClient:
         self.n_oneway += 1   # stats-only: not worth a lock on the hot path
         self._send((None, op, kwargs))
 
-    # -- deferred errors and task notes --------------------------------------
-    def raise_deferred(self, txn_uid: str) -> None:
-        """Sync point: raise the first deferred one-way error of ``txn_uid``
-        recorded since the last sync point, if any."""
-        with self._lock:
-            errors = self._deferred.pop(txn_uid, None)
-        if errors:
-            raise errors[0]
+    # -- task joins -----------------------------------------------------------
+    def join_task(self, txn_uid: str, name: str) -> TaskWait:
+        """Join a home-node task: wait briefly for the pushed completion
+        note, then fall back to one explicit ``task_join`` RPC.
 
-    def _task_wait(self, txn_uid: str, name: str) -> _TaskWait:
-        with self._lock:
-            return self._tasks.setdefault((txn_uid, name), _TaskWait())
-
-    def task_wait(self, txn_uid: str, name: str) -> _TaskWait:
-        """The local completion handle of a fire-and-forget home-node task
-        (created on kickoff, resolved by the pushed ``task_done`` note, a
-        carrier reply via :meth:`resolve_task`, or :meth:`_mark_dead`)."""
-        return self._task_wait(txn_uid, name)
-
-    def resolve_task(self, txn_uid: str, name: str,
-                     error: Optional[BaseException],
-                     buf: Optional[bytes]) -> None:
-        """Resolve a task wait from a result that rode back on a carrier
-        reply (e.g. an inline-completed §2.7 task on the dispense reply)."""
+        Deliberately a plain event wait, NOT a leadership-taking drive: a
+        join is gated on OTHER transactions' progress and can park for a
+        long time — holding the connection's read leadership that long
+        would funnel every concurrent caller's reply through this thread
+        (measured 3-4x worse under contention). The note is delivered by
+        whichever leader or fallback reads it."""
         wait = self._task_wait(txn_uid, name)
-        wait.error = error
-        wait.buf = load_buf(buf)
-        wait.resolve()
+        if not wait.done.wait(JOIN_PUSH_GRACE):
+            # No note yet: ask explicitly (blocks server-side until the
+            # task completes; re-raises its transactional error).
+            res = self.call("task_join", txn=txn_uid, name=name)
+            if not wait.done.is_set():
+                self.resolve_task(txn_uid, name, None, res.get("buf"))
+        return wait
 
     # -- failure (§3.4 crash-stop) -------------------------------------------
     def _mark_dead(self, reason: str) -> None:
@@ -650,10 +536,7 @@ class NodeClient:
         # the death immediately (leaders and followers wake via on_done).
         for fut in pending:
             fut.set_error(err)
-        for w in waits:
-            if not w.done.is_set():
-                w.error = err
-                w.resolve()
+        self._fail_task_waits(waits, err)
         for mux in muxes:
             try:
                 mux.sock.close()
@@ -676,31 +559,6 @@ class NodeClient:
                     self._hb_thread = t
                     t.start()
 
-    def mark_session_ended(self, txn_uid: str) -> None:
-        """The server already dropped this session (``finish_batch`` with
-        ``end``): :meth:`finish_txn` skips its trailing ``end_txn``."""
-        with self._lock:
-            self._ended.add(txn_uid)
-
-    def finish_txn(self, txn_uid: str) -> None:
-        """The transaction terminated everywhere: drop the server session
-        and every local trace of the transaction."""
-        with self._lock:
-            if txn_uid not in self._active_txns:
-                return
-            self._active_txns.discard(txn_uid)
-            self._deferred.pop(txn_uid, None)
-            ended = txn_uid in self._ended
-            self._ended.discard(txn_uid)
-            for key in [k for k in self._tasks if k[0] == txn_uid]:
-                del self._tasks[key]
-        if ended:
-            return
-        try:
-            self.notify("end_txn", txn=txn_uid)
-        except RemoteObjectFailure:
-            pass  # server is gone; nothing left to clean up there
-
     def _heartbeat_loop(self) -> None:
         while not self._closed.wait(self.heartbeat_interval):
             with self._lock:
@@ -711,7 +569,7 @@ class NodeClient:
             if not txns:
                 continue
             try:
-                self.notify("heartbeat", client_id=CLIENT_ID, txns=txns)
+                self.notify("heartbeat", client_id=self.client_id, txns=txns)
             except RemoteObjectFailure:
                 return             # the mux died; crash-stop already handled
 
@@ -727,10 +585,7 @@ class NodeClient:
         err = RemoteObjectFailure(f"client for {self.address} closed")
         for fut in pending:
             fut.set_error(err)
-        for w in waits:
-            if not w.done.is_set():
-                w.error = err
-                w.resolve()
+        self._fail_task_waits(waits, err)
         for mux in muxes:
             try:
                 mux.sock.close()

@@ -54,6 +54,35 @@ class GuardedAccount(Account):
         return GuardedAccount(self.bal)
 
 
+class LedgerAccount(Account):
+    """Account that also keeps an append-only mark ledger.
+
+    ``mark`` is a pure WRITE (no read of state): a write-only transaction
+    on it takes the §2.8.4 path — client-side log buffering, one-way
+    ``lw_apply`` kickoff, asynchronous apply+release on the home node.
+    The seed-sweep fuzzer uses unique per-transaction tags to check the
+    exactly-once invariant: a committed mark appears exactly once, an
+    aborted or crashed one never (no lost writes, no double applies, no
+    dead transaction's log applied)."""
+
+    def __init__(self, balance: int = 0):
+        super().__init__(balance)
+        self.marks = []
+
+    @access(Mode.WRITE)
+    def mark(self, tag) -> None:
+        self.marks.append(tag)
+
+    @access(Mode.READ)
+    def read_marks(self):
+        return list(self.marks)
+
+    def __tx_snapshot__(self) -> "LedgerAccount":
+        c = LedgerAccount(self.bal)
+        c.marks = list(self.marks)
+        return c
+
+
 class SlowAccount(Account):
     """Account whose operations take ``op_time`` seconds at the home node —
     makes CF delegation visible in timings."""

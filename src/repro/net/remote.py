@@ -47,7 +47,8 @@ from typing import Any, Dict, List, Optional
 from repro.core.api import RemoteObjectFailure, Suprema
 from repro.core.transaction import Completed, ObjectAccess
 
-from .client import CLIENT_ID, Future, NodeClient, load_buf
+from .client import Future, NodeClient
+from .transport import CLIENT_ID, Transport, load_buf
 
 
 class _RemoteBufMarker:
@@ -62,22 +63,18 @@ class _RemoteBufMarker:
 _REMOTE_BUF = _RemoteBufMarker()
 
 
-#: How long a join waits for the pushed completion note before falling
-#: back to an explicit ``task_join`` RPC (covers any lost-push edge case
-#: — e.g. a chain-dispensed node that had no client connection to push
-#: on — with one bounded round trip instead of a hang).
-_JOIN_PUSH_GRACE = 1.0
-
-
 class RemoteTask:
     """Join handle for an asynchronous task running on the home node.
 
     The kickoff was pipelined (one-way, or riding the dispense RPC); the
     home node pushes a ``task_done`` note at completion — or delivered it
     on the dispense reply already — so ``join`` normally blocks on a
-    *local* event: zero round trips. The client's crash-stop handling
-    fails the wait if the node dies, so no joiner can hang on a vanished
-    server; a missed push degrades to one ``task_join`` RPC.
+    *local* wait: zero round trips. How the wait blocks is the transport's
+    business (:meth:`~repro.net.transport.Transport.join_task`): the TCP
+    client parks on a real event with a ``task_join`` RPC fallback, the
+    sim transport yields to the virtual-time scheduler. Either way the
+    transport's crash-stop handling fails the wait if the node dies, so
+    no joiner can hang on a vanished server.
     """
 
     __slots__ = ("acc",)
@@ -89,21 +86,7 @@ class RemoteTask:
         acc = self.acc
         client = acc.client
         client.raise_deferred(acc.txn_uid)   # sync point: kickoff errors
-        # Deliberately a plain event wait, NOT a leadership-taking drive:
-        # a join is gated on OTHER transactions' progress and can park for
-        # a long time — holding the connection's read leadership that long
-        # would funnel every concurrent caller's reply through this
-        # thread (measured 3-4x worse under contention). The note is
-        # delivered by whichever leader or fallback reads it.
-        wait = client.task_wait(acc.txn_uid, acc.shared.name)
-        if not wait.done.wait(_JOIN_PUSH_GRACE):
-            # No note yet: ask explicitly (blocks server-side until the
-            # task completes; re-raises its transactional error).
-            res = client.call("task_join", txn=acc.txn_uid,
-                              name=acc.shared.name)
-            if not wait.done.is_set():
-                client.resolve_task(acc.txn_uid, acc.shared.name, None,
-                                    res.get("buf"))
+        wait = client.join_task(acc.txn_uid, acc.shared.name)
         if wait.error is not None:
             raise wait.error
         acc._mark_task_complete(wait.buf)
@@ -165,11 +148,20 @@ class RemoteHeader:
 
 
 class RemoteNode:
-    """Client-side handle for one node server process."""
+    """Client-side handle for one node server process.
 
-    def __init__(self, address: str, **client_kw: Any):
+    The wire behind it is any :class:`~repro.net.transport.Transport`:
+    by default a TCP :class:`NodeClient` is built for ``address``, while a
+    pre-built transport (e.g. a simnet :class:`~repro.net.simnet.
+    SimTransport`) can be injected via ``client=`` — everything above this
+    point (proxies, access records, ``Transaction``) is transport-blind.
+    """
+
+    def __init__(self, address: str, client: Optional[Transport] = None,
+                 **client_kw: Any):
         self.address = address
-        self.client = NodeClient(address, **client_kw)
+        self.client = (client if client is not None
+                       else NodeClient(address, **client_kw))
         self.name = address          # refined to the server's node name
         self.alive = True
         self.network_delay = 0.0     # the wire is honest now
@@ -254,12 +246,12 @@ class RemoteSharedObject:
                                 args=args, kwargs=kwargs or {})
 
     def touch(self, txn: object) -> None:
-        uid = _txn_uid(txn)
+        uid = _txn_uid(txn, self.client.client_id)
         if uid is not None:
             self.client.notify("touch", txn=uid, name=self.name)
 
     def clear_holder(self, txn: object) -> None:
-        uid = _txn_uid(txn)
+        uid = _txn_uid(txn, self.client.client_id)
         if uid is not None:
             self.client.notify("clear_holder", txn=uid, name=self.name)
 
@@ -267,14 +259,17 @@ class RemoteSharedObject:
         return f"RemoteSharedObject({self.name}@{self.node.address})"
 
 
-def _txn_uid(txn: object) -> Optional[str]:
+def _txn_uid(txn: object, client_id: str = CLIENT_ID) -> Optional[str]:
     tid = getattr(txn, "id", None)
     if tid is None:
         return None
     inc = getattr(txn, "incarnation", 0)
     # The incarnation makes retries distinct server-side: a late pipelined
     # note or end_txn of a rolled-back incarnation can't touch its successor.
-    return f"{CLIENT_ID}#{tid}" if not inc else f"{CLIENT_ID}#{tid}r{inc}"
+    # ``client_id`` is the transport's process identity — the real process
+    # id on TCP, a deterministic simulated-process id under simnet (which is
+    # also what lets a fault injection crash ONE simulated client).
+    return f"{client_id}#{tid}" if not inc else f"{client_id}#{tid}r{inc}"
 
 
 class _WireCompletion:
@@ -321,15 +316,18 @@ class RemoteObjectAccess(ObjectAccess):
     # -- identity -----------------------------------------------------------
     @property
     def txn_uid(self) -> str:
-        return _txn_uid(self.txn)
+        return _txn_uid(self.txn, self.shared.client.client_id)
 
     @property
-    def client(self) -> NodeClient:
+    def client(self) -> Transport:
         return self.shared.client
 
     @property
     def dispense_domain(self) -> tuple:
-        return ("tcp", self.shared.node.address)
+        # (scheme, address) — a node-level version-lock domain key that
+        # sorts identically on every client (global 2PL order, §2.10.2),
+        # across transports.
+        return (self.shared.client.scheme, self.shared.node.address)
 
     # -- start (§2.10.2): batched per-node version dispensing ----------------
     def prepare_start(self) -> None:
@@ -369,7 +367,7 @@ class RemoteObjectAccess(ObjectAccess):
                   "ro_names": [a.shared.name for a in ro_accs]}
                  for accs, ro_accs in metas[1:]]
         res = self.client.call(
-            "dispense_batch", txn=uid, client_id=CLIENT_ID,
+            "dispense_batch", txn=uid, client_id=self.client.client_id,
             names=[a.shared.name for a in head_accs],
             ro_names=[a.shared.name for a in head_ro], kind=kind,
             chain=chain)

@@ -200,6 +200,25 @@ class _ServerAccess(ObjectAccess):
     def session(self) -> "_Session":
         return self.txn
 
+    def open_access(self, kind: str, timeout: Optional[float]) -> bool:
+        """§2.8.2 open with a §3.4 expiry re-check after the gate wait.
+
+        A crashed client's in-flight open parks on the access gate; the
+        expiry's own chain-order ``skip_version`` is then exactly what
+        opens that gate — without this check the woken handler would
+        apply a dead transaction's operation to live state *after* the
+        self-rollback ran, leaving it applied-unrestored (found by the
+        simnet seed sweep). Checked under the header lock, which the
+        expiry also holds while deciding what to restore."""
+        blocked = super().open_access(kind, timeout)
+        with self.shared.header.lock:
+            if self.session.expired or self.aborted:
+                raise InstanceInvalidated(
+                    f"transaction {self.session.txn_uid!r} was rolled back "
+                    f"while waiting to open {self.shared.name!r} "
+                    f"(§3.4 crash-stop)")
+        return blocked
+
     def _ro_buffer_code(self) -> None:
         if self.session.expired:
             return        # §3.4: the expiry advanced our version already
@@ -310,13 +329,14 @@ class _Session:
 
     client_node = None      # ObjectAccess.raw_call's from_node
 
-    def __init__(self, txn_uid: str, client_id: str):
+    def __init__(self, txn_uid: str, client_id: str,
+                 now: Optional[float] = None):
         self.txn_uid = txn_uid
         self.client_id = client_id
         self._accesses: Dict[SharedObject, _ServerAccess] = {}
         self.tasks: Dict[str, Task] = {}     # object name -> release task
         self.held_gates: List[threading.Lock] = []
-        self.last_contact = time.monotonic()
+        self.last_contact = time.monotonic() if now is None else now
         self.expired = False      # set by §3.4 expiry; parked tasks no-op
         self.lock = threading.Lock()
 
@@ -328,331 +348,109 @@ class _Session:
         return f"_Session({self.txn_uid})"
 
 
-class NodeServer:
-    """One registry node served over TCP."""
+class NodeCore:
+    """Transport-independent node engine: sessions, op dispatch, §3.4.
 
-    #: Ops that may block (version gates, dispensing 2PL, task joins) or
-    #: burn service time (object methods, log application): each gets its
-    #: own thread so a parked RPC never stalls the multiplexed connection.
-    #: Unknown ops are threaded too — blocking is the conservative guess.
-    _INLINE_OPS = frozenset({
-        "ping", "list_bindings", "mode_of", "header_state", "header_release",
-        "header_terminate", "validate", "release", "terminate",
-        "finish_batch", "rollback_batch", "end_txn", "release_version_locks",
-        "ensure_checkpoint", "buffer_snapshot", "snap_release", "stats",
-        "touch", "clear_holder", "heartbeat", "abandon", "ro_buffer",
-        "lw_apply",
-    })
+    Everything a home node *is* — the registry node with its
+    ``SharedObject``s and executor, the per-transaction sessions holding
+    :class:`_ServerAccess` records, the version-lock dispensing gates, the
+    full ``_op_*`` protocol surface, and the §3.4 crash-stop expiry — lives
+    here, with NO knowledge of sockets, frames, threads-per-connection, or
+    real time. Concrete transports subclass it:
+
+    * :class:`NodeServer` adds the TCP machinery (listener, multiplexed
+      connections, worker pool, pusher, real-time reaper);
+    * :class:`repro.net.simnet.SimNode` delivers messages directly under a
+      seeded virtual-time scheduler.
+
+    The transport boundary is a handful of hooks:
+
+    * ``_clock()``            — time source for the failure detector
+      (real monotonic vs. the simulation's virtual clock);
+    * ``_gate_acquire(gate)`` — how a dispense gate blocks (a real
+      ``Lock.acquire`` vs. a virtual-time backoff loop);
+    * ``_queue_note(conn, note)`` — how a server push reaches the client;
+    * ``_push_target(conn, client_id)`` — which "connection" a task
+      completion note should ride;
+    * ``_peer(address)``      — the server-to-server transport for
+      chained dispensing (§2.10.2);
+    * ``_oob(payload)``       — wire-v3 out-of-band marking (identity off
+      the TCP wire);
+    * ``INLINE_KICKOFF_TASKS`` — whether §2.7/§2.8.4 kickoff tasks whose
+      gate is already open run on the delivering thread (the simulation
+      needs this for determinism; the TCP reader must not stall).
+    """
 
     #: Ops whose handler needs the originating connection (to route task
     #: completion pushes back the way the kickoff came).
     _CONN_OPS = frozenset({"ro_buffer", "lw_apply", "dispense_batch"})
 
-    def __init__(self, node_name: str = "node0", host: str = "127.0.0.1",
-                 port: int = 0, *, registry: Optional[Registry] = None,
+    #: §2.7/§2.8.4 kickoff tasks with an open gate: run on the delivering
+    #: thread (True) or strictly asynchronously on the executor (False)?
+    INLINE_KICKOFF_TASKS = False
+
+    def __init__(self, node_name: str = "node0", *,
+                 registry: Optional[Registry] = None,
                  monitor_timeout: float = 2.0, monitor_poll: float = 0.05,
-                 executor_workers: int = 1):
+                 executor_workers: int = 1,
+                 clock: Callable[[], float] = time.monotonic):
         self.registry = registry if registry is not None else Registry()
         self.node_name = node_name
+        self._clock = clock
         try:
             self.node = self.registry.node(node_name)
         except KeyError:
             self.node = self.registry.add_node(
                 node_name, executor_workers=executor_workers)
         self.monitor = TransactionMonitor(
-            self.registry, timeout=monitor_timeout, poll_interval=monitor_poll)
-        self._pool = _WorkerPool(name=f"op-{node_name}")
-        self._peers: Dict[str, Any] = {}                # addr -> NodeClient
-        self._note_q: "queue.SimpleQueue" = queue.SimpleQueue()
-        threading.Thread(target=self._pusher_loop,
-                         name=f"note-pusher-{node_name}",
-                         daemon=True).start()
+            self.registry, timeout=monitor_timeout, poll_interval=monitor_poll,
+            clock=clock)
+        self._peers: Dict[str, Any] = {}          # addr -> peer transport
         self._sessions: Dict[str, _Session] = {}
-        self._costs: Dict[str, float] = {}      # per-object service-time EWMA
-        self._gates: Dict[str, threading.Lock] = {}     # per-object dispense gate
-        self._mux: Dict[str, List[_Conn]] = {}          # client_id -> conns
-        self._conns: set = set()                        # live connections
+        self._gates: Dict[str, threading.Lock] = {}   # per-object dispense gate
         self._lock = threading.Lock()
-        self._stop = threading.Event()
-        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._listener.bind((host, port))
-        self.host, self.port = self._listener.getsockname()[:2]
-        self._accept_thread: Optional[threading.Thread] = None
 
-    # ------------------------------------------------------------------ #
-    # lifecycle                                                           #
-    # ------------------------------------------------------------------ #
-    @property
-    def address(self) -> str:
-        return f"{self.host}:{self.port}"
+    # -- transport hooks -----------------------------------------------------
+    @staticmethod
+    def _oob(payload: bytes) -> Any:
+        """Mark a bulk payload for the transport (overridden per wire)."""
+        return payload
 
-    def start(self) -> "NodeServer":
-        self._listener.listen(128)
-        self.monitor.start()
-        self._accept_thread = threading.Thread(
-            target=self._accept_loop, name=f"accept-{self.port}", daemon=True)
-        self._accept_thread.start()
-        threading.Thread(target=self._reaper_loop, name="session-reaper",
-                         daemon=True).start()
-        return self
+    def _gate_acquire(self, gate: threading.Lock, nb: bool = False) -> None:
+        """Acquire a version-lock dispensing gate. ``nb`` gives up with
+        :class:`_WouldBlock` instead of blocking (reader fast path)."""
+        if nb:
+            if not gate.acquire(blocking=False):
+                raise _WouldBlock
+        else:
+            gate.acquire()
 
-    def stop(self) -> None:
-        self._stop.set()
-        try:
-            self._listener.close()
-        except OSError:
-            pass
+    def _queue_note(self, conn: Any, note: dict) -> None:
+        """Deliver one server push (``task_done`` / ``oneway_err``) on
+        ``conn``."""
+        raise NotImplementedError
+
+    def _push_target(self, conn: Any, client_id: str) -> Any:
+        """The connection a task-completion push for ``client_id`` should
+        ride, given the connection the kickoff arrived on (``conn`` may
+        belong to a chain-forwarding peer server instead)."""
+        return conn
+
+    def reap_stale(self, now: float) -> bool:
+        """Expire every session whose client stopped heartbeating before
+        ``now - monitor.timeout`` (§3.4) — the one staleness scan shared
+        by the TCP real-time reaper thread and the simulation's
+        virtual-clock reaper events. Returns True iff sessions remain
+        (the caller decides whether to keep polling)."""
         with self._lock:
-            conns = list(self._conns)
-        for c in conns:   # crash-stop for connected peers (embedded servers)
-            try:
-                c.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-            try:
-                c.close()
-            except OSError:
-                pass
-        self.monitor.stop()
-        self._pool.stop()
-        self._note_q.put(None)
-        with self._lock:
-            peers = list(self._peers.values())
-            self._peers.clear()
-        for p in peers:
-            p.close()
-        self.registry.shutdown()
-
-    def serve_forever(self) -> None:
-        self.start()
-        try:
-            while not self._stop.wait(0.2):
-                pass
-        except KeyboardInterrupt:  # pragma: no cover
-            pass
-        finally:
-            self.stop()
-
-    # ------------------------------------------------------------------ #
-    # connection handling                                                 #
-    # ------------------------------------------------------------------ #
-    def _accept_loop(self) -> None:
-        while not self._stop.is_set():
-            try:
-                sock, _addr = self._listener.accept()
-            except OSError:
-                return
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            threading.Thread(target=self._serve_conn, args=(sock,),
-                             name="conn", daemon=True).start()
-
-    def _serve_conn(self, sock: socket.socket) -> None:
-        conn = _Conn(sock)
-        reader = FrameReader(sock)
-        # This thread multiplexes many conversations: tasks woken by the
-        # counter advances of its inline ops run on the executor, never
-        # here (foreign service time must not stall the link).
-        defer_wake_inline()
-        with self._lock:
-            self._conns.add(sock)
-        try:
-            while not self._stop.is_set():
-                try:
-                    req_id, op, kw = reader.recv_msg()
-                except (ConnectionClosed, WireError, OSError):
-                    break
-                if op == "mux_hello":
-                    # The mux connection doubles as the §3.4 presence
-                    # signal: its drop means this client process died.
-                    conn.client_id = kw["client_id"]
-                    with self._lock:
-                        self._mux.setdefault(conn.client_id, []).append(conn)
-                    try:
-                        self._send_reply(conn, req_id, OK, None)
-                    except (ConnectionClosed, OSError):
-                        break
-                    continue
-                if op in self._CONN_OPS:
-                    kw = dict(kw, _conn=conn)   # push notes return this way
-                if req_id is None:
-                    # One-way: execute inline (FIFO vs later requests on
-                    # this connection); failures become deferred-error
-                    # notes pushed back to the sender.
-                    self._handle_oneway(conn, op, kw)
-                elif op in self._INLINE_OPS:
-                    if not self._handle_request(conn, req_id, op, kw):
-                        break
-                elif self._try_fast(conn, req_id, op, kw):
-                    pass   # handled inline (uncontended fast path)
-                else:
-                    self._pool.submit(
-                        lambda c=conn, r=req_id, o=op, k=kw:
-                        self._handle_timed(c, r, o, k))
-        finally:
+            stale = [(uid, s) for uid, s in self._sessions.items()
+                     if now - s.last_contact > self.monitor.timeout]
+        for uid, session in stale:
+            self._expire_session(session)
             with self._lock:
-                self._conns.discard(sock)
-                last_of_client = False
-                if conn.client_id is not None:
-                    conns = self._mux.get(conn.client_id, [])
-                    if conn in conns:
-                        conns.remove(conn)
-                    if not conns:
-                        self._mux.pop(conn.client_id, None)
-                        last_of_client = True
-            try:
-                sock.close()
-            except OSError:
-                pass
-            if last_of_client:
-                self._client_vanished(conn.client_id)
-
-    def _handle_request(self, conn: _Conn, req_id: int, op: str,
-                        kw: Dict[str, Any]) -> bool:
-        try:
-            value = self._dispatch(op, kw)
-            status = OK
-        except BaseException as e:  # noqa: BLE001 - serialize to peer
-            status, value = ERR, encode_error(e)
-        try:
-            self._send_reply(conn, req_id, status, value)
-        except (ConnectionClosed, OSError):
-            # The reader (or another worker) will observe the broken socket;
-            # make sure it does even if it is parked in recv.
-            try:
-                conn.sock.close()
-            except OSError:
-                pass
-            return False
-        return True
-
-    #: EWMA of per-call service time above which an object's method calls
-    #: are dispatched to the worker pool instead of inline on the reader:
-    #: genuinely compute-bearing CF methods (the paper models ~3 ms) must
-    #: not stall the multiplexed link, but the two thread handoffs of a
-    #: pool dispatch dominate the cost of a *quick* method by an order of
-    #: magnitude — and for a sub-millisecond method the stall is no worse
-    #: than the handoff it replaces. Wall-clock EWMAs on a loaded host
-    #: include scheduler noise, so the threshold is deliberately generous.
-    INLINE_SLOW_S = 0.002
-
-    def _note_cost(self, name: Optional[str], dt: float) -> None:
-        if name is not None:
-            old = self._costs.get(name, dt)
-            self._costs[name] = 0.7 * old + 0.3 * dt
-
-    def _fast_call(self, conn: _Conn, req_id: int, op: str,
-                   kw: Dict[str, Any], weight: int = 1) -> bool:
-        """Inline a non-blocking method-bearing op on the reader when the
-        object's observed service time says it is quick (optimistically
-        inline at first sight; a slow object is learned once and pooled
-        thereafter). ``weight`` scales the estimate for batches."""
-        name = kw.get("name")
-        if self._costs.get(name, 0.0) * weight > self.INLINE_SLOW_S:
-            return False
-        t0 = time.perf_counter()
-        self._handle_request(conn, req_id, op, kw)
-        self._note_cost(name, (time.perf_counter() - t0) / max(weight, 1))
-        return True
-
-    def _open_ready(self, txn: str, name: str, kind: str) -> bool:
-        """True iff the §2.8.2 open would not block: the access (or
-        termination) gate is already open for this session's pv.
-        (Monotonic counters: once true, stays true.) Errors — no session,
-        unknown object — return True: raising is quick, do it inline."""
-        try:
-            acc = self._acc(txn, name)
-        except BaseException:  # noqa: BLE001 - error replies are cheap
-            return True
-        h = acc.shared.header
-        with h.lock:
-            done = h.ltv if kind == "termination" else h.lv
-            return done >= acc.pv - 1
-
-    #: Pool-dispatched ops whose duration still feeds the service-time
-    #: EWMA, so a transiently-inflated estimate (scheduler noise) decays
-    #: back under the inline threshold instead of sticking forever.
-    #: ``open_call`` is deliberately absent: its pooled duration includes
-    #: the gate *wait*, which is contention, not service time.
-    _COST_OPS = frozenset({"txn_call", "buf_call", "raw_call",
-                           "txn_call_batch"})
-
-    def _handle_timed(self, conn: _Conn, req_id: int, op: str,
-                      kw: Dict[str, Any]) -> bool:
-        if op not in self._COST_OPS:
-            return self._handle_request(conn, req_id, op, kw)
-        weight = 1
-        if op == "txn_call_batch":
-            weight = len(kw.get("calls") or ()) or 1
-        t0 = time.perf_counter()
-        handled = self._handle_request(conn, req_id, op, kw)
-        self._note_cost(kw.get("name"), (time.perf_counter() - t0) / weight)
-        return handled
-
-    def _try_fast(self, conn: _Conn, req_id: int, op: str,
-                  kw: Dict[str, Any]) -> bool:
-        """Uncontended fast paths for normally-threaded ops: when the op
-        provably won't block (gates free, commit conditions already open,
-        no logs to burn service time on), run it inline on the reader and
-        skip two thread handoffs. Contention falls back to the pool.
-
-        Inline work here may include bounded state *snapshots* (§2.7
-        buffers, commit checkpoints) — the same class of work the
-        ``buffer_snapshot``/``snap_release`` inline ops already do on the
-        reader — and, new in v3, *method calls on objects whose measured
-        service time is quick* (the EWMA guard of :meth:`_fast_call`):
-        the common zero-to-cheap-compute call answers on the reader with
-        zero server-side handoffs, while compute-bearing objects keep the
-        pool. Gate-blocking opens fall back unless the gate is provably
-        open (:meth:`_open_ready`)."""
-        if op in ("txn_call", "buf_call", "raw_call"):
-            return self._fast_call(conn, req_id, op, kw)
-        if op == "txn_call_batch":
-            return self._fast_call(conn, req_id, op, kw,
-                                   weight=len(kw.get("calls") or ()) or 1)
-        if op == "open_call" and not kw.get("entries"):
-            if self._open_ready(kw["txn"], kw["name"], kw.get("kind",
-                                                             "access")):
-                return self._fast_call(conn, req_id, op, kw,
-                                       weight=1 + len(kw.get("tail") or ()))
-            return False
-        if op == "dispense_batch" and not kw.get("chain"):
-            try:
-                value, status = self._dispatch(op, dict(kw, _nb=True)), OK
-            except _WouldBlock:
-                return False
-            except BaseException as e:  # noqa: BLE001 - serialize to peer
-                value, status = encode_error(e), ERR
-            try:
-                self._send_reply(conn, req_id, status, value)
-            except (ConnectionClosed, OSError):
-                try:
-                    conn.sock.close()
-                except OSError:
-                    pass
-            return True
-        if op in ("commit_wave1", "commit_solo"):
-            if self._wave1_ready(kw.get("txn"), kw.get("items", ())):
-                self._handle_request(conn, req_id, op, kw)
-                return True
-        return False
-
-    def _wave1_ready(self, txn: str, items: List[tuple]) -> bool:
-        """True iff commit steps 2-4 would run without blocking or service
-        time: every commit condition already holds and no stray write log
-        needs applying. (Monotonic counters: once true, stays true.)"""
-        try:
-            for name, entries in items:
-                if entries:
-                    return False
-                acc = self._acc(txn, name)
-                h = acc.shared.header
-                with h.lock:
-                    if h.ltv < acc.pv - 1:
-                        return False
-            return True
-        except BaseException:  # noqa: BLE001 - let the pool path raise it
-            return False
+                self._sessions.pop(uid, None)
+        with self._lock:
+            return bool(self._sessions)
 
     def _handle_oneway(self, conn: _Conn, op: str, kw: Dict[str, Any]) -> None:
         try:
@@ -661,72 +459,6 @@ class NodeServer:
             self._queue_note(conn, {
                 "kind": "oneway_err", "op": op, "txn": kw.get("txn"),
                 "name": kw.get("name"), "error": encode_error(e)})
-
-    # -- sending (replies, pushes, piggybacked notes) ------------------------
-    def _send_reply(self, conn: _Conn, req_id: int, status: str,
-                    value: Any) -> None:
-        with conn.send_lock:
-            if conn.pending_out:        # a spilled push frame goes first
-                conn.sock.sendall(conn.pending_out)
-                conn.pending_out = b""
-            notes, conn.notes = conn.notes, []
-            try:
-                send_msg(conn.sock, (req_id, status, value, notes))
-            except (ConnectionClosed, OSError):
-                raise
-            except Exception as e:  # noqa: BLE001 - unpicklable OK value
-                # Keep the connection: report the serialization failure
-                # instead of dying (the client would mark the whole server
-                # crash-stop dead).
-                send_msg(conn.sock, (req_id, ERR, encode_error(e), notes))
-
-    def _queue_note(self, conn: _Conn, note: dict) -> None:
-        """Deliver a note on ``conn``: normally a direct *non-blocking*
-        push (``MSG_DONTWAIT`` — the queuing thread may be another
-        client's reader or the executor, and must never block on this
-        client's stalled receive buffer); on a full socket buffer the
-        frame's tail spills to the pusher thread, and queued notes also
-        ride the next departing reply (piggyback)."""
-        spill = False
-        with conn.send_lock:
-            if conn.pending_out:
-                conn.notes.append(note)   # strict frame order: spill more
-                spill = True
-            else:
-                data = wire_frame((None, NOTE, None, [note]))
-                try:
-                    sent = conn.sock.send(data, socket.MSG_DONTWAIT)
-                except (BlockingIOError, InterruptedError):
-                    sent = 0
-                except OSError:
-                    return                # conn dying: client will learn
-                if sent != len(data):
-                    conn.pending_out = data[sent:]
-                    spill = True
-        if spill:
-            self._note_q.put(conn)
-
-    def _pusher_loop(self) -> None:
-        """Flushes spilled push frames and queued notes, blocking only on
-        the one connection being flushed (cross-client isolation)."""
-        while True:
-            conn = self._note_q.get()
-            if conn is None:
-                return
-            try:
-                with conn.send_lock:
-                    chunks = []
-                    if conn.pending_out:
-                        chunks.append(conn.pending_out)
-                        conn.pending_out = b""
-                    notes, conn.notes = conn.notes, []
-                    if notes:
-                        chunks.append(wire_frame((None, NOTE, None, notes)))
-                    if chunks:
-                        # spilled tail + queued notes: one vectored send
-                        send_frames(conn.sock, chunks)
-            except Exception:  # noqa: BLE001 - conn dying: client will learn
-                pass
 
     def _push_task_done(self, session: _Session, name: str, conn: _Conn,
                         result: tuple) -> None:
@@ -758,7 +490,7 @@ class NodeServer:
         if len(payload) > PIGGYBACK_MAX:
             acc.ship_state = False
             return None
-        return oob(payload)    # ships as a raw trailing segment (wire v3)
+        return self._oob(payload)   # out-of-band on wire v3; raw in sim
 
     def _held_payload(self, acc: _ServerAccess) -> Optional[bytes]:
         """Held-state copy for the piggyback live-read protocol: while the
@@ -777,7 +509,7 @@ class NodeServer:
         if len(payload) > PIGGYBACK_MAX:
             acc.ship_state = False
             return None
-        return oob(payload)    # ships as a raw trailing segment (wire v3)
+        return self._oob(payload)   # out-of-band on wire v3; raw in sim
 
     def _client_vanished(self, client_id: str) -> None:
         """Last mux connection dropped: crash-stop the client's sessions."""
@@ -788,24 +520,6 @@ class NodeServer:
             self._expire_session(session)
             with self._lock:
                 self._sessions.pop(uid, None)
-
-    def _reaper_loop(self) -> None:
-        """Expire sessions whose client stopped heartbeating (§3.4).
-
-        Covers clients whose mux connection outlives their heartbeats, and
-        — unlike the object-level monitor — also transactions that
-        dispensed versions but never *held* anything: their private
-        versions must still be advanced past, or every successor wedges on
-        the version chain."""
-        while not self._stop.wait(self.monitor.poll_interval):
-            now = time.monotonic()
-            with self._lock:
-                stale = [(uid, s) for uid, s in self._sessions.items()
-                         if now - s.last_contact > self.monitor.timeout]
-            for uid, session in stale:
-                self._expire_session(session)
-                with self._lock:
-                    self._sessions.pop(uid, None)
 
     def _expire_session(self, session: _Session) -> None:
         """Crash-stop one client transaction (paper §3.4).
@@ -844,8 +558,10 @@ class NodeServer:
                 with shared._contact_lock:
                     if shared.holding_txn is session:
                         shared.holding_txn = None
-                if st is not None and modified and h.instance == seen:
+                if (st is not None and modified
+                        and h.restore_allowed(seen, acc.pv)):
                     st.restore_into(shared.holder)
+                    h.note_restore(acc.pv)
                     h.instance += 1
             skip_version(h, acc.pv)
             self.monitor.rollbacks.append(shared.name)
@@ -873,7 +589,7 @@ class NodeServer:
             raise InstanceInvalidated(
                 f"transaction {txn!r} has no live session on this node "
                 f"(rolled back by the failure detector)")
-        session.last_contact = time.monotonic()
+        session.last_contact = self._clock()
         return session
 
     def _acc(self, txn: str, name: str) -> _ServerAccess:
@@ -999,7 +715,8 @@ class NodeServer:
         with self._lock:
             session = self._sessions.get(txn)
             if session is None:
-                session = self._sessions[txn] = _Session(txn, client_id)
+                session = self._sessions[txn] = _Session(
+                    txn, client_id, now=self._clock())
         objs = [(self._shared(n), n) for n in names]
         objs.sort(key=lambda sn: sn[0].header.uid)   # node-local global order
         pvs: Dict[str, int] = {}
@@ -1008,13 +725,11 @@ class NodeServer:
             for shared, name in objs:
                 with self._lock:
                     gate = self._gates.setdefault(name, threading.Lock())
-                if _nb:
-                    # Reader fast path: give up (and redo on the pool)
-                    # rather than block the connection on a held gate.
-                    if not gate.acquire(blocking=False):
-                        raise _WouldBlock
-                else:
-                    gate.acquire()
+                # Reader fast path (``_nb``): give up (and redo on the
+                # pool) rather than block the connection on a held gate.
+                # How a *blocking* acquire blocks is the transport's
+                # business (virtual-time backoff under simnet).
+                self._gate_acquire(gate, nb=_nb)
                 acquired.append(gate)
             for shared, name in objs:
                 with shared.header.lock:
@@ -1029,15 +744,26 @@ class NodeServer:
             raise
         with session.lock:
             session.held_gates.extend(acquired)
+        # §3.4 re-check: the client may have crashed (and its session been
+        # expired and dropped) while this handler was parked on the gates
+        # — the expiry saw no accesses and no held gates, so whatever we
+        # just dispensed would live in a *ghost* session no reaper ever
+        # visits, wedging every successor on the version chain forever
+        # (found by the simnet seed sweep). Converge it ourselves: skip
+        # the dispensed versions in chain order and free the gates — both
+        # idempotent against a racing expiry that did see partial state.
+        if session.expired:
+            self._release_gates(session)
+            for name, pv in pvs.items():
+                skip_version(self._shared(name).header, pv)
+            raise InstanceInvalidated(
+                f"transaction {txn!r} crash-stopped during dispense "
+                f"(§3.4); dispensed versions skipped")
         # Completion-note target: the connection the request came in on if
         # it belongs to the end client, else (chain-forwarded: the request
-        # came from a peer server) any mux connection the end client keeps
-        # to this node. A miss is safe — joins fall back to task_join.
-        push_to = _conn
-        if push_to is None or push_to.client_id != client_id:
-            with self._lock:
-                conns = self._mux.get(client_id)
-                push_to = conns[0] if conns else None
+        # came from a peer server) a connection the end client keeps to
+        # this node. A miss is safe — joins fall back to task_join.
+        push_to = self._push_target(_conn, client_id)
         ro: Dict[str, Optional[dict]] = {}
         for name in ro_names:
             acc = self._acc(txn, name)
@@ -1071,21 +797,29 @@ class NodeServer:
 
     # -- §2.7 / §2.8.4: asynchronous home-node tasks -------------------------
     def _op_ro_buffer(self, txn: str, name: str, kind: str,
-                      _conn: Optional[_Conn] = None) -> None:
+                      _conn: Any = None) -> None:
         session = self._session(txn)
         acc = self._acc(txn, name)
         acc.push_conn = _conn
-        acc.spawn_ro_buffer(kind)
+        acc.inline_tasks = self.INLINE_KICKOFF_TASKS
+        try:
+            acc.spawn_ro_buffer(kind)
+        finally:
+            acc.inline_tasks = False
         session.tasks[name] = acc.release_task
 
     def _op_lw_apply(self, txn: str, name: str, kind: str,
                      entries: List[tuple],
-                     _conn: Optional[_Conn] = None) -> None:
+                     _conn: Any = None) -> None:
         session = self._session(txn)
         acc = self._acc(txn, name)
         acc.push_conn = _conn
         acc.log.entries = list(entries)
-        acc.spawn_lastwrite_apply(kind)
+        acc.inline_tasks = self.INLINE_KICKOFF_TASKS
+        try:
+            acc.spawn_lastwrite_apply(kind)
+        finally:
+            acc.inline_tasks = False
         session.tasks[name] = acc.release_task
 
     def _op_task_join(self, txn: str, name: str) -> Dict[str, Any]:
@@ -1350,7 +1084,7 @@ class NodeServer:
         self._shared(name).clear_holder(session)
 
     def _op_heartbeat(self, client_id: str, txns: List[str]) -> None:
-        now = time.monotonic()
+        now = self._clock()
         for uid in txns:
             with self._lock:
                 session = self._sessions.get(uid)
@@ -1402,6 +1136,422 @@ class NodeServer:
         return {"node": self.node_name, "sessions": sessions,
                 "rollbacks": list(self.monitor.rollbacks)}
 
+
+
+class NodeServer(NodeCore):
+    """One registry node served over TCP (the real-wire transport).
+
+    Adds to :class:`NodeCore` everything socket-shaped: the listener and
+    per-connection reader threads, the multiplexed framed protocol
+    (requests / one-ways / replies / pushes), the grow-on-demand worker
+    pool for potentially-blocking ops with the uncontended inline fast
+    paths, the non-blocking note pusher, and the real-time session reaper.
+    """
+
+    #: Ops that may block (version gates, dispensing 2PL, task joins) or
+    #: burn service time (object methods, log application): each gets its
+    #: own thread so a parked RPC never stalls the multiplexed connection.
+    #: Unknown ops are threaded too — blocking is the conservative guess.
+    _INLINE_OPS = frozenset({
+        "ping", "list_bindings", "mode_of", "header_state", "header_release",
+        "header_terminate", "validate", "release", "terminate",
+        "finish_batch", "rollback_batch", "end_txn", "release_version_locks",
+        "ensure_checkpoint", "buffer_snapshot", "snap_release", "stats",
+        "touch", "clear_holder", "heartbeat", "abandon", "ro_buffer",
+        "lw_apply",
+    })
+
+    #: wire v3 ships bulk payloads as out-of-band segments.
+    _oob = staticmethod(oob)
+
+    def __init__(self, node_name: str = "node0", host: str = "127.0.0.1",
+                 port: int = 0, *, registry: Optional[Registry] = None,
+                 monitor_timeout: float = 2.0, monitor_poll: float = 0.05,
+                 executor_workers: int = 1):
+        super().__init__(node_name, registry=registry,
+                         monitor_timeout=monitor_timeout,
+                         monitor_poll=monitor_poll,
+                         executor_workers=executor_workers)
+        self._pool = _WorkerPool(name=f"op-{node_name}")
+        self._note_q: "queue.SimpleQueue" = queue.SimpleQueue()
+        threading.Thread(target=self._pusher_loop,
+                         name=f"note-pusher-{node_name}",
+                         daemon=True).start()
+        self._costs: Dict[str, float] = {}      # per-object service-time EWMA
+        self._mux: Dict[str, List[_Conn]] = {}          # client_id -> conns
+        self._conns: set = set()                        # live connections
+        self._stop = threading.Event()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._accept_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ #
+    # lifecycle                                                           #
+    # ------------------------------------------------------------------ #
+    @property
+    def address(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    def start(self) -> "NodeServer":
+        self._listener.listen(128)
+        self.monitor.start()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"accept-{self.port}", daemon=True)
+        self._accept_thread.start()
+        threading.Thread(target=self._reaper_loop, name="session-reaper",
+                         daemon=True).start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns)
+        for c in conns:   # crash-stop for connected peers (embedded servers)
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        self.monitor.stop()
+        self._pool.stop()
+        self._note_q.put(None)
+        with self._lock:
+            peers = list(self._peers.values())
+            self._peers.clear()
+        for p in peers:
+            p.close()
+        self.registry.shutdown()
+
+    def serve_forever(self) -> None:
+        self.start()
+        try:
+            while not self._stop.wait(0.2):
+                pass
+        except KeyboardInterrupt:  # pragma: no cover
+            pass
+        finally:
+            self.stop()
+
+    # ------------------------------------------------------------------ #
+    # TCP connection handling (NodeServer)                                 #
+    # ------------------------------------------------------------------ #
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                sock, _addr = self._listener.accept()
+            except OSError:
+                return
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._serve_conn, args=(sock,),
+                             name="conn", daemon=True).start()
+
+    def _serve_conn(self, sock: socket.socket) -> None:
+        conn = _Conn(sock)
+        reader = FrameReader(sock)
+        # This thread multiplexes many conversations: tasks woken by the
+        # counter advances of its inline ops run on the executor, never
+        # here (foreign service time must not stall the link).
+        defer_wake_inline()
+        with self._lock:
+            self._conns.add(sock)
+        try:
+            while not self._stop.is_set():
+                try:
+                    req_id, op, kw = reader.recv_msg()
+                except (ConnectionClosed, WireError, OSError):
+                    break
+                if op == "mux_hello":
+                    # The mux connection doubles as the §3.4 presence
+                    # signal: its drop means this client process died.
+                    conn.client_id = kw["client_id"]
+                    with self._lock:
+                        self._mux.setdefault(conn.client_id, []).append(conn)
+                    try:
+                        self._send_reply(conn, req_id, OK, None)
+                    except (ConnectionClosed, OSError):
+                        break
+                    continue
+                if op in self._CONN_OPS:
+                    kw = dict(kw, _conn=conn)   # push notes return this way
+                if req_id is None:
+                    # One-way: execute inline (FIFO vs later requests on
+                    # this connection); failures become deferred-error
+                    # notes pushed back to the sender.
+                    self._handle_oneway(conn, op, kw)
+                elif op in self._INLINE_OPS:
+                    if not self._handle_request(conn, req_id, op, kw):
+                        break
+                elif self._try_fast(conn, req_id, op, kw):
+                    pass   # handled inline (uncontended fast path)
+                else:
+                    self._pool.submit(
+                        lambda c=conn, r=req_id, o=op, k=kw:
+                        self._handle_timed(c, r, o, k))
+        finally:
+            with self._lock:
+                self._conns.discard(sock)
+                last_of_client = False
+                if conn.client_id is not None:
+                    conns = self._mux.get(conn.client_id, [])
+                    if conn in conns:
+                        conns.remove(conn)
+                    if not conns:
+                        self._mux.pop(conn.client_id, None)
+                        last_of_client = True
+            try:
+                sock.close()
+            except OSError:
+                pass
+            if last_of_client:
+                self._client_vanished(conn.client_id)
+
+    def _handle_request(self, conn: _Conn, req_id: int, op: str,
+                        kw: Dict[str, Any]) -> bool:
+        try:
+            value = self._dispatch(op, kw)
+            status = OK
+        except BaseException as e:  # noqa: BLE001 - serialize to peer
+            status, value = ERR, encode_error(e)
+        try:
+            self._send_reply(conn, req_id, status, value)
+        except (ConnectionClosed, OSError):
+            # The reader (or another worker) will observe the broken socket;
+            # make sure it does even if it is parked in recv.
+            try:
+                conn.sock.close()
+            except OSError:
+                pass
+            return False
+        return True
+
+    #: EWMA of per-call service time above which an object's method calls
+    #: are dispatched to the worker pool instead of inline on the reader:
+    #: genuinely compute-bearing CF methods (the paper models ~3 ms) must
+    #: not stall the multiplexed link, but the two thread handoffs of a
+    #: pool dispatch dominate the cost of a *quick* method by an order of
+    #: magnitude — and for a sub-millisecond method the stall is no worse
+    #: than the handoff it replaces. Wall-clock EWMAs on a loaded host
+    #: include scheduler noise, so the threshold is deliberately generous.
+    INLINE_SLOW_S = 0.002
+
+    def _note_cost(self, name: Optional[str], dt: float) -> None:
+        if name is not None:
+            old = self._costs.get(name, dt)
+            self._costs[name] = 0.7 * old + 0.3 * dt
+
+    def _fast_call(self, conn: _Conn, req_id: int, op: str,
+                   kw: Dict[str, Any], weight: int = 1) -> bool:
+        """Inline a non-blocking method-bearing op on the reader when the
+        object's observed service time says it is quick (optimistically
+        inline at first sight; a slow object is learned once and pooled
+        thereafter). ``weight`` scales the estimate for batches."""
+        name = kw.get("name")
+        if self._costs.get(name, 0.0) * weight > self.INLINE_SLOW_S:
+            return False
+        t0 = time.perf_counter()
+        self._handle_request(conn, req_id, op, kw)
+        self._note_cost(name, (time.perf_counter() - t0) / max(weight, 1))
+        return True
+
+    def _open_ready(self, txn: str, name: str, kind: str) -> bool:
+        """True iff the §2.8.2 open would not block: the access (or
+        termination) gate is already open for this session's pv.
+        (Monotonic counters: once true, stays true.) Errors — no session,
+        unknown object — return True: raising is quick, do it inline."""
+        try:
+            acc = self._acc(txn, name)
+        except BaseException:  # noqa: BLE001 - error replies are cheap
+            return True
+        h = acc.shared.header
+        with h.lock:
+            done = h.ltv if kind == "termination" else h.lv
+            return done >= acc.pv - 1
+
+    #: Pool-dispatched ops whose duration still feeds the service-time
+    #: EWMA, so a transiently-inflated estimate (scheduler noise) decays
+    #: back under the inline threshold instead of sticking forever.
+    #: ``open_call`` is deliberately absent: its pooled duration includes
+    #: the gate *wait*, which is contention, not service time.
+    _COST_OPS = frozenset({"txn_call", "buf_call", "raw_call",
+                           "txn_call_batch"})
+
+    def _handle_timed(self, conn: _Conn, req_id: int, op: str,
+                      kw: Dict[str, Any]) -> bool:
+        if op not in self._COST_OPS:
+            return self._handle_request(conn, req_id, op, kw)
+        weight = 1
+        if op == "txn_call_batch":
+            weight = len(kw.get("calls") or ()) or 1
+        t0 = time.perf_counter()
+        handled = self._handle_request(conn, req_id, op, kw)
+        self._note_cost(kw.get("name"), (time.perf_counter() - t0) / weight)
+        return handled
+
+    def _try_fast(self, conn: _Conn, req_id: int, op: str,
+                  kw: Dict[str, Any]) -> bool:
+        """Uncontended fast paths for normally-threaded ops: when the op
+        provably won't block (gates free, commit conditions already open,
+        no logs to burn service time on), run it inline on the reader and
+        skip two thread handoffs. Contention falls back to the pool.
+
+        Inline work here may include bounded state *snapshots* (§2.7
+        buffers, commit checkpoints) — the same class of work the
+        ``buffer_snapshot``/``snap_release`` inline ops already do on the
+        reader — and, new in v3, *method calls on objects whose measured
+        service time is quick* (the EWMA guard of :meth:`_fast_call`):
+        the common zero-to-cheap-compute call answers on the reader with
+        zero server-side handoffs, while compute-bearing objects keep the
+        pool. Gate-blocking opens fall back unless the gate is provably
+        open (:meth:`_open_ready`)."""
+        if op in ("txn_call", "buf_call", "raw_call"):
+            return self._fast_call(conn, req_id, op, kw)
+        if op == "txn_call_batch":
+            return self._fast_call(conn, req_id, op, kw,
+                                   weight=len(kw.get("calls") or ()) or 1)
+        if op == "open_call" and not kw.get("entries"):
+            if self._open_ready(kw["txn"], kw["name"], kw.get("kind",
+                                                             "access")):
+                return self._fast_call(conn, req_id, op, kw,
+                                       weight=1 + len(kw.get("tail") or ()))
+            return False
+        if op == "dispense_batch" and not kw.get("chain"):
+            try:
+                value, status = self._dispatch(op, dict(kw, _nb=True)), OK
+            except _WouldBlock:
+                return False
+            except BaseException as e:  # noqa: BLE001 - serialize to peer
+                value, status = encode_error(e), ERR
+            try:
+                self._send_reply(conn, req_id, status, value)
+            except (ConnectionClosed, OSError):
+                try:
+                    conn.sock.close()
+                except OSError:
+                    pass
+            return True
+        if op in ("commit_wave1", "commit_solo"):
+            if self._wave1_ready(kw.get("txn"), kw.get("items", ())):
+                self._handle_request(conn, req_id, op, kw)
+                return True
+        return False
+
+    def _wave1_ready(self, txn: str, items: List[tuple]) -> bool:
+        """True iff commit steps 2-4 would run without blocking or service
+        time: every commit condition already holds and no stray write log
+        needs applying. (Monotonic counters: once true, stays true.)"""
+        try:
+            for name, entries in items:
+                if entries:
+                    return False
+                acc = self._acc(txn, name)
+                h = acc.shared.header
+                with h.lock:
+                    if h.ltv < acc.pv - 1:
+                        return False
+            return True
+        except BaseException:  # noqa: BLE001 - let the pool path raise it
+            return False
+
+    # -- sending (replies, pushes, piggybacked notes) ------------------------
+    def _send_reply(self, conn: _Conn, req_id: int, status: str,
+                    value: Any) -> None:
+        with conn.send_lock:
+            if conn.pending_out:        # a spilled push frame goes first
+                conn.sock.sendall(conn.pending_out)
+                conn.pending_out = b""
+            notes, conn.notes = conn.notes, []
+            try:
+                send_msg(conn.sock, (req_id, status, value, notes))
+            except (ConnectionClosed, OSError):
+                raise
+            except Exception as e:  # noqa: BLE001 - unpicklable OK value
+                # Keep the connection: report the serialization failure
+                # instead of dying (the client would mark the whole server
+                # crash-stop dead).
+                send_msg(conn.sock, (req_id, ERR, encode_error(e), notes))
+
+    def _queue_note(self, conn: _Conn, note: dict) -> None:
+        """Deliver a note on ``conn``: normally a direct *non-blocking*
+        push (``MSG_DONTWAIT`` — the queuing thread may be another
+        client's reader or the executor, and must never block on this
+        client's stalled receive buffer); on a full socket buffer the
+        frame's tail spills to the pusher thread, and queued notes also
+        ride the next departing reply (piggyback)."""
+        spill = False
+        with conn.send_lock:
+            if conn.pending_out:
+                conn.notes.append(note)   # strict frame order: spill more
+                spill = True
+            else:
+                data = wire_frame((None, NOTE, None, [note]))
+                try:
+                    sent = conn.sock.send(data, socket.MSG_DONTWAIT)
+                except (BlockingIOError, InterruptedError):
+                    sent = 0
+                except OSError:
+                    return                # conn dying: client will learn
+                if sent != len(data):
+                    conn.pending_out = data[sent:]
+                    spill = True
+        if spill:
+            self._note_q.put(conn)
+
+    def _pusher_loop(self) -> None:
+        """Flushes spilled push frames and queued notes, blocking only on
+        the one connection being flushed (cross-client isolation)."""
+        while True:
+            conn = self._note_q.get()
+            if conn is None:
+                return
+            try:
+                with conn.send_lock:
+                    chunks = []
+                    if conn.pending_out:
+                        chunks.append(conn.pending_out)
+                        conn.pending_out = b""
+                    notes, conn.notes = conn.notes, []
+                    if notes:
+                        chunks.append(wire_frame((None, NOTE, None, notes)))
+                    if chunks:
+                        # spilled tail + queued notes: one vectored send
+                        send_frames(conn.sock, chunks)
+            except Exception:  # noqa: BLE001 - conn dying: client will learn
+                pass
+
+    def _push_target(self, conn: Optional[_Conn],
+                     client_id: str) -> Optional[_Conn]:
+        """The kickoff's own connection when it belongs to the end client,
+        else (chain-forwarded from a peer server) any mux connection the
+        end client keeps to this node."""
+        if conn is not None and conn.client_id == client_id:
+            return conn
+        with self._lock:
+            conns = self._mux.get(client_id)
+            return conns[0] if conns else None
+
+    def _reaper_loop(self) -> None:
+        """Expire sessions whose client stopped heartbeating (§3.4).
+
+        Covers clients whose mux connection outlives their heartbeats, and
+        — unlike the object-level monitor — also transactions that
+        dispensed versions but never *held* anything: their private
+        versions must still be advanced past, or every successor wedges on
+        the version chain. The staleness scan itself is
+        :meth:`NodeCore.reap_stale`, shared with the simulation's
+        virtual-clock reaper."""
+        while not self._stop.wait(self.monitor.poll_interval):
+            self.reap_stale(self._clock())
+
+    # -- control -------------------------------------------------------------
     def _op_shutdown(self) -> None:
         threading.Thread(target=self.stop, daemon=True).start()
 

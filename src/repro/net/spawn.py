@@ -5,6 +5,12 @@ quickstart, and the transport tests: spawns ``python -m repro.net.server``
 with an OS-assigned port, parses the ``LISTENING host:port`` announcement,
 and hands back a :class:`ServerHandle` that can stop the process cleanly
 (shutdown RPC first, SIGTERM/kill as fallback).
+
+This module is TCP-only on purpose: a "node" of the deterministic
+simulation transport is an in-process :class:`~repro.net.simnet.SimNode`
+(no subprocess to spawn) — build those with
+:func:`repro.net.simnet.build_simnet` instead. Both end up behind the
+same client-side :class:`~repro.net.transport.Transport` interface.
 """
 from __future__ import annotations
 

@@ -1,5 +1,6 @@
-"""Transport equivalence: the same schedule behaves identically in-proc and
-over TCP — commits, aborts, blocking-wait counts, and final object state.
+"""Transport equivalence: the same schedule behaves identically in-proc,
+over TCP, and under the deterministic simulation — commits, aborts,
+blocking-wait counts, and final object state.
 
 The schedule is sequential (one client), so version order is deterministic
 and the comparison is exact; concurrent behavior is covered by the
@@ -10,6 +11,7 @@ import pytest
 from repro.core import (AbortError, Registry, SupremumViolation, Transaction)
 from repro.net.demo import Account
 from repro.net.server import NodeServer
+from repro.net.simnet import build_simnet
 
 
 def _topology_inproc():
@@ -141,6 +143,29 @@ def _run_schedule(reg):
     return trace, state
 
 
+def _run_schedule_sim(seed: int = 42):
+    """The same recorded schedule, driven through ``--transport sim``:
+    one client actor under the seeded virtual-time scheduler."""
+    net = build_simnet(seed, 2)
+    setup = net.client_registry("setup")
+    nodes = sorted(setup.nodes, key=lambda n: n.name)
+    nodes[0].bind("A", Account(1000))
+    nodes[1].bind("B", Account(500))
+    nodes[0].bind("C", Account(0))
+    out = {}
+
+    def client():
+        reg = net.client_registry("c0")
+        out["trace"], _ = _run_schedule(reg)
+
+    net.spawn(client, "c0")
+    net.run()
+    state = tuple(setup.locate(n).raw_call("balance") for n in "ABC")
+    schedule = net.trace_text()
+    net.shutdown()
+    return out["trace"], state, schedule
+
+
 @pytest.mark.parametrize("case", ["semantics"])
 def test_transport_equivalence(case):
     reg_i, down_i = _topology_inproc()
@@ -153,10 +178,23 @@ def test_transport_equivalence(case):
         trace_tcp, state_tcp = _run_schedule(reg_t)
     finally:
         down_t()
+    trace_sim, state_sim, _ = _run_schedule_sim()
 
     assert trace_inproc == trace_tcp, (
         f"semantics diverged:\n inproc={trace_inproc}\n tcp={trace_tcp}")
-    assert state_inproc == state_tcp == (921, 0, 0)
+    assert trace_inproc == trace_sim, (
+        f"semantics diverged:\n inproc={trace_inproc}\n sim={trace_sim}")
+    assert state_inproc == state_tcp == state_sim == (921, 0, 0)
+
+
+def test_sim_schedule_replays_byte_identical():
+    """The recorded schedule's sim run is itself deterministic: the same
+    seed yields a byte-identical scheduler trace (and identical observable
+    results)."""
+    trace_a, state_a, sched_a = _run_schedule_sim(seed=7)
+    trace_b, state_b, sched_b = _run_schedule_sim(seed=7)
+    assert trace_a == trace_b and state_a == state_b
+    assert sched_a == sched_b
 
 
 def test_eigenbench_tcp_read_dominated_zero_aborts():

@@ -1,0 +1,140 @@
+"""Deterministic simulation transport (repro.net.simnet) — DESIGN.md §7.
+
+CI-sized checks of the tentpole properties:
+
+* commits/conservation/convergence of concurrent sim transactions;
+* byte-identical schedule replay for the same seed (the acceptance
+  criterion: a failing seed is a reproducible bug report);
+* §3.4 crash-stop injection at the four labeled protocol steps, with the
+  invariant sweep's checks holding;
+* home-node crash-stop: in-flight work fails over to the abort path, no
+  waiter hangs;
+* exact reproducibility of the eigenbench message-plan metrics that the
+  CI bench gate relies on.
+"""
+import pytest
+
+from repro.core import AbortError, Transaction
+from repro.core.api import TransactionError
+from repro.net.demo import Account
+from repro.net.simnet import build_simnet
+
+import benchmarks.simsweep as simsweep
+
+
+def _transfer_topology(seed, n_nodes=2):
+    net = build_simnet(seed, n_nodes)
+    setup = net.client_registry("setup")
+    nodes = sorted(setup.nodes, key=lambda n: n.name)
+    nodes[0].bind("A", Account(1000))
+    nodes[-1].bind("B", Account(500))
+    return net, setup
+
+
+def _transfer_client(net, cid, stats, txns=3, amt=10):
+    reg = net.client_registry(cid)
+
+    def body(t, a, b):
+        a.withdraw(amt)
+        b.deposit(amt)
+        return a.balance()
+
+    for _ in range(txns):
+        t = Transaction(reg)
+        pa = t.accesses(reg.locate("A"), 1, 0, 1)
+        pb = t.updates(reg.locate("B"), 1)
+        try:
+            t.start(lambda tt: body(tt, pa, pb))
+            stats["commits"] += 1
+        except TransactionError:
+            # AbortError, or RemoteObjectFailure after a home node
+            # crash-stopped (§3.4: the programmer handles it)
+            stats["aborts"] += 1
+
+
+def test_sim_concurrent_transfers_commit_and_converge():
+    net, setup = _transfer_topology(seed=3)
+    stats = {"commits": 0, "aborts": 0}
+    for cid in ("c0", "c1", "c2"):
+        net.spawn(lambda c=cid: _transfer_client(net, c, stats), cid)
+    net.run()
+    assert stats == {"commits": 9, "aborts": 0}
+    a = setup.locate("A").raw_call("balance")
+    b = setup.locate("B").raw_call("balance")
+    assert (a, b) == (1000 - 90, 500 + 90)
+    assert net.converged() == []
+    assert net.sent == net.delivered + net.dropped
+    net.shutdown()
+
+
+def test_sim_same_seed_replays_byte_identical():
+    def run(seed):
+        net, setup = _transfer_topology(seed)
+        stats = {"commits": 0, "aborts": 0}
+        for cid in ("c0", "c1"):
+            net.spawn(lambda c=cid: _transfer_client(net, c, stats), cid)
+        net.run()
+        trace = net.trace_text()
+        net.shutdown()
+        return trace
+
+    assert run(11) == run(11)
+    assert run(11) != run(12)   # different seed => different schedule
+
+
+@pytest.mark.parametrize("label,op,phase", simsweep.INJECTION_POINTS)
+def test_sim_crash_injection_points(label, op, phase):
+    """Each labeled §3.4 crash point: injection fires, money is conserved,
+    survivors make progress, version chains converge, trace replays."""
+    seed = {"mid-dispense": 4, "mid-open": 1, "lw-apply": 2,
+            "pre-terminate": 7}[label]
+    res = simsweep.run_seed(seed)
+    assert res["injected"] == label
+    assert res["failures"] == [], res["failures"]
+    assert res["commits"] > 0    # survivors made progress
+    res2 = simsweep.run_seed(seed)
+    assert res2["trace"] == res["trace"]
+
+
+def test_sim_sweep_small_block():
+    """A contiguous seed block passes all invariants and covers all four
+    injection points (the PR-sized CI job runs the larger version)."""
+    labels = set()
+    for seed in range(24):
+        res = simsweep.run_seed(seed)
+        assert res["failures"] == [], (seed, res["failures"])
+        if res["injected"]:
+            labels.add(res["injected"])
+    assert len(labels) >= 4, labels
+
+
+def test_sim_node_crash_fails_over():
+    """Crash-stop a home node mid-run: in-flight work surfaces as aborts
+    (RemoteObjectFailure -> abort path), nothing hangs, and the surviving
+    node's version chains converge."""
+    net, setup = _transfer_topology(seed=5)
+    stats = {"commits": 0, "aborts": 0}
+    for cid in ("c0", "c1"):
+        net.spawn(lambda c=cid: _transfer_client(net, c, stats, txns=4), cid)
+    net.crash_node_at("node1", 0.004)
+    net.run()
+    # B's home node died: some transactions aborted, none hung.
+    assert stats["commits"] + stats["aborts"] == 8
+    assert stats["aborts"] > 0
+    assert net.converged() == []   # dead node excluded, node0 clean
+    net.shutdown()
+
+
+def test_sim_eigenbench_messageplan_exact():
+    """The CI gate's primary signal: eigenbench over the sim transport
+    yields bit-identical message-plan metrics run over run."""
+    import benchmarks.eigenbench as eb
+    cfg = eb.EigenConfig(nodes=2, clients_per_node=2, arrays_per_node=4,
+                         txns_per_client=2, hot_ops=6, read_pct=0.5,
+                         op_time_ms=0.0, seed=9)
+    r1 = eb.run_benchmark("optsva-cf", cfg, transport="sim")
+    r2 = eb.run_benchmark("optsva-cf", cfg, transport="sim")
+    assert r1.aborts == r2.aborts == 0
+    assert (r1.commits, r1.rpcs_per_txn, r1.oneways_per_txn, r1.waits) == \
+           (r2.commits, r2.rpcs_per_txn, r2.oneways_per_txn, r2.waits)
+    assert r1.commits == 2 * 2 * 2
