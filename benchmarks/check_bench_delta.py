@@ -91,7 +91,8 @@ def check(baseline: dict, fresh: dict, max_regress: float) -> int:
             continue
         if row.get("aborts"):
             failures.append(f"{name}: {row['aborts']} aborts (expected 0)")
-        for metric in ("rpcs_per_txn", "oneways_per_txn", "commits"):
+        for metric in ("rpcs_per_txn", "oneways_per_txn",
+                       "replication_oneways_per_txn", "commits"):
             if metric not in base:
                 continue
             b, f_ = base[metric], row.get(metric)

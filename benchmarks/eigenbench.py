@@ -105,6 +105,7 @@ class Result:
     rpcs_per_txn: float = 0.0          # client round trips per committed txn
     oneways_per_txn: float = 0.0       # client one-way messages per txn
     handoffs_per_txn: float = 0.0      # replies crossing a thread handoff
+    replication_oneways_per_txn: float = 0.0   # server->follower one-ways
 
 
 Step = Tuple[Any, str, Optional[int]]  # (shared_obj, "read"/"write", value)
@@ -403,13 +404,24 @@ def _build_sim(cfg: EigenConfig):
     n_clients = cfg.nodes * cfg.clients_per_node
     hot: List = []
     mild_by_client: Dict[int, List] = {}
+    addrs = [rn.address for rn in remote_nodes]
+
+    def _followers(ni: int) -> List[str]:
+        # Replica chain (DESIGN.md §8): one follower, next node round-robin
+        # — the bench measures the replication message plan the sweep
+        # proves correct. Single-node topologies have nowhere to replicate.
+        return [addrs[(ni + 1) % cfg.nodes]] if cfg.nodes > 1 else []
+
     for ni, rn in enumerate(remote_nodes):
         for i in range(cfg.arrays_per_node):
-            hot.append(rn.bind(f"hot-{ni}-{i}", RefCell(0, op_time or None)))
+            hot.append(rn.bind(f"hot-{ni}-{i}", RefCell(0, op_time or None),
+                               followers=_followers(ni)))
     for ci in range(n_clients):
-        rn = remote_nodes[ci % cfg.nodes]
+        ni = ci % cfg.nodes
+        rn = remote_nodes[ni]
         mild_by_client[ci] = [
-            rn.bind(f"mild-{ci}-{i}", RefCell(0, op_time or None))
+            rn.bind(f"mild-{ci}-{i}", RefCell(0, op_time or None),
+                    followers=_followers(ni))
             for i in range(cfg.arrays_per_node)]
     return net, setup, hot, mild_by_client
 
@@ -460,6 +472,9 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
         if cid.startswith("c"):
             n_rpc += t.n_rpc
             n_oneway += t.n_oneway
+    # server->follower replication one-ways (DESIGN.md §8): counted at the
+    # nodes, not the clients — the replication cost of the commit path.
+    n_repl = sum(node.replication.n_sent for node in net._nodes.values())
     net.shutdown()
 
     commits = sum(s["commits"] for s in stats_per_client)
@@ -474,7 +489,9 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
                   abort_rate_pct=100.0 * (aborts + retries) / max(attempted, 1),
                   wall_s=wall, waits=waits,
                   rpcs_per_txn=round(n_rpc / max(commits, 1), 2),
-                  oneways_per_txn=round(n_oneway / max(commits, 1), 2))
+                  oneways_per_txn=round(n_oneway / max(commits, 1), 2),
+                  replication_oneways_per_txn=round(
+                      n_repl / max(commits, 1), 2))
 
 
 def run_benchmark(framework: str, cfg: EigenConfig,

@@ -170,7 +170,7 @@ def bench_scheduler_overhead(full: bool = False,
 # Transport-overhead bench (PR2, re-measured per PR): in-proc vs real TCP wire #
 # --------------------------------------------------------------------------- #
 def bench_transport_overhead(full: bool = False,
-                             out: str = "BENCH_PR5.json") -> None:
+                             out: str = "BENCH_PR6.json") -> None:
     """Per-transaction cost of the real wire (``repro.net``), honestly.
 
     The same Eigenbench schedule (read-dominated 9:1 — the paper's
@@ -250,6 +250,8 @@ def bench_transport_overhead(full: bool = False,
                              handoffs_per_txn=r_tcp.handoffs_per_txn)
         sim_derived = (f"rpcs_per_txn={r_sim.rpcs_per_txn};"
                        f"oneways_per_txn={r_sim.oneways_per_txn};"
+                       f"replication_oneways_per_txn="
+                       f"{r_sim.replication_oneways_per_txn};"
                        f"commits={r_sim.commits};aborts={r_sim.aborts};"
                        f"waits={r_sim.waits}")
         emit(f"transport/{cname}/sim", 0.0, sim_derived)
@@ -259,9 +261,11 @@ def bench_transport_overhead(full: bool = False,
             "commits": r_sim.commits, "aborts": r_sim.aborts,
             "waits": r_sim.waits, "seed": cfg.seed,
             "rpcs_per_txn": r_sim.rpcs_per_txn,
-            "oneways_per_txn": r_sim.oneways_per_txn})
+            "oneways_per_txn": r_sim.oneways_per_txn,
+            "replication_oneways_per_txn":
+                r_sim.replication_oneways_per_txn})
     write_bench_json(out, json_rows, meta={
-        "bench": "transport_overhead", "pr": 5, "op_time_ms": 0.0,
+        "bench": "transport_overhead", "pr": 6, "op_time_ms": 0.0,
         "txns_per_client": txns, "repeats": repeats,
         "note": ("tcp = one node-server subprocess per registry node "
                  "(repro.net), honest wire over the multiplexed pipelined "
@@ -337,7 +341,7 @@ def main() -> None:
                          "fig13,roofline,step")
     ap.add_argument("--bench-out", default="BENCH_PR1.json",
                     help="JSON trajectory point for the sched table")
-    ap.add_argument("--transport-out", default="BENCH_PR5.json",
+    ap.add_argument("--transport-out", default="BENCH_PR6.json",
                     help="JSON trajectory point for the transport table "
                          "(per-PR: pass BENCH_PR<n>.json for PR n)")
     args = ap.parse_args()

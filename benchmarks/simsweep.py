@@ -2,10 +2,16 @@
 
 Each seed generates a small OptSVA-CF deployment (2-3 nodes, a handful of
 client processes running bank-transfer chains, write-only mark ledgers,
-and read-only audits) plus — on most seeds — one §3.4 crash-stop
-injection at a labeled protocol step, then runs the whole thing under
+and read-only audits; every object bound with a one-follower replica
+chain) plus — on most seeds — one crash-stop injection: a §3.4 client
+crash at a labeled protocol step, or (``--node-faults``) a home-node
+crash at a chosen delivery of a chained-commit / replication op
+(DESIGN.md §8). It then runs the whole thing under
 :class:`repro.net.simnet.SimNet`'s seeded virtual-time scheduler and
-checks the paper's §2-§3.4 invariants:
+checks the paper's §2-§3.4 invariants plus the §8 robustness ones (zero
+partial commits: a crashed client's in-flight commit applies all-or-
+nothing; zero lost committed writes: accounts of a crashed home node are
+read back through their promoted replica follower):
 
 * **conservation** — transfers are atomic: the global balance sum never
   changes, and each account's final balance equals its initial balance
@@ -33,6 +39,7 @@ checks the paper's §2-§3.4 invariants:
 Usage::
 
     python -m benchmarks.simsweep --seeds 200                  # PR gate
+    python -m benchmarks.simsweep --seeds 100 --node-faults    # failover gate
     python -m benchmarks.simsweep --seeds 5000 --trace-dir sim_traces
     python -m benchmarks.simsweep --seed 1234 --print-trace    # replay one
 """
@@ -49,13 +56,40 @@ from repro.core.api import TransactionError
 from repro.net.demo import LedgerAccount
 from repro.net.simnet import SimDeadlock, build_simnet
 
-#: The labeled §3.4 crash-stop injection points (ISSUE 5 acceptance:
-#: the PR-sized sweep must exercise at least 4 distinct ones).
+#: The labeled §3.4 crash-stop injection points (the PR-sized sweep must
+#: exercise at least 4 distinct ones). Since the chained commit decision
+#: (DESIGN.md §8) a multi-domain commit is ONE ``commit_chain`` RPC, so
+#: the client-crash points of interest moved: ``pre-commit`` kills the
+#: client before it ever asks for a commit (full §3.4 rollback);
+#: ``post-commit`` kills it with the request in flight — the coordinator
+#: decides and drives steps 2-5 autonomously, so the transfer must apply
+#: everywhere or nowhere (the old client-driven step-5 partial-terminate
+#: window is CLOSED; the all-or-nothing check below enforces exactly that).
 INJECTION_POINTS = [
     ("mid-dispense", "dispense_batch", "after_send"),
     ("mid-open", "open_call", "after_send"),
     ("lw-apply", "lw_apply", "after_send"),
-    ("pre-terminate", "finish_batch", "before_send"),
+    ("pre-commit", "commit_chain", "before_send"),
+    ("post-commit", "commit_chain", "after_send"),
+]
+
+#: Node crash-stop plans for ``--node-faults`` (DESIGN.md §8): kill a home
+#: node at the nth delivery of a protocol op — the coordinator itself
+#: (``commit_chain``), a mid-wave participant (``commit_wave``), a
+#: mid-decision-chain participant (``commit_decide``), or a replica
+#: follower (``repl_apply`` / ``repl_final``) — plus the timed crash.
+#: ``before``/``after`` pick whether the op's message dies with the node
+#: or the node dies right after (or parked inside) its handler.
+NODE_FAULT_PLANS = [
+    ("node-timed", None, None),
+    ("node-chain-pre", "commit_chain", "before_deliver"),
+    ("node-chain-post", "commit_chain", "after_deliver"),
+    ("node-wave-pre", "commit_wave", "before_deliver"),
+    ("node-wave-post", "commit_wave", "after_deliver"),
+    ("node-decide-pre", "commit_decide", "before_deliver"),
+    ("node-decide-post", "commit_decide", "after_deliver"),
+    ("node-repl-apply", "repl_apply", "before_deliver"),
+    ("node-repl-final", "repl_final", "before_deliver"),
 ]
 
 
@@ -79,11 +113,15 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
 
     setup = net.client_registry("setup")
     nodes = sorted(setup.nodes, key=lambda n: n.name)
+    addrs = [rn.address for rn in nodes]
     account_names: List[str] = []
     for ni, rn in enumerate(nodes):
         for ai in range(accts_per_node):
             name = f"acct-{ni}-{ai}"
-            rn.bind(name, LedgerAccount(initial))
+            # Replica chain (DESIGN.md §8): one follower, the next node
+            # round-robin — every object survives one node crash.
+            rn.bind(name, LedgerAccount(initial),
+                    followers=[addrs[(ni + 1) % n_nodes]])
             account_names.append(name)
     node_of = {f"acct-{ni}-{ai}": ni for ni in range(n_nodes)
                for ai in range(accts_per_node)}
@@ -91,28 +129,36 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
 
     # -- fault plan (deterministic per seed) ---------------------------------
     injected: Optional[str] = None
-    crashed_node: Optional[str] = None
-    if node_faults and seed % 7 == 3:
-        crashed_node = f"node{n_nodes - 1}"
-        net.crash_node_at(crashed_node, rng.uniform(0.001, 0.008))
+    node_fault: Optional[str] = None
+    if node_faults and seed % 4 != 0:
+        label, op, phase = NODE_FAULT_PLANS[seed % len(NODE_FAULT_PLANS)]
+        if op is None:
+            target = f"node{n_nodes - 1}"
+            net.crash_node_at(target, rng.uniform(0.001, 0.008))
+        else:
+            # Coordinator ops land on node0 (first in global domain
+            # order); wave/decide hops and replication one-ways land on
+            # later nodes — target where the op actually arrives.
+            target = "node0" if op == "commit_chain" else "node1"
+            nth = 1 + (seed // len(NODE_FAULT_PLANS)) % 2
+            net.inject_node_crash(target, op, nth=nth, phase=phase,
+                                  label=label)
+        node_fault = label
     elif faults and seed % 3 != 0:
         label, op, phase = INJECTION_POINTS[seed % len(INJECTION_POINTS)]
         nth = 1 + (seed // len(INJECTION_POINTS)) % 2
-        if op == "finish_batch":
-            # Crash before the FIRST terminate: full §3.4 rollback on
-            # every node, so the strong conservation invariant applies.
-            # Crashing between the per-node step-5 one-ways instead hits
-            # the (paper-inherent, simnet-documented) partial-terminate
-            # window where one node commits and another rolls back —
-            # see DESIGN.md §7.
-            nth = 1
-        elif op == "lw_apply":
+        if op == "lw_apply":
             nth = 1     # c0 runs exactly one write-only transaction
         net.inject_crash("c0", op, nth=nth, phase=phase, label=label)
         injected = label
 
     # -- workload ------------------------------------------------------------
     committed_transfers: List[Tuple[List[str], int]] = []
+    #: transfers whose commit request may be in flight at a client crash:
+    #: the chained commit decides server-side, so such a transfer is
+    #: allowed to commit OR roll back — but only atomically (all-or-
+    #: nothing check below).
+    pending_transfers: List[Tuple[List[str], int]] = []
     committed_marks: List[Tuple[str, str]] = []     # (account, tag)
     attempted_marks: List[Tuple[str, str]] = []
     audit_sums: List[int] = []
@@ -123,8 +169,8 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
         k = t_rng.choice([2, 3])
         chain = t_rng.sample(account_names, min(k, len(account_names)))
         if len({node_of[n] for n in chain}) < 2 and len(nodes) > 1:
-            # force a cross-node chain so multi-domain commit (and its
-            # finish_batch wave) is on the table
+            # force a cross-node chain so the multi-domain chained commit
+            # is on the table
             other = [n for n in account_names
                      if node_of[n] != node_of[chain[0]]]
             chain[-1] = t_rng.choice(other)
@@ -141,8 +187,20 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
                 proxies[b].deposit(amt)
             return proxies[chain[0]].balance()
 
-        t.start(body)
-        committed_transfers.append((chain, amt))
+        # A SimCrash (BaseException) mid-start leaves the entry pending;
+        # every normal outcome (commit or abort) removes it. The list is
+        # shared across client threads, so remove THIS entry — a
+        # positional pop() can strand another client's entry when a
+        # crash interleaves two in-flight transfers.
+        entry = (chain, amt)
+        pending_transfers.append(entry)
+        try:
+            t.start(body)
+        except Exception:
+            pending_transfers.remove(entry)
+            raise
+        pending_transfers.remove(entry)
+        committed_transfers.append(entry)
         stats["commits"] += 1
 
     def mark_txn(reg, t_rng, cid: str, tag: str) -> None:
@@ -196,17 +254,22 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
         failures.append(f"deadlock: {e.args[0].splitlines()[0]}")
 
     # -- invariants ----------------------------------------------------------
-    alive_accounts = [n for n in account_names
-                      if crashed_node is None
-                      or f"node{node_of[n]}" != crashed_node]
+    # Every account is read back — accounts whose home node crashed are
+    # read through their promoted replica follower (DESIGN.md §8), which
+    # is itself under test: committed state must survive the home node.
     balances = {}
     marks = {}
-    for name in alive_accounts:
+    readable = []
+    for name in account_names:
         shared = setup.locate(name)
-        balances[name] = shared.raw_call("balance")
-        marks[name] = shared.raw_call("read_marks")
+        try:
+            balances[name] = shared.raw_call("balance")
+            marks[name] = shared.raw_call("read_marks")
+            readable.append(name)
+        except Exception as e:  # noqa: BLE001 - lost replica = lost writes
+            failures.append(f"account {name} unreadable after faults: {e!r}")
 
-    if crashed_node is None:
+    if len(readable) == len(account_names):
         expected = {n: initial for n in account_names}
         for chain, amt in committed_transfers:
             expected[chain[0]] -= amt
@@ -214,16 +277,30 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
         if sum(balances.values()) != total:
             failures.append(
                 f"conservation: sum={sum(balances.values())} != {total}")
-        for name in account_names:
-            if balances[name] != expected[name]:
-                failures.append(f"balance[{name}]={balances[name]} "
-                                f"!= expected {expected[name]}")
+        # A transfer whose client crashed with the commit request in
+        # flight may legally land either way — but atomically: apply its
+        # deltas all-or-nothing (zero partial commits, zero lost commits).
+        candidates = [expected]
+        for chain, amt in pending_transfers:
+            nxt = []
+            for exp in candidates:
+                withp = dict(exp)
+                withp[chain[0]] -= amt
+                withp[chain[-1]] += amt
+                nxt.extend([exp, withp])
+            candidates = nxt
+        if not any(all(balances[n] == exp[n] for n in account_names)
+                   for exp in candidates):
+            failures.append(
+                f"partial commit: balances={balances} match no all-or-"
+                f"nothing assignment of {len(pending_transfers)} pending "
+                f"transfer(s) over expected={expected}")
         for got in audit_sums:
             if got != total:
                 failures.append(f"committed audit saw torn sum {got} "
                                 f"!= {total}")
     committed = set(committed_marks)
-    for name in alive_accounts:
+    for name in readable:
         seen = marks[name]
         for tag in seen:
             if (name, tag) not in committed:
@@ -233,7 +310,7 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
             if mname == name and seen.count(tag) != 1:
                 failures.append(f"mark {tag!r} applied "
                                 f"{seen.count(tag)}x on {name}")
-    if injected is None and crashed_node is None and stats["aborts"]:
+    if injected is None and node_fault is None and stats["aborts"]:
         failures.append(f"pessimism: {stats['aborts']} aborts in a "
                         f"fault-free schedule")
     if injected is not None and not net.fired_injections:
@@ -248,8 +325,11 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
     out = {
         "seed": seed, "failures": failures, "trace": net.trace_text(),
         "commits": stats["commits"], "aborts": stats["aborts"],
-        "injected": net.fired_injections[0] if net.fired_injections else
-                    ("node-crash" if crashed_node else None),
+        "pending": list(pending_transfers),
+        "committed": list(committed_transfers),
+        "balances": balances,
+        "injected": net.fired_injections[0] if net.fired_injections
+                    else node_fault,
         "nodes": n_nodes, "clients": n_clients,
     }
     if keep_net:
@@ -294,8 +374,14 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
           f"{ {k: coverage[k] for k in sorted(coverage)} }")
     rc = 1 if failed else 0
     if faults and n >= 50:
-        distinct = len([k for k in coverage if k != "node-crash"])
-        if distinct < 4:
+        distinct = len([k for k in coverage if not k.startswith("node-")])
+        if node_faults:
+            distinct = len([k for k in coverage if k.startswith("node-")])
+            if distinct < 4:
+                print(f"FAIL: only {distinct} distinct node-crash plans "
+                      f"exercised (need >= 4)")
+                rc = 1
+        elif distinct < 4:
             print(f"FAIL: only {distinct} distinct §3.4 injection points "
                   f"exercised (need >= 4)")
             rc = 1

@@ -1,0 +1,79 @@
+"""Replica chains + follower failover quickstart (DESIGN.md §8).
+
+Spawns two real node-server processes, binds a bank account on the first
+with the second configured as its replica follower, commits a transfer,
+then SIGKILLs the primary mid-run: the next transaction transparently
+promotes the follower and the committed balance survives the home node.
+
+    PYTHONPATH=src python examples/replicated_bank.py
+"""
+import time
+
+from repro.core import Registry, RemoteObjectFailure, Transaction
+from repro.net.demo import Account
+from repro.net.spawn import spawn_server
+
+
+def txn_balance(reg, name):
+    t = Transaction(reg)
+    p = t.reads(reg.locate(name), 1)
+    return t.start(lambda _t: p.balance())
+
+
+def txn_withdraw(reg, name, amt):
+    t = Transaction(reg)
+    p = t.updates(reg.locate(name), 1)
+    t.start(lambda _t: p.withdraw(amt))
+
+
+def main() -> None:
+    print("=== replicated bank: committed state survives the home node ===")
+    with spawn_server("bank-primary") as primary, \
+            spawn_server("bank-replica") as replica:
+        reg = Registry()
+        reg.connect(primary.address)
+        reg.connect(replica.address)
+        for node in reg.nodes:
+            if node.address == primary.address:
+                # ordered follower chain: the replica is seeded now and
+                # receives every committed write before the commit acks
+                node.bind("savings", Account(1000),
+                          followers=[replica.address])
+        print(f"  bound 'savings' on {primary.name}, "
+              f"follower chain -> {replica.name}")
+
+        txn_withdraw(reg, "savings", 100)
+        print("  committed withdraw(100); balance =",
+              txn_balance(reg, "savings"))
+
+        print(f"  SIGKILL {primary.name} (crash-stop: no shutdown, "
+              f"no cleanup)")
+        primary.kill()
+
+        # A transaction begun inside the crash-detection window fails
+        # with RemoteObjectFailure (§3.4: the programmer retries); the
+        # retry fails over — the first live follower is deterministically
+        # promoted and serves the COMMITTED state, not the initial one.
+        deadline = time.monotonic() + 10.0
+        while True:
+            try:
+                bal = txn_balance(reg, "savings")
+                break
+            except RemoteObjectFailure:
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.05)
+        print("  balance after failover =", bal)
+        assert bal == 900, bal
+
+        # the promoted follower is a full primary: commits keep flowing
+        txn_withdraw(reg, "savings", 50)
+        print("  committed withdraw(50) on the promoted follower; "
+              "balance =", txn_balance(reg, "savings"))
+        assert txn_balance(reg, "savings") == 850
+        reg.shutdown()
+    print("  OK: the home node died, the money did not")
+
+
+if __name__ == "__main__":
+    main()

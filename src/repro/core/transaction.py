@@ -621,6 +621,14 @@ class Transaction:
             raise IllegalState("transaction already started")
         self._started = True
         self._terminated = False
+        # Failover hook (before any version lock): transports with replica
+        # chains re-point each access at a promoted follower when its
+        # primary died — so dispense domains below are computed against
+        # live nodes. In-process shared objects have no such hook.
+        for a in self._order:
+            ensure = getattr(a.shared, "ensure_primary", None)
+            if ensure is not None:
+                ensure()
         try:
             dispense_for(self._order)
         except BaseException:
@@ -944,21 +952,55 @@ class Transaction:
                     accs, self.wait_timeout).result()
                 self.stats.waits += blocked
             else:
-                # 2-4. One scatter-gathered wave per dispense domain: wait
-                # the commit condition, checkpoint untouched objects /
-                # apply left-over logs / release, validate — a single RPC
-                # per remote node, all nodes proceeding concurrently.
-                # (Releasing one node's objects before another node's
-                # commit condition passed is safe: step 3 released before
-                # step 4 validated already, and a later abort restores +
-                # bumps epochs exactly as before.)
-                wave1 = [accs[0].commit_wave1_async(accs, self.wait_timeout)
-                         for accs in groups.values()]
-                ok = True
-                for f in wave1:
-                    blocked, valid = f.result()
-                    self.stats.waits += blocked
-                    ok = ok and valid
+                remote = sorted(
+                    ((dom, accs) for dom, accs in groups.items()
+                     if dom is not None), key=lambda kv: kv[0])
+                domains = [accs for _dom, accs in remote]
+                local = groups.get(None)
+                chain_fn = (getattr(domains[0][0], "commit_chain_async",
+                                    None) if domains else None)
+                if chain_fn is not None:
+                    # Chained commit decision (DESIGN.md §8): validate the
+                    # in-process group first (steps 2-4, zero messages),
+                    # then hand the WHOLE remote commit — waves, decision,
+                    # termination — to the first remote node in global
+                    # domain order as ONE RPC. The commit/abort decision is
+                    # made server-side: a client crash after that send can
+                    # no longer strand a partially terminated commit (the
+                    # §3.4 step-5 window, CLOSED).
+                    ok = True
+                    if local is not None:
+                        blocked, ok = local[0].commit_wave1_async(
+                            local, self.wait_timeout).result()
+                        self.stats.waits += blocked
+                    if ok:
+                        if len(domains) == 1:
+                            # One remote domain left: its verdict is local
+                            # to it — steps 2-5 in one solo RPC.
+                            blocked, ok = domains[0][0].commit_solo_async(
+                                domains[0], self.wait_timeout).result()
+                        else:
+                            blocked, ok = chain_fn(
+                                domains, self.wait_timeout).result()
+                        self.stats.waits += blocked
+                else:
+                    # 2-4. One scatter-gathered wave per dispense domain:
+                    # wait the commit condition, checkpoint untouched
+                    # objects / apply left-over logs / release, validate —
+                    # a single RPC per remote node, all nodes proceeding
+                    # concurrently. (Releasing one node's objects before
+                    # another node's commit condition passed is safe: step
+                    # 3 released before step 4 validated already, and a
+                    # later abort restores + bumps epochs exactly as
+                    # before.)
+                    wave1 = [accs[0].commit_wave1_async(accs,
+                                                        self.wait_timeout)
+                             for accs in groups.values()]
+                    ok = True
+                    for f in wave1:
+                        blocked, valid = f.result()
+                        self.stats.waits += blocked
+                        ok = ok and valid
             if not ok:
                 self._do_abort()
                 self.stats.aborts += 1
@@ -966,11 +1008,15 @@ class Transaction:
                     "commit-time validation failed (cascading abort)",
                     forced=True)
             if len(groups) > 1:
-                # 5. Terminate: advance ltv on every object, per-node
-                # batches in one concurrent wave — only after every
-                # domain's validation verdict is in.
+                # 5. Terminate: advance ltv on every object — only after
+                # every domain's validation verdict is in. Domains the
+                # chained decision already terminated server-side are
+                # skipped (their accesses are marked); in practice that
+                # leaves the in-process group, finished here at zero
+                # message cost.
                 ffuts = [accs[0].finish_batch_async(accs)
-                         for accs in groups.values()]
+                         for accs in groups.values()
+                         if not all(a.terminated for a in accs)]
                 for f in ffuts:
                     f.result()
             # Final sync point: any deferred error of a pipelined one-way

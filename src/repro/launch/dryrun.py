@@ -162,6 +162,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # older jax: [dict] per device
+        cost = cost[0] if cost else {}
+    elif cost is None:
+        cost = {}
     hlo = compiled.as_text()
     totals = hlocost.analyze(hlo)       # trip-count-aware (source of record)
 

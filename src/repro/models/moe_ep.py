@@ -125,7 +125,14 @@ def moe_mlp_ep(params: Dict, x: jax.Array, cfg: ModelConfig, mesh: Mesh,
 
     xt = x.reshape(B * S, D)
     tok_spec = P(dp or None, None)
-    shard_map = jax.shard_map
+    # jax >= 0.6 exposes shard_map at top level (check_vma kwarg); older
+    # releases only have the experimental module (check_rep kwarg, inverted
+    # meaning of neither — both just disable replication checking here).
+    if hasattr(jax, "shard_map"):
+        shard_map = functools.partial(jax.shard_map, check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map as _sm
+        shard_map = functools.partial(_sm, check_rep=False)
     y, aux = shard_map(
         body, mesh=mesh,
         in_specs=(tok_spec,
@@ -134,7 +141,6 @@ def moe_mlp_ep(params: Dict, x: jax.Array, cfg: ModelConfig, mesh: Mesh,
                   P("model", None, None),
                   P("model", None, None)),
         out_specs=(tok_spec, P()),
-        check_vma=False,
     )(xt, params["router"], params["w_gate"], params["w_up"],
       params["w_down"])
     return y.reshape(B, S, D), aux

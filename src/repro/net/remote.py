@@ -50,6 +50,11 @@ from repro.core.transaction import Completed, ObjectAccess
 from .client import Future, NodeClient
 from .transport import CLIENT_ID, Transport, load_buf
 
+#: Failure-detection grace before promoting a follower (DESIGN.md §8):
+#: one detection period >> the maximum one-way latency, so every frame a
+#: dead primary queued before crashing has landed by promotion time.
+FAILOVER_GRACE = 0.05
+
 
 class _RemoteBufMarker:
     """Client-side stand-in for a copy buffer that lives on the home node."""
@@ -170,21 +175,29 @@ class RemoteNode:
     def fetch_bindings(self) -> List["RemoteSharedObject"]:
         info = self.client.call("list_bindings")
         self.name = info["node"]
+        followers = info.get("followers", {})
         out = []
         for n, modes in info["bindings"].items():
             shared = RemoteSharedObject(n, self)
             shared._modes.update(modes)   # no mode_of round trips later
+            shared.followers = list(followers.get(n, ()))
             out.append(shared)
         return out
 
-    def bind(self, name: str, obj: Any) -> "RemoteSharedObject":
+    def bind(self, name: str, obj: Any,
+             followers: List[str] = ()) -> "RemoteSharedObject":
         """Bind ``obj`` under ``name`` on the remote server (ships the
-        initial object state once; it lives server-side thereafter). When
-        this node was obtained via ``Registry.connect``, the new binding is
+        initial object state once; it lives server-side thereafter).
+        ``followers`` configures the object's replica chain (DESIGN.md §8):
+        peer node addresses, in promotion order — the server seeds each
+        replica and forwards committed state along the chain. When this
+        node was obtained via ``Registry.connect``, the new binding is
         registered there too, so ``locate`` sees it without re-connecting."""
-        modes = self.client.call("bind", name=name, obj=obj)
+        modes = self.client.call("bind", name=name, obj=obj,
+                                 followers=list(followers))
         shared = RemoteSharedObject(name, self)
         shared._modes.update(modes or {})
+        shared.followers = list(followers)
         if self.registry is not None:
             self.registry.register_remote(shared)
         return shared
@@ -214,6 +227,8 @@ class RemoteSharedObject:
         self.header = RemoteHeader(self)
         self.failed = False
         self._modes: Dict[str, Any] = {}
+        #: replica chain (DESIGN.md §8): peer addresses in promotion order.
+        self.followers: List[str] = []
 
     @property
     def client(self) -> NodeClient:
@@ -238,9 +253,68 @@ class RemoteSharedObject:
     def fail(self) -> None:
         self.failed = True
 
+    # -- failover (DESIGN.md §8) ---------------------------------------------
+    def _follower_node(self, addr: str) -> RemoteNode:
+        reg = self.node.registry
+        if reg is not None:
+            try:
+                return reg.node(addr)    # pre-connected (sim / federation)
+            except KeyError:
+                pass
+            return reg.connect(addr)
+        return RemoteNode(addr)
+
+    def ensure_primary(self) -> None:
+        """Fail over to the first live follower iff the current primary is
+        dead (crash-stop: a node that looks dead IS dead). Every client —
+        and the decision chain's server-side redirect — walks the same
+        configured order, so they converge on the same new primary.
+        Promotion can report *busy* while a still-live coordinator's
+        decision is pending for some buffered tentative; the window is
+        bounded (a live coordinator's chained commit is synchronous), so
+        busy is retried with transport-clocked backoff."""
+        if not self.failed and self.node.alive and self.client.alive:
+            return
+        if not self.followers:
+            raise RemoteObjectFailure(
+                f"remote object {self.name!r} @ {self.node.address} died "
+                f"with no replica chain configured")
+        # Failure-detection grace: promotion must not outrun frames the
+        # dead primary queued before it crashed — in-flight tentatives and
+        # decision redirects travel on OTHER links and carry committed
+        # state. Crash-stop assumes detection time >> one-way latency (the
+        # same assumption the §3.4 expiry reaper makes); sleeping one
+        # detection period here makes it explicit. Transport-clocked:
+        # virtual under simnet, 50ms real on TCP.
+        self.client.sleep(FAILOVER_GRACE)
+        for _attempt in range(60):
+            busy_node = None
+            for i, addr in enumerate(list(self.followers)):
+                try:
+                    node = self._follower_node(addr)
+                    res = node.client.call("promote", names=[self.name])
+                except Exception:  # noqa: BLE001 - this follower is dead too
+                    continue
+                if self.name in res.get("promoted", ()):
+                    self.node = node
+                    self.failed = False
+                    self.followers = self.followers[i + 1:]
+                    return
+                if self.name in res.get("busy", ()):
+                    busy_node = node
+                    break   # this follower WILL promote; wait for it
+                # unknown here (e.g. its init was lost): try the next one
+            if busy_node is None:
+                break
+            busy_node.client.sleep(0.02)
+        raise RemoteObjectFailure(
+            f"no follower of {self.name!r} could be promoted")
+
     def raw_call(self, method: str, args: tuple = (), kwargs: dict = None,
                  from_node: Optional[object] = None) -> Any:
-        """Non-transactional direct invocation at the home node."""
+        """Non-transactional direct invocation at the home node (fails
+        over to a promoted follower when the primary is dead)."""
+        self.ensure_primary()
         self.check_reachable()
         return self.client.call("raw_call", name=self.name, method=method,
                                 args=args, kwargs=kwargs or {})
@@ -737,9 +811,140 @@ class RemoteObjectAccess(ObjectAccess):
                 self.client.mark_session_ended(uid)
             return res["blocked"], ok
 
-        return _WireCompletion(
-            self.client.call_async("commit_solo", txn=uid, items=items,
-                                   timeout=timeout), epilogue)
+        fut = self.client.call_async("commit_solo", txn=uid, items=items,
+                                     timeout=timeout)
+
+        def recover(err: BaseException):
+            """Home node died mid-RPC: same indeterminacy as a dead chain
+            coordinator — the commit may have applied and replicated
+            before the reply was lost. ``repl_final`` precedes the reply
+            on every follower link, so after one detection grace a
+            follower's decision ledger is authoritative: a recorded
+            commit is reported as success, anything else dooms to abort
+            (first-writer-wins, same as the chain path)."""
+            self.client.sleep(FAILOVER_GRACE)
+            targets: List[str] = []
+            for a in accs:
+                for addr in a.shared.followers:
+                    if addr not in targets:
+                        targets.append(addr)
+            for addr in targets:
+                try:
+                    node = accs[0].shared._follower_node(addr)
+                    d = node.client.call("txn_decision", txn=uid)
+                except Exception:  # noqa: BLE001 - that follower died too
+                    continue
+                if d == "commit":
+                    for a in accs:
+                        if a.seen_instance is None:
+                            a.seen_instance = -1
+                        a.modified = True
+                        a.released = True
+                        a.terminated = True
+                    self.client.mark_session_ended(uid)
+                    return 0, True
+                break   # authoritative abort
+            raise err
+
+        class _SoloCompletion:
+            def result(_self, rpc_timeout: Optional[float] = None):
+                try:
+                    res = fut.result(rpc_timeout)
+                except RemoteObjectFailure as e:
+                    return recover(e)
+                return epilogue(res)
+
+        return _SoloCompletion()
+
+    def commit_chain_async(self, domains: List[List["RemoteObjectAccess"]],
+                           timeout: Optional[float]):
+        """Chained multi-domain commit (DESIGN.md §8): ONE RPC to the
+        first node in global domain order covers steps 2-5 for EVERY
+        remote domain. The coordinator node runs its wave, chains the
+        remaining waves server-to-server, makes the commit decision, and
+        drives termination down the chain — the client's old N wave RPCs
+        plus N terminate one-ways collapse into a single round trip, and
+        a client crash after send can no longer strand a partial commit.
+
+        If the coordinator dies mid-call, the decision may still have been
+        made and replicated: recovery asks the coordinator's replica
+        followers for the transaction's fate (``txn_decision``) before
+        concluding abort — a recorded commit is re-driven there and
+        reported as success here.
+        """
+        uid = self.txn_uid
+        self.client.raise_deferred(uid)
+        per_domain = []
+        for accs in domains:
+            items = []
+            for a in accs:
+                entries = list(a.log.entries)
+                a.log.entries.clear()
+                items.append((a.shared.name, entries))
+            per_domain.append((accs, items))
+        head_accs, head_items = per_domain[0]
+        chain = [{"address": accs[0].shared.node.address,
+                  "items": items,
+                  "followers": {a.shared.name: list(a.shared.followers)
+                                for a in accs if a.shared.followers}}
+                 for accs, items in per_domain[1:]]
+        fut = self.client.call_async("commit_chain", txn=uid,
+                                     items=head_items, timeout=timeout,
+                                     chain=chain)
+
+        def mark_terminated() -> None:
+            for accs, _items in per_domain:
+                for a in accs:
+                    a.released = True
+                    a.terminated = True
+                accs[0].client.mark_session_ended(uid)
+
+        def epilogue(res: Dict[str, Any]):
+            for accs, items in per_domain:
+                for a, (_n, entries) in zip(accs, items):
+                    if a.seen_instance is None:
+                        a.seen_instance = -1   # checkpointed server-side
+                    if entries:
+                        a.modified = True
+                    a.released = True
+            ok = not res["bad"]
+            if ok and res.get("decided"):
+                mark_terminated()
+            return res["blocked"], ok
+
+        def recover(err: BaseException):
+            """Coordinator died mid-RPC: its followers know the fate."""
+            # The decision broadcast precedes every effect of the decision
+            # but travels on other links: wait one detection grace so a
+            # decision the dead coordinator DID replicate has landed
+            # before we ask (else we could doom a committed transaction).
+            self.client.sleep(FAILOVER_GRACE)
+            targets: List[str] = []
+            for a in head_accs:
+                for addr in a.shared.followers:
+                    if addr not in targets:
+                        targets.append(addr)
+            for addr in targets:
+                try:
+                    node = head_accs[0].shared._follower_node(addr)
+                    d = node.client.call("txn_decision", txn=uid)
+                except Exception:  # noqa: BLE001 - that follower died too
+                    continue
+                if d == "commit":
+                    mark_terminated()
+                    return 0, True
+                break   # authoritative abort (first-writer-wins doom)
+            raise err
+
+        class _ChainCompletion:
+            def result(_self, rpc_timeout: Optional[float] = None):
+                try:
+                    res = fut.result(rpc_timeout)
+                except RemoteObjectFailure as e:
+                    return recover(e)
+                return epilogue(res)
+
+        return _ChainCompletion()
 
     def rollback_batch_async(self, accs: List["RemoteObjectAccess"]):
         return _WireCompletion(self.client.call_async(

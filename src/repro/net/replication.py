@@ -1,0 +1,361 @@
+"""Per-object replica chains: primary-side forwarding, follower-side state,
+and the promotion state machine (DESIGN.md §8; ISSUE 6 tentpole part 2).
+
+Each shared object may be bound with an ordered *follower* list. The
+primary replicates in two phases keyed by the object's private version
+(the §2.8.4 write log is applied at the primary first, and the *resulting
+state* is what ships — direct ``txn_call`` modifications are covered too):
+
+* **tentative** (``repl_apply``): sent at commit step 3 (``commit_prep``),
+  under the object's header lock, *before* the wave reply that feeds the
+  commit decision — so by the time any decision exists, every tentative is
+  already in flight on a FIFO link that survives the primary's death;
+* **final** (``repl_final``): sent at step 5 (terminate) — the follower
+  applies the buffered tentative exactly once (``(epoch, seq)`` guard);
+* **drop** (``repl_drop``): sent on abort/expiry — the tentative is
+  discarded.
+
+The chained commit decision (tentpole part 1) additionally records a
+per-transaction commit/abort *decision ledger* at followers
+(``repl_decision`` / first-writer-wins doom), which is what makes a
+primary crash between decision and terminate recoverable: a promoted
+follower resolves dangling tentatives against the ledger, querying the
+coordinator's decision memo (``txn_status``) for undecided ones and
+dooming them to abort only when no coordinator survives to decide
+otherwise.
+
+Promotion is caller-driven and deterministic: every client (and the
+decision chain's redirect) tries a dead primary's followers in the same
+configured order, so they converge on the same new primary. A promoted
+follower binds the replica payload into its registry under a FRESH version
+header (old private versions are meaningless there; in-flight transactions
+against the dead primary abort and retry) and continues replicating to the
+followers after itself in the original order, at ``epoch + 1`` so its new
+version sequence cannot be confused with the dead primary's.
+"""
+from __future__ import annotations
+
+import logging
+import pickle
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+log = logging.getLogger("repro.net.replication")
+
+
+class ReplicaRecord:
+    """Follower-side state of one replicated object."""
+
+    __slots__ = ("name", "primary", "order", "epoch", "payload",
+                 "applied", "tentative", "promoted")
+
+    def __init__(self, name: str, primary: str, order: List[str],
+                 epoch: int, payload: bytes, applied: Tuple[int, int]):
+        self.name = name
+        self.primary = primary
+        self.order = list(order)         # follower addresses, primary first
+        self.epoch = epoch
+        self.payload = payload           # pickled last-applied state
+        self.applied = applied           # (epoch, seq) of `payload`
+        #: buffered tentatives: txn uid -> (epoch, seq, payload, head addr)
+        self.tentative: Dict[str, Tuple[int, int, bytes, str]] = {}
+        self.promoted = False
+
+
+class ReplicationManager:
+    """Both halves of the replica-chain protocol for one node.
+
+    Primary half: follower configuration, tentative/final/drop forwarding
+    (one-ways, counted in ``n_sent`` for the bench's
+    ``replication_oneways_per_txn``), and the coordinator's decision memo.
+    Follower half: replica records, the decision ledger, and promotion.
+
+    All state is guarded by one reentrant lock; sends happen outside it
+    (a one-way to a slow peer must not stall the op path).
+    """
+
+    def __init__(self, core: Any):
+        self.core = core                 # NodeCore (``_peer``, ``address``)
+        self.lock = threading.RLock()
+        # -- primary side ----------------------------------------------------
+        self.followers: Dict[str, List[str]] = {}
+        self.epochs: Dict[str, int] = {}
+        self.pending: Dict[Tuple[str, str], Tuple[int, int]] = {}
+        self.n_sent = 0                  # replication one-ways sent
+        # -- decision ledger (coordinator memo + follower recoverability) ----
+        self.decisions: Dict[str, str] = {}          # txn -> commit | abort
+        self.chains: Dict[str, List[dict]] = {}      # txn -> decision chain
+        # -- follower side ---------------------------------------------------
+        self.replicas: Dict[str, ReplicaRecord] = {}
+
+    # ------------------------------------------------------------------ #
+    # plumbing                                                           #
+    # ------------------------------------------------------------------ #
+    def _notify(self, address: str, op: str, *, count: bool = True,
+                **kw: Any) -> None:
+        try:
+            self.core._peer(address).notify(op, **kw)
+            if count:
+                with self.lock:
+                    self.n_sent += 1
+        except Exception as e:  # noqa: BLE001 - dead follower: chain degrades
+            log.debug("replication one-way %s -> %s failed: %r",
+                      op, address, e)
+
+    # ------------------------------------------------------------------ #
+    # primary side                                                       #
+    # ------------------------------------------------------------------ #
+    def set_followers(self, name: str, followers: List[str],
+                      obj: Any) -> None:
+        """Configure the follower chain at bind time and seed each replica
+        with the initial state (epoch 0, seq 0)."""
+        followers = [f for f in followers if f != self.core.address]
+        with self.lock:
+            self.followers[name] = followers
+            self.epochs.setdefault(name, 0)
+        if not followers:
+            return
+        payload = pickle.dumps(obj)
+        for f in followers:
+            self._notify(f, "repl_init", count=False, name=name,
+                         primary=self.core.address, order=list(followers),
+                         epoch=self.epochs[name], payload=payload, seq=0)
+
+    def followers_of(self, name: str) -> List[str]:
+        with self.lock:
+            return list(self.followers.get(name, ()))
+
+    def on_commit_prep(self, txn: str, name: str, obj: Any, seq: int,
+                       origin: Optional[str]) -> None:
+        """Tentative replication at commit step 3: snapshot the applied
+        state (caller holds the header lock — the snapshot must precede the
+        release that wakes successors) and forward it to every follower."""
+        fl = self.followers_of(name)
+        if not fl:
+            return
+        with self.lock:
+            epoch = self.epochs.get(name, 0)
+            self.pending[(txn, name)] = (epoch, seq)
+        payload = pickle.dumps(obj)
+        head = origin or self.core.address
+        for f in fl:
+            self._notify(f, "repl_apply", name=name, txn=txn, epoch=epoch,
+                         seq=seq, payload=payload, head=head)
+
+    def on_terminate(self, txn: str, name: str) -> None:
+        """Final replication at step 5: promote the pending tentative."""
+        with self.lock:
+            key = self.pending.pop((txn, name), None)
+        if key is None:
+            return
+        epoch, seq = key
+        for f in self.followers_of(name):
+            self._notify(f, "repl_final", name=name, txn=txn, epoch=epoch,
+                         seq=seq)
+
+    def on_abort(self, txn: str, name: str) -> None:
+        """Abort/expiry: the tentative (if any) must be discarded."""
+        with self.lock:
+            key = self.pending.pop((txn, name), None)
+        if key is None:
+            return
+        for f in self.followers_of(name):
+            self._notify(f, "repl_drop", name=name, txn=txn)
+
+    # ------------------------------------------------------------------ #
+    # decision ledger                                                    #
+    # ------------------------------------------------------------------ #
+    def record_decision(self, txn: str, decision: str,
+                        chain: Optional[List[dict]] = None) -> str:
+        """First-writer-wins decision ledger. Returns the winning decision
+        (which may differ from ``decision`` if one was already recorded)."""
+        with self.lock:
+            d = self.decisions.setdefault(txn, decision)
+            if chain is not None and d == decision:
+                self.chains.setdefault(txn, list(chain))
+            if d == "commit":
+                self._resolve_tentatives_commit(txn)
+            elif d == "abort":
+                self._resolve_tentatives_abort(txn)
+            return d
+
+    def decision_of(self, txn: str) -> Optional[str]:
+        with self.lock:
+            return self.decisions.get(txn)
+
+    def chain_of(self, txn: str) -> List[dict]:
+        with self.lock:
+            return list(self.chains.get(txn, ()))
+
+    def broadcast_decision(self, txn: str, chain: List[dict]) -> None:
+        """Make the commit decision recoverable before acting on it: ship
+        it (with the remaining decision chain) to every follower of this
+        node's own objects. If this node dies mid-drive, any one of them
+        can re-drive the chain when a recovering client asks."""
+        targets: set = set()
+        with self.lock:
+            for fl in self.followers.values():
+                targets.update(fl)
+        for t in sorted(targets):
+            self._notify(t, "repl_decision", txn=txn, decision="commit",
+                         chain=chain)
+
+    # ------------------------------------------------------------------ #
+    # follower side                                                      #
+    # ------------------------------------------------------------------ #
+    def _apply(self, rec: ReplicaRecord, epoch: int, seq: int,
+               payload: bytes) -> None:
+        if (epoch, seq) > rec.applied:
+            rec.payload = payload
+            rec.applied = (epoch, seq)
+
+    def _resolve_tentatives_commit(self, txn: str) -> None:
+        for rec in self.replicas.values():
+            t = rec.tentative.pop(txn, None)
+            if t is not None and not rec.promoted:
+                self._apply(rec, t[0], t[1], t[2])
+
+    def _resolve_tentatives_abort(self, txn: str) -> None:
+        for rec in self.replicas.values():
+            rec.tentative.pop(txn, None)
+
+    def repl_init(self, name: str, primary: str, order: List[str],
+                  epoch: int, payload: bytes, seq: int) -> None:
+        with self.lock:
+            rec = self.replicas.get(name)
+            if rec is not None and (rec.promoted
+                                    or rec.applied > (epoch, seq)):
+                return   # stale (re)init from an older generation
+            self.replicas[name] = ReplicaRecord(
+                name, primary, order, epoch, payload, (epoch, seq))
+
+    def repl_apply(self, name: str, txn: str, epoch: int, seq: int,
+                   payload: bytes, head: str) -> None:
+        with self.lock:
+            rec = self.replicas.get(name)
+            if rec is None or rec.promoted or epoch < rec.epoch:
+                return   # stale primary generation
+            d = self.decisions.get(txn)
+            if d == "commit":
+                self._apply(rec, epoch, seq, payload)
+            elif d is None:
+                rec.tentative[txn] = (epoch, seq, payload, head)
+            # d == "abort": drop on the floor
+
+    def repl_final(self, name: str, txn: str, epoch: int, seq: int) -> None:
+        with self.lock:
+            self.decisions.setdefault(txn, "commit")
+            rec = self.replicas.get(name)
+            if rec is None or rec.promoted:
+                return
+            t = rec.tentative.pop(txn, None)
+            if t is not None:
+                self._apply(rec, t[0], t[1], t[2])
+
+    def repl_drop(self, name: str, txn: str) -> None:
+        with self.lock:
+            rec = self.replicas.get(name)
+            if rec is not None:
+                rec.tentative.pop(txn, None)
+
+    def repl_decision(self, txn: str, decision: str,
+                      chain: List[dict]) -> None:
+        self.record_decision(txn, decision, chain)
+
+    # ------------------------------------------------------------------ #
+    # promotion                                                          #
+    # ------------------------------------------------------------------ #
+    def _query_head(self, head: str, txn: str) -> str:
+        """Ask a tentative's coordinator for the transaction's fate.
+        An unreachable coordinator reads as ``none`` (no decision can ever
+        arrive from it; dooming the tentative is then safe — see the
+        first-writer-wins argument in DESIGN.md §8)."""
+        try:
+            return self.core._peer(head).call("txn_status", txn=txn)
+        except Exception:  # noqa: BLE001 - dead coordinator
+            return "none"
+
+    def promote(self, names: List[str]) -> Dict[str, List[str]]:
+        """Attempt to take over as primary for ``names``.
+
+        Returns ``{"promoted": [...], "busy": [...]}``; names in neither
+        list are unknown here (the caller tries the next follower). A name
+        is *busy* while some tentative's coordinator is alive but
+        undecided — the caller retries: a live coordinator's chained
+        commit is synchronous, so the window is bounded.
+        """
+        promoted: List[str] = []
+        busy: List[str] = []
+        for name in names:
+            if self.core.has_binding(name):
+                promoted.append(name)    # already primary here: idempotent
+                continue
+            with self.lock:
+                rec = self.replicas.get(name)
+                if rec is None:
+                    continue
+                if rec.promoted:
+                    promoted.append(name)
+                    continue
+                pending_txns = [
+                    (txn, t) for txn, t in rec.tentative.items()
+                    if txn not in self.decisions]
+            wait = False
+            for txn, t in pending_txns:
+                status = self._query_head(t[3], txn)
+                if status == "pending":
+                    wait = True
+                    break
+                with self.lock:
+                    # first-writer-wins: a racing repl_decision beats us
+                    self.decisions.setdefault(
+                        txn, "commit" if status == "commit" else "abort")
+            if wait:
+                busy.append(name)
+                continue
+            with self.lock:
+                for txn in list(rec.tentative):
+                    d = self.decisions.get(txn)
+                    t = rec.tentative.pop(txn)
+                    if d == "commit":
+                        self._apply(rec, t[0], t[1], t[2])
+                self._activate(name, rec)
+            promoted.append(name)
+        return {"promoted": promoted, "busy": busy}
+
+    def _activate(self, name: str, rec: ReplicaRecord) -> None:
+        """Become primary: bind the replica state into the local registry
+        under a fresh header and continue the chain at ``epoch + 1``."""
+        obj = pickle.loads(rec.payload)
+        self.core.bind_local(name, obj)
+        me = self.core.address
+        tail = rec.order[rec.order.index(me) + 1:] if me in rec.order else []
+        epoch = rec.applied[0] + 1
+        self.followers[name] = tail
+        self.epochs[name] = epoch
+        rec.promoted = True
+        log.info("promoted to primary of %r (epoch %d, %d followers)",
+                 name, epoch, len(tail))
+        if tail:
+            for f in tail:
+                self._notify(f, "repl_init", count=False, name=name,
+                             primary=me, order=tail, epoch=epoch,
+                             payload=rec.payload, seq=0)
+
+    # ------------------------------------------------------------------ #
+    # client recovery                                                    #
+    # ------------------------------------------------------------------ #
+    def txn_decision(self, txn: str) -> Tuple[str, List[dict]]:
+        """A recovering client asks a follower of the dead coordinator for
+        the transaction's fate. No recorded decision means the coordinator
+        died before making it recoverable — doom to abort, first-writer-
+        wins (atomic either way: the decision broadcast precedes every
+        effect of the decision, so a doomed transaction committed
+        nowhere)."""
+        with self.lock:
+            d = self.decisions.setdefault(txn, "abort")
+            if d == "abort":
+                self._resolve_tentatives_abort(txn)
+                return d, []
+            self._resolve_tentatives_commit(txn)
+            return d, list(self.chains.get(txn, ()))

@@ -68,6 +68,7 @@ which prints ``LISTENING host:port`` on stdout for the parent to parse
 from __future__ import annotations
 
 import argparse
+import logging
 import pickle
 import queue
 import socket
@@ -85,9 +86,12 @@ from repro.core.registry import Registry, SharedObject
 from repro.core.transaction import ObjectAccess
 from repro.core.versioning import skip_version
 
+from .replication import ReplicationManager
 from .wire import (ConnectionClosed, ERR, FrameReader, NOTE, OK,
                    PIGGYBACK_MAX, WireError, encode_error,
                    frame as wire_frame, oob, send_frames, send_msg)
+
+log = logging.getLogger("repro.net.server")
 
 _SERVER_SUP = Suprema(reads=INF, writes=INF, updates=INF)
 
@@ -172,7 +176,8 @@ class _ServerAccess(ObjectAccess):
     """
 
     __slots__ = ("server", "push_conn", "task_result", "push_done",
-                 "inline_tasks", "ship_state", "aborted")
+                 "inline_tasks", "ship_state", "aborted", "repl_origin",
+                 "repl_done")
 
     def __init__(self, server: "NodeServer", session: "_Session",
                  shared: SharedObject, pv: int):
@@ -190,6 +195,13 @@ class _ServerAccess(ObjectAccess):
         #: set (under the header lock) by the abort path: a stale commit
         #: wave that wakes afterwards must not apply this access's log.
         self.aborted = False
+        #: coordinator address of the commit wave currently prepping this
+        #: access (chained commit): shipped with tentative replication so
+        #: a promoting follower knows whom to ask for the decision.
+        self.repl_origin: Optional[str] = None
+        #: tentative replication already shipped (commit_prep ran): the
+        #: release below it may skip the pin-state snapshot.
+        self.repl_done = False
         #: True while the spawner runs on a worker thread (dispense): an
         #: open-gated task may run inline there, completing within the RPC
         #: so its result rides the reply. False from the conn reader (a
@@ -264,9 +276,38 @@ class _ServerAccess(ObjectAccess):
                     f"before commit step 3 could run")
             self.ensure_checkpoint()
             self.apply_log()
+            if self.modified:
+                # Tentative replication. The payload must be THIS
+                # transaction's resulting state: if the object was
+                # early-released (§2.7/§2.8.3-4 last use), successors have
+                # already executed against live state, so ship the
+                # release-time snapshot (``buf``); otherwise the header
+                # lock still excludes successors and live state is ours.
+                with self.lock:
+                    snap = self.buf if self.released else None
+                state = (snap.state if snap is not None
+                         else self.shared.holder.obj)
+                self.server.replication.on_commit_prep(
+                    self.session.txn_uid, self.shared.name,
+                    state, self.pv, self.repl_origin)
+                self.repl_done = True
         # Release outside the lock: it wakes successors (possibly running
         # their tasks on this thread) and must not do so under our hold.
         self.release()
+
+    def release(self) -> None:
+        """Early release must pin this transaction's resulting state
+        first: once successors run, live state is no longer ours, and the
+        commit-time tentative replication (:meth:`commit_prep`) needs the
+        release-time snapshot. The §2.7/§2.8.4 task bodies and
+        ``snap_release`` already buffer before releasing; this covers the
+        plain ``release`` one-way a client with a live held-state copy
+        sends for a modified object."""
+        if (not self.released and self.modified and not self.aborted
+                and not self.repl_done and self.buf is None
+                and self.server.replication.followers_of(self.shared.name)):
+            self.snapshot_buf()
+        super().release()
 
     def mark_aborted(self) -> None:
         with self.shared.header.lock:
@@ -409,6 +450,30 @@ class NodeCore:
         self._sessions: Dict[str, _Session] = {}
         self._gates: Dict[str, threading.Lock] = {}   # per-object dispense gate
         self._lock = threading.Lock()
+        #: replica chains + decision ledger (DESIGN.md §8)
+        self.replication = ReplicationManager(self)
+
+    #: transport address peers/followers reach this node at; concrete
+    #: transports override (TCP property / simnet attribute).
+    address: Optional[str] = None
+
+    def has_binding(self, name: str) -> bool:
+        try:
+            shared = self.registry.locate(name)
+        except KeyError:
+            return False
+        return shared.node is self.node
+
+    def bind_local(self, name: str, obj: Any) -> None:
+        """Bind ``obj`` here under a FRESH version header (promotion path:
+        the dead primary's private versions are meaningless on this node —
+        in-flight transactions abort and retry against the new header)."""
+        try:
+            self.registry.bind(name, obj, self.node)
+        except ValueError:
+            return   # already bound here: promotion is idempotent
+        with self._lock:
+            self._gates.setdefault(name, threading.Lock())
 
     # -- transport hooks -----------------------------------------------------
     @staticmethod
@@ -565,6 +630,9 @@ class NodeCore:
                     h.instance += 1
             skip_version(h, acc.pv)
             self.monitor.rollbacks.append(shared.name)
+            # §3.4 expiry IS the abort: discard the dead transaction's
+            # tentative replication (followers drop the buffered state).
+            self.replication.on_abort(session.txn_uid, shared.name)
 
     # ------------------------------------------------------------------ #
     # op dispatch                                                         #
@@ -656,14 +724,20 @@ class NodeCore:
 
     def _op_list_bindings(self) -> Dict[str, Any]:
         objs = self.registry.all_objects()
+        followers = {name: fl for name in objs
+                     if (fl := self.replication.followers_of(name))}
         return {"node": self.node_name,
                 "bindings": {name: self._declared_modes(shared.holder.obj)
-                             for name, shared in sorted(objs.items())}}
+                             for name, shared in sorted(objs.items())},
+                "followers": followers}
 
-    def _op_bind(self, name: str, obj: Any) -> Dict[str, Mode]:
+    def _op_bind(self, name: str, obj: Any,
+                 followers: List[str] = ()) -> Dict[str, Mode]:
         self.registry.bind(name, obj, self.node)
         with self._lock:
             self._gates[name] = threading.Lock()
+        if followers:
+            self.replication.set_followers(name, list(followers), obj)
         return self._declared_modes(obj)
 
     def _op_mode_of(self, name: str, method: str) -> Mode:
@@ -1000,12 +1074,15 @@ class NodeCore:
         return [name for name in names if not self._acc(txn, name).valid()]
 
     def _op_commit_wave1(self, txn: str, items: List[tuple],
-                         timeout: Optional[float]) -> Dict[str, Any]:
+                         timeout: Optional[float],
+                         origin: Optional[str] = None) -> Dict[str, Any]:
         """Commit steps 2-4 for this node's whole batch in one RPC: wait
         the commit condition per object, checkpoint/apply/release per
         object, then validate the batch. ``items`` is ``[(name, log
         entries), ...]``. Termination (step 5) is deliberately NOT here —
-        it must wait for every node's validation verdict."""
+        it must wait for every node's validation verdict. ``origin`` names
+        the chained commit's coordinator (None outside a chain): tentative
+        replication ships it so a promoting follower knows whom to ask."""
         blocked = 0
         for name, _entries in items:
             if self._acc(txn, name).wait_termination(timeout):
@@ -1014,6 +1091,7 @@ class NodeCore:
             acc = self._acc(txn, name)
             if entries:
                 acc.log.entries = list(entries)
+            acc.repl_origin = origin
             acc.commit_prep()
         bad = [name for name, _e in items
                if not self._acc(txn, name).valid()]
@@ -1029,22 +1107,169 @@ class NodeCore:
             self._op_finish_batch(txn, [n for n, _e in items], end=True)
         return res
 
+    # -- chained commit decision (DESIGN.md §8) ------------------------------
+    def _op_commit_wave(self, txn: str, items: List[tuple],
+                        timeout: Optional[float] = None,
+                        chain: List[dict] = (),
+                        origin: Optional[str] = None) -> Dict[str, Any]:
+        """One hop of the chained commit wave: steps 2-4 for this node,
+        then forward the remaining per-node batches server-to-server. A
+        bad verdict short-circuits (no decision can follow, so running the
+        remaining waves buys nothing — the client's abort path converges
+        every node either way). A dead downstream node raises back along
+        the chain to the coordinator, which surfaces it to the client."""
+        res = self._op_commit_wave1(txn, items, timeout, origin=origin)
+        blocked, bad = res["blocked"], list(res["bad"])
+        if not bad and chain:
+            nxt, rest = chain[0], list(chain[1:])
+            sub = self._peer(nxt["address"]).call(
+                "commit_wave", txn=txn, items=nxt["items"], timeout=timeout,
+                chain=rest, origin=origin)
+            blocked += sub["blocked"]
+            bad.extend(sub["bad"])
+        return {"blocked": blocked, "bad": bad}
+
+    def _op_commit_chain(self, txn: str, items: List[tuple],
+                         timeout: Optional[float] = None,
+                         chain: List[dict] = ()) -> Dict[str, Any]:
+        """The coordinator end of the chained multi-domain commit: ONE
+        client RPC covers steps 2-5 for *every* remote domain.
+
+        This node (first in global domain order) runs its own wave, chains
+        the remaining waves server-to-server, and — iff every domain
+        validated — makes the commit decision *here*, not at the client:
+        record it, replicate it to this node's own followers (with the
+        remaining decision chain, so the decision survives this node), then
+        terminate locally and drive the decision chain. The client merely
+        learns the outcome; its crash after send can no longer leave a
+        partially terminated commit (the §3.4 step-5 window, now CLOSED).
+        """
+        res = self._op_commit_wave(txn, items, timeout=timeout, chain=chain,
+                                   origin=self.address)
+        if res["bad"]:
+            return {"blocked": res["blocked"], "bad": res["bad"],
+                    "decided": False}
+        decision_chain = [{"address": e["address"],
+                           "names": [n for n, _e in e["items"]],
+                           "followers": e.get("followers") or {}}
+                          for e in chain]
+        self.replication.record_decision(txn, "commit", decision_chain)
+        self.replication.broadcast_decision(txn, decision_chain)
+        try:
+            self._op_finish_batch(txn, [n for n, _e in items],
+                                  best_effort=True, end=True)
+        except TransactionError as e:
+            # A §3.4 expiry raced the decision (detector timeout ≪ commit
+            # latency — misconfiguration): epochs keep state consistent,
+            # the commit still drives to completion everywhere else.
+            log.warning("coordinator-local finish failed for %r: %r", txn, e)
+        self._drive_decision(txn, decision_chain)
+        return {"blocked": res["blocked"], "bad": [], "decided": True}
+
+    def _op_commit_decide(self, txn: str, names: List[str],
+                          followers: Optional[Dict[str, List[str]]] = None,
+                          chain: List[dict] = ()) -> Dict[str, Any]:
+        """One hop of the chained commit *decision* (step 5): record the
+        decision (idempotent, first-writer-wins), finish the local batch if
+        this node holds the session (primary path) — a follower that was
+        promoted mid-commit instead applies its buffered tentatives via the
+        decision ledger — and forward one hop. An unreachable downstream
+        node is reported back to the driver as ``failed_chain`` for
+        redirection to that node's followers."""
+        self.replication.record_decision(txn, "commit")
+        with self._lock:
+            has_session = txn in self._sessions
+        # A redirect can land here with a *dead* node's names while this
+        # node holds a live session for the same txn (it was a participant
+        # domain too): finish only names actually bound here, and keep the
+        # session open unless this hop covers its own full batch — the
+        # node's own decide hop is still in flight.
+        local = [n for n in names if self.has_binding(n)]
+        if has_session and local:
+            try:
+                self._op_finish_batch(txn, local, best_effort=True,
+                                      end=len(local) == len(names))
+            except TransactionError as e:
+                log.warning("decision finish failed for %r on %s: %r",
+                            txn, self.node_name, e)
+        if not chain:
+            return {}
+        nxt, rest = chain[0], list(chain[1:])
+        try:
+            sub = self._peer(nxt["address"]).call(
+                "commit_decide", txn=txn, names=nxt["names"],
+                followers=nxt.get("followers"), chain=rest) or {}
+        except Exception:  # noqa: BLE001 - downstream node died mid-chain
+            return {"failed_chain": [dict(e) for e in chain]}
+        if sub.get("failed_chain"):
+            return {"failed_chain": sub["failed_chain"]}
+        return {}
+
+    def _drive_decision(self, txn: str, chain: List[dict]) -> None:
+        """Drive the commit decision down the chain, redirecting around
+        dead nodes: when a hop fails, the failed entry's names get the
+        decision delivered directly to their replica followers (idempotent
+        — the ledger is first-writer-wins) and the drive continues with the
+        rest of the chain. Best-effort by design: every alive node with a
+        stake in ``txn`` ends up with the decision; names whose primary
+        died with no replica configured die with it (documented residual).
+        """
+        chain = [dict(e) for e in chain]
+        for _ in range(len(chain) + 4):
+            if not chain:
+                return
+            nxt, rest = chain[0], chain[1:]
+            try:
+                sub = self._peer(nxt["address"]).call(
+                    "commit_decide", txn=txn, names=nxt["names"],
+                    followers=nxt.get("followers"), chain=rest) or {}
+                failed = sub.get("failed_chain")
+            except Exception:  # noqa: BLE001 - first hop died
+                failed = chain
+            if not failed:
+                return
+            entry, chain = dict(failed[0]), [dict(e) for e in failed[1:]]
+            self._redirect_decision(txn, entry)
+        log.warning("decision drive for %r did not converge", txn)
+
+    def _redirect_decision(self, txn: str, entry: Dict[str, Any]) -> None:
+        """Deliver the commit decision for a dead node's names to their
+        replica followers, first-alive-in-order (the same order every
+        client's failover uses, so primaries converge deterministically)."""
+        followers = entry.get("followers") or {}
+        for name in entry["names"]:
+            fl = list(followers.get(name) or ())
+            for addr in fl:
+                try:
+                    self._peer(addr).call(
+                        "commit_decide", txn=txn, names=[name],
+                        followers={name: fl}, chain=[])
+                    break
+                except Exception:  # noqa: BLE001 - try the next follower
+                    continue
+            else:
+                log.warning("commit decision for %r undeliverable for %r "
+                            "(primary dead, no live replica)", txn, name)
+
     def _op_rollback(self, txn: str, name: str) -> None:
         acc = self._acc(txn, name)
         acc.mark_aborted()     # a stale commit wave must not apply after us
         acc.rollback()
+        self.replication.on_abort(txn, name)
 
     def _op_rollback_batch(self, txn: str, names: List[str]) -> None:
         for name in names:
             acc = self._acc(txn, name)
             acc.mark_aborted()
             acc.rollback()
+            self.replication.on_abort(txn, name)
 
     def _op_terminate(self, txn: str, name: str) -> None:
         acc = self._acc(txn, name)
         acc.terminate()
         with acc.lock:
             acc.released = True
+        self.replication.on_terminate(txn, name)
 
     def _op_finish_batch(self, txn: str, names: List[str],
                          best_effort: bool = False,
@@ -1064,6 +1289,7 @@ class NodeCore:
                 acc.terminate()
                 with acc.lock:
                     acc.released = True
+                self.replication.on_terminate(txn, name)
             except TransactionError as e:
                 if not best_effort:
                     raise
@@ -1119,6 +1345,13 @@ class NodeCore:
             # version wedges every successor forever.
             self._expire_session(session)
         else:
+            # A dispense handler for this very transaction may still be
+            # parked on a gate (chained start whose head node died before
+            # this close-out arrived): flag the popped session so the
+            # handler's post-gate re-check skips whatever it dispenses
+            # into it — otherwise those gates and versions leak in a
+            # ghost session no reaper ever visits.
+            session.expired = True
             self._release_gates(session)
 
     def _op_abandon(self, txn: str) -> None:
@@ -1129,12 +1362,58 @@ class NodeCore:
         if session is not None:
             self._expire_session(session)
 
+    # -- replica chains + failover (DESIGN.md §8) ----------------------------
+    def _op_repl_init(self, **kw: Any) -> None:
+        self.replication.repl_init(**kw)
+
+    def _op_repl_apply(self, **kw: Any) -> None:
+        self.replication.repl_apply(**kw)
+
+    def _op_repl_final(self, **kw: Any) -> None:
+        self.replication.repl_final(**kw)
+
+    def _op_repl_drop(self, **kw: Any) -> None:
+        self.replication.repl_drop(**kw)
+
+    def _op_repl_decision(self, **kw: Any) -> None:
+        self.replication.repl_decision(**kw)
+
+    def _op_promote(self, names: List[str]) -> Dict[str, List[str]]:
+        """Caller-driven failover: try to become primary for ``names``
+        (idempotent). See :meth:`ReplicationManager.promote`."""
+        return self.replication.promote(list(names))
+
+    def _op_txn_status(self, txn: str) -> str:
+        """The coordinator's decision memo, queried by a promoting
+        follower before it dooms an undecided tentative: ``commit`` /
+        ``abort`` (decided), ``pending`` (session still live here — the
+        decision is coming; retry), or ``none`` (never heard of it, or
+        already expired without deciding: dooming is safe)."""
+        d = self.replication.decision_of(txn)
+        if d is not None:
+            return d
+        with self._lock:
+            live = txn in self._sessions
+        return "pending" if live else "none"
+
+    def _op_txn_decision(self, txn: str) -> str:
+        """A recovering client (its coordinator died mid-commit) asks a
+        follower of the coordinator for the transaction's fate. ``commit``
+        additionally re-drives the recorded decision chain so every
+        surviving participant terminates; no recorded decision dooms the
+        transaction to abort (first-writer-wins)."""
+        d, chain = self.replication.txn_decision(txn)
+        if d == "commit" and chain:
+            self._drive_decision(txn, chain)
+        return d
+
     # -- introspection / control (tests, benchmarks) -------------------------
     def _op_stats(self) -> Dict[str, Any]:
         with self._lock:
             sessions = len(self._sessions)
         return {"node": self.node_name, "sessions": sessions,
-                "rollbacks": list(self.monitor.rollbacks)}
+                "rollbacks": list(self.monitor.rollbacks),
+                "repl_sent": self.replication.n_sent}
 
 
 
@@ -1158,7 +1437,8 @@ class NodeServer(NodeCore):
         "finish_batch", "rollback_batch", "end_txn", "release_version_locks",
         "ensure_checkpoint", "buffer_snapshot", "snap_release", "stats",
         "touch", "clear_holder", "heartbeat", "abandon", "ro_buffer",
-        "lw_apply",
+        "lw_apply", "repl_init", "repl_apply", "repl_final", "repl_drop",
+        "repl_decision", "txn_status",
     })
 
     #: wire v3 ships bulk payloads as out-of-band segments.
@@ -1581,9 +1861,19 @@ def main(argv: Optional[List[str]] = None) -> None:
                         monitor_timeout=args.monitor_timeout,
                         monitor_poll=args.monitor_poll,
                         executor_workers=args.workers)
+    # start (and in particular listen()) BEFORE announcing: the parent
+    # connects the moment it reads the line, and must not race the accept
+    # loop into a connection refusal.
+    server.start()
     if args.announce:
         print(f"LISTENING {server.address}", flush=True)
-    server.serve_forever()
+    try:
+        while not server._stop.wait(0.2):
+            pass
+    except KeyboardInterrupt:  # pragma: no cover
+        pass
+    finally:
+        server.stop()
 
 
 if __name__ == "__main__":

@@ -55,8 +55,19 @@ the labeled protocol steps of interest:
   and a session for a client that no longer exists;
 * ``open_call`` after_send      — mid-(chained-)open;
 * ``lw_apply`` after_send       — during §2.8.4 last-write application;
-* ``finish_batch`` before_send  — between commit wave 1 and terminate:
-  logs applied and objects released, but never terminated.
+* ``commit_chain`` before_send  — the client dies without ever asking for
+  a commit: full §3.4 rollback everywhere;
+* ``commit_chain`` after_send   — the client dies with the commit request
+  in flight: the coordinator decides and drives steps 2-5 autonomously
+  (the chained commit decision, DESIGN.md §8 — the old client-driven
+  step-5 partial-commit window is CLOSED; the transfer applies everywhere
+  or nowhere).
+
+:meth:`SimNet.inject_node_crash` instead crashes a home *node* at the nth
+delivery of a chosen op — ``commit_chain`` / ``commit_wave`` /
+``commit_decide`` / ``repl_apply`` / ``repl_final`` — exercising the
+decision chain's redirect-around-dead-nodes path and the replica chain's
+follower promotion at every protocol step.
 
 A crashed client sends nothing further (its cleanup raises
 :class:`SimCrash`, a BaseException, so no abort-path RPC can leak out —
@@ -247,6 +258,11 @@ class SimTransport(Transport):
             self._active_txns.add(txn_uid)
         self.simnet._arm_heartbeat(self)
 
+    def sleep(self, seconds: float) -> None:
+        """Transport-clocked backoff (failover grace / promote retries):
+        virtual time inside the simulation, a short native wait outside."""
+        self.simnet.sleep(seconds)
+
     def close(self) -> None:
         self.alive = False
 
@@ -388,6 +404,8 @@ class SimNet:
         self._all_handlers: List[_Actor] = []
         self._injections: List[dict] = []
         self._op_counts: Dict[Tuple[str, str], int] = {}
+        self._node_injections: List[dict] = []
+        self._node_op_counts: Dict[Tuple[str, str], int] = {}
         self._crashed_clients: Dict[str, str] = {}   # client_id -> label
         self.fired_injections: List[str] = []
         self._sched_sem = threading.Semaphore(0)
@@ -452,6 +470,41 @@ class SimNet:
     def crash_node_at(self, node_name: str, at: float) -> None:
         """Crash-stop a home node at virtual time ``at``."""
         self._push(at, "node_crash", node_name)
+
+    def inject_node_crash(self, node_name: str, op: str, nth: int = 1,
+                          phase: str = "before_deliver",
+                          label: Optional[str] = None) -> None:
+        """Crash-stop a home node at the ``nth`` delivery of ``op`` to it
+        (any sender — client or server-to-server peer link). With
+        ``before_deliver`` the message is lost with the node (the caller's
+        in-flight future fails, §3.4); with ``after_deliver`` the node
+        crashes right after its handler's synchronous slice — i.e. after
+        the op ran, or mid-op at its first blocking point. Targets the
+        chained-commit / replication steps: ``commit_chain`` (coordinator),
+        ``commit_wave`` (mid-wave), ``commit_decide`` (mid-decision-chain),
+        ``repl_apply`` / ``repl_final`` (replica chain)."""
+        assert phase in ("before_deliver", "after_deliver"), phase
+        self._node_injections.append({
+            "node": node_name, "op": op, "nth": nth, "phase": phase,
+            "fired": False,
+            "label": label or f"{node_name}:{op}/{phase}#{nth}"})
+
+    def _check_node_injection(self, node: "SimNode", op: str) -> None:
+        if not self._node_injections or not node.alive:
+            return
+        key = (node.node_name, op)
+        self._node_op_counts[key] = n = self._node_op_counts.get(key, 0) + 1
+        for spec in self._node_injections:
+            if (spec["node"] == node.node_name and spec["op"] == op
+                    and spec["nth"] == n and not spec["fired"]):
+                spec["fired"] = True
+                self.fired_injections.append(spec["label"])
+                if spec["phase"] == "before_deliver":
+                    self._do_node_crash(node.node_name)
+                else:
+                    # Fires after the delivering handler's synchronous
+                    # slice (the scheduler pops it next).
+                    self._push(self._now, "node_crash", node.node_name)
 
     def _check_injection(self, t: SimTransport, op: str, phase: str) -> None:
         if t.client_id.startswith("peer:") or not self._injections:
@@ -783,6 +836,7 @@ class SimNet:
             node._client_vanished(t.client_id)
             return
         op, (kwargs, fut) = a, b
+        self._check_node_injection(node, op)
         if not node.alive:
             self._trace(f"drop {t.client_id}->{node.node_name} "
                         f"{self._msg_label(req_id, op, kwargs)} (node dead)")

@@ -36,6 +36,7 @@ import os
 import pickle
 import socket
 import threading
+import time
 import uuid
 from typing import Any, Dict, List, Optional, Set, Tuple
 
@@ -156,6 +157,11 @@ class Transport:
     def register_txn(self, txn_uid: str) -> None:
         """Track a live transaction (presence + heartbeat setup)."""
         raise NotImplementedError
+
+    def sleep(self, seconds: float) -> None:
+        """Transport-clocked backoff (failover promote retries): real time
+        on TCP, virtual time under the simulation transport."""
+        time.sleep(seconds)
 
     def close(self) -> None:
         raise NotImplementedError

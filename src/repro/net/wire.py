@@ -42,6 +42,13 @@ complete). A reply whose ``req_id`` is unknown (e.g. arriving after a
 client-side timeout abandoned the call) is dropped with a log line, never
 an error.
 
+Server-to-server traffic (chain dispensing, the chained commit decision
+``commit_wave``/``commit_decide`` hops, and the replication one-ways
+``repl_apply``/``repl_final``/``repl_drop``/``repl_decision`` — DESIGN.md
+§8) rides the exact same tagged frames: ops are strings, so the protocol
+needs no new frame kinds, and FIFO per connection is what the replica
+chain's tentative-before-decision ordering argument leans on.
+
 A zero-length read means the peer closed the socket — the transport's
 crash-stop signal (§3.4), surfaced as :class:`ConnectionClosed` and mapped
 by the client onto :class:`~repro.core.api.RemoteObjectFailure`.

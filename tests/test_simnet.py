@@ -86,8 +86,8 @@ def test_sim_same_seed_replays_byte_identical():
 def test_sim_crash_injection_points(label, op, phase):
     """Each labeled §3.4 crash point: injection fires, money is conserved,
     survivors make progress, version chains converge, trace replays."""
-    seed = {"mid-dispense": 4, "mid-open": 1, "lw-apply": 2,
-            "pre-terminate": 7}[label]
+    seed = {"mid-dispense": 5, "mid-open": 1, "lw-apply": 2,
+            "pre-commit": 8, "post-commit": 4}[label]
     res = simsweep.run_seed(seed)
     assert res["injected"] == label
     assert res["failures"] == [], res["failures"]
@@ -97,7 +97,7 @@ def test_sim_crash_injection_points(label, op, phase):
 
 
 def test_sim_sweep_small_block():
-    """A contiguous seed block passes all invariants and covers all four
+    """A contiguous seed block passes all invariants and covers all five
     injection points (the PR-sized CI job runs the larger version)."""
     labels = set()
     for seed in range(24):
@@ -105,7 +105,7 @@ def test_sim_sweep_small_block():
         assert res["failures"] == [], (seed, res["failures"])
         if res["injected"]:
             labels.add(res["injected"])
-    assert len(labels) >= 4, labels
+    assert labels == {lbl for lbl, _op, _ph in simsweep.INJECTION_POINTS}, labels
 
 
 def test_sim_node_crash_fails_over():
