@@ -26,7 +26,9 @@ real). Only ``optsva-cf`` runs over TCP.
 from __future__ import annotations
 
 import argparse
+import os
 import random
+import sys
 import threading
 import time
 from dataclasses import dataclass, field
@@ -312,6 +314,11 @@ FRAMEWORKS: Dict[str, Callable] = {
 #: (``holder.obj``) and stay in-proc.
 TCP_FRAMEWORKS = ("optsva-cf",)
 
+#: trace events pulled from TCP node-server processes (``trace_dump``) —
+#: their rings die with the subprocess, so run_benchmark drains them
+#: before teardown and ``--trace-out`` merges them at export time.
+_TRACE_EXTRA: List[dict] = []
+
 
 def _build_inproc(cfg: EigenConfig):
     """In-process topology: Registry nodes with simulated network delay."""
@@ -558,6 +565,18 @@ def run_benchmark(framework: str, cfg: EigenConfig,
                 n_rpc += c.n_rpc
                 n_oneway += c.n_oneway
                 n_handoff += c.n_handoff
+        from repro.obs import txtrace
+        if txtrace.enabled:
+            # Server-side rings live in the node subprocesses: pull them
+            # now — teardown kills the processes. Issued only under
+            # --trace-out, never on the gated bench hot path.
+            for node in reg.nodes:
+                c = getattr(node, "client", None)
+                if c is not None:
+                    try:
+                        _TRACE_EXTRA.extend(c.call("trace_dump"))
+                    except Exception:  # noqa: BLE001 - trace is best-effort
+                        pass
     teardown()
 
     commits = sum(s["commits"] for s in stats_per_client)
@@ -614,7 +633,19 @@ def main() -> None:
     ap.add_argument("--op-ms", type=float, default=0.3)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale parameters (slow)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a merged Perfetto/Chrome trace of the run "
+                         "to PATH (load at ui.perfetto.dev). Under "
+                         "--transport sim the trace is byte-identical per "
+                         "seed; under tcp node-server rings are pulled "
+                         "over the wire before teardown.")
     args = ap.parse_args()
+
+    if args.trace_out:
+        # Before any server spawns: subprocesses inherit the env flag.
+        os.environ["REPRO_TRACE"] = "1"
+        from repro.obs import txtrace
+        txtrace.enable()
 
     r, w = (int(x) for x in args.scenario.split(":"))
     read_pct = r / (r + w)
@@ -658,6 +689,11 @@ def main() -> None:
                   f"{res.abort_rate_pct:.1f},{res.commits},{res.aborts},"
                   f"{res.retries},{res.waits},{res.rpcs_per_txn},"
                   f"{res.handoffs_per_txn}")
+
+    if args.trace_out:
+        from repro.obs import export
+        n = export.write_trace(args.trace_out, extra_events=_TRACE_EXTRA)
+        print(f"# trace: {n} events -> {args.trace_out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -170,7 +170,7 @@ def bench_scheduler_overhead(full: bool = False,
 # Transport-overhead bench (PR2, re-measured per PR): in-proc vs real TCP wire #
 # --------------------------------------------------------------------------- #
 def bench_transport_overhead(full: bool = False,
-                             out: str = "BENCH_PR6.json") -> None:
+                             out: str = "BENCH_PR7.json") -> None:
     """Per-transaction cost of the real wire (``repro.net``), honestly.
 
     The same Eigenbench schedule (read-dominated 9:1 — the paper's
@@ -191,6 +191,8 @@ def bench_transport_overhead(full: bool = False,
     """
     import benchmarks.eigenbench as eb
     from benchmarks.report import write_bench_json
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import txtrace
 
     txns = 6 if full else 4
     repeats = 7 if full else 5          # shared-box scheduling noise: medians
@@ -225,8 +227,25 @@ def bench_transport_overhead(full: bool = False,
         # of the seed), exact to the message. This is the primary signal
         # of the CI bench-delta gate; the wall-clock rows above are the
         # warn-only secondary (shared-host scheduling noise swings them
-        # 2-4x between windows, CHANGES.md PR 3/4).
-        r_sim = eb.run_benchmark("optsva-cf", cfg, transport="sim")
+        # 2-4x between windows, CHANGES.md PR 3/4). Obs is enabled just
+        # for this run: it adds zero protocol messages (the rings are
+        # in-process, test_disabled_tracing_changes_no_wire_metrics), and
+        # its histograms read the *virtual* clock — so the gate-wait and
+        # version-handoff medians below are deterministic per seed too
+        # (warn-only gated by check_bench_delta, latency trajectory).
+        was_on = txtrace.enabled
+        txtrace.reset()
+        obs_metrics.reset()
+        txtrace.enable()
+        try:
+            r_sim = eb.run_benchmark("optsva-cf", cfg, transport="sim")
+        finally:
+            if not was_on:
+                txtrace.disable()
+        gate_p50 = obs_metrics.merged_percentile("gate_wait_us", 0.5)
+        handoff_p50 = obs_metrics.merged_percentile("handoff_us", 0.5)
+        txtrace.reset()
+        obs_metrics.reset()
         overhead = tcp_us - inproc_us
         factor = tcp_us / inproc_us if inproc_us else 0.0
         for transport, us, r in (("inproc", inproc_us, r_in),
@@ -253,7 +272,9 @@ def bench_transport_overhead(full: bool = False,
                        f"replication_oneways_per_txn="
                        f"{r_sim.replication_oneways_per_txn};"
                        f"commits={r_sim.commits};aborts={r_sim.aborts};"
-                       f"waits={r_sim.waits}")
+                       f"waits={r_sim.waits};"
+                       f"gate_wait_p50_us={gate_p50};"
+                       f"handoff_p50_us={handoff_p50}")
         emit(f"transport/{cname}/sim", 0.0, sim_derived)
         json_rows.append({
             "name": f"transport/{cname}/sim", "transport": "sim",
@@ -263,9 +284,11 @@ def bench_transport_overhead(full: bool = False,
             "rpcs_per_txn": r_sim.rpcs_per_txn,
             "oneways_per_txn": r_sim.oneways_per_txn,
             "replication_oneways_per_txn":
-                r_sim.replication_oneways_per_txn})
+                r_sim.replication_oneways_per_txn,
+            "gate_wait_p50_us": gate_p50,
+            "handoff_p50_us": handoff_p50})
     write_bench_json(out, json_rows, meta={
-        "bench": "transport_overhead", "pr": 6, "op_time_ms": 0.0,
+        "bench": "transport_overhead", "pr": 7, "op_time_ms": 0.0,
         "txns_per_client": txns, "repeats": repeats,
         "note": ("tcp = one node-server subprocess per registry node "
                  "(repro.net), honest wire over the multiplexed pipelined "
@@ -276,7 +299,10 @@ def bench_transport_overhead(full: bool = False,
                  "by check_bench_delta. us_per_call is wall-clock per "
                  "committed transaction, median of `repeats` runs. "
                  "rpcs/oneways/handoffs are client-side message counts "
-                 "per committed transaction from the median run.")})
+                 "per committed transaction from the median run. "
+                 "gate_wait_p50_us / handoff_p50_us are obs-registry "
+                 "(repro.obs.metrics) medians from the sim run's virtual "
+                 "clock — deterministic per seed, warn-only gated.")})
 
 
 # --------------------------------------------------------------------------- #
@@ -341,7 +367,7 @@ def main() -> None:
                          "fig13,roofline,step")
     ap.add_argument("--bench-out", default="BENCH_PR1.json",
                     help="JSON trajectory point for the sched table")
-    ap.add_argument("--transport-out", default="BENCH_PR6.json",
+    ap.add_argument("--transport-out", default="BENCH_PR7.json",
                     help="JSON trajectory point for the transport table "
                          "(per-PR: pass BENCH_PR<n>.json for PR n)")
     args = ap.parse_args()

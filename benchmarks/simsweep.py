@@ -41,6 +41,8 @@ Usage::
     python -m benchmarks.simsweep --seeds 200                  # PR gate
     python -m benchmarks.simsweep --seeds 100 --node-faults    # failover gate
     python -m benchmarks.simsweep --seeds 5000 --trace-dir sim_traces
+    python -m benchmarks.simsweep --seeds 200 --trace-dir sim_traces \
+        --trace-failing          # + Perfetto span trace per failing seed
     python -m benchmarks.simsweep --seed 1234 --print-trace    # replay one
 """
 from __future__ import annotations
@@ -339,9 +341,32 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
     return out
 
 
+def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
+                             node_faults: bool) -> None:
+    """Replay a failing seed with txtrace enabled and export the merged
+    Perfetto span trace next to its schedule trace. The schedule is a
+    pure function of the seed, so the replay reproduces the failure and
+    the span trace shows *where* each transaction spent its time when it
+    went wrong (open it at ui.perfetto.dev)."""
+    from repro.obs import export, txtrace
+
+    was_enabled = txtrace.enabled
+    txtrace.reset()
+    txtrace.enable()
+    try:
+        run_seed(seed, faults=faults, node_faults=node_faults)
+    finally:
+        if not was_enabled:
+            txtrace.disable()
+    n = export.write_trace(str(out))
+    txtrace.reset()
+    print(f"  span trace ({n} events) -> {out}")
+
+
 def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
           replay_check: int = 10,
-          trace_dir: Optional[str] = None) -> int:
+          trace_dir: Optional[str] = None,
+          trace_failing: bool = False) -> int:
     failed: List[Dict[str, Any]] = []
     coverage: Dict[str, int] = {}
     replayed = 0
@@ -363,6 +388,10 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
                 d.mkdir(parents=True, exist_ok=True)
                 (d / f"seed-{seed}.trace").write_text(res["trace"])
                 print(f"  trace -> {d / f'seed-{seed}.trace'}")
+                if trace_failing:
+                    _span_trace_failing_seed(
+                        seed, d / f"seed-{seed}.trace.json",
+                        faults=faults, node_faults=node_faults)
             else:
                 print("  --- replayable schedule (tail) ---")
                 for line in res["trace"].splitlines()[-40:]:
@@ -405,6 +434,10 @@ def main() -> None:
                          "byte-identical traces")
     ap.add_argument("--trace-dir", default=None,
                     help="write failing-seed traces here (CI artifact dir)")
+    ap.add_argument("--trace-failing", action="store_true",
+                    help="with --trace-dir: replay each failing seed with "
+                         "span tracing on and write the merged Perfetto "
+                         "trace (seed-<n>.trace.json) beside its schedule")
     ap.add_argument("--print-trace", action="store_true",
                     help="with --seed: print the full schedule trace")
     args = ap.parse_args()
@@ -423,7 +456,8 @@ def main() -> None:
                    faults=not args.no_faults,
                    node_faults=args.node_faults,
                    replay_check=args.replay_check,
-                   trace_dir=args.trace_dir))
+                   trace_dir=args.trace_dir,
+                   trace_failing=args.trace_failing))
 
 
 if __name__ == "__main__":

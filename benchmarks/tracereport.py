@@ -1,0 +1,199 @@
+"""Per-phase latency decomposition of a merged transaction trace.
+
+Reads a Perfetto/Chrome trace written by ``eigenbench --trace-out`` (or
+``repro.obs.export.write_trace``) and decomposes each transaction's
+client-observed window into disjoint phases:
+
+* **dispense**   — server-side 2PL batched version dispensing (§2.10.2);
+* **gate-wait**  — blocked on the access condition ``pv-1 <= lv``;
+* **version-wait** — blocked on the commit condition ``pv-1 <= ltv``;
+* **service**    — method execution against live state / buffer tasks;
+* **commit**     — commit-protocol server work net of waits and service;
+* **server-other** — remaining server-side time (marshalling, bookkeeping);
+* **wire**       — client RPC time not covered by any server span;
+* **client-local** — the rest of the window (plan exec, local buffers).
+
+The phases are computed as nested interval-set subtractions of the client
+``txn`` span, so they **sum to the window exactly** by construction (the
+report prints the residual, which is 0 up to float rounding — well inside
+the 1% acceptance bound). ``vwait`` spans carry no transaction id (the
+version gate knows only the private version); they are attributed by
+interval containment inside the transaction's own server op spans, which
+is exact under the simulation transport's serial execution.
+
+Usage::
+
+    python benchmarks/tracereport.py trace.json [--top 10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Tuple
+
+Iv = Tuple[float, float]          # half-open interval [start, end), in us
+
+#: server op spans that belong to the commit protocol (DESIGN.md §8)
+_COMMIT_OPS = frozenset({
+    "commit_wave1", "commit_solo", "commit_chain", "commit_decide",
+    "commit_decision", "finish_batch", "wait_termination_batch",
+})
+
+
+def _union(ivs: List[Iv]) -> List[Iv]:
+    """Normalize to a sorted disjoint union."""
+    out: List[Iv] = []
+    for s, e in sorted(ivs):
+        if e <= s:
+            continue
+        if out and s <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], e))
+        else:
+            out.append((s, e))
+    return out
+
+
+def _clip(ivs: List[Iv], w: Iv) -> List[Iv]:
+    s0, e0 = w
+    return _union([(max(s, s0), min(e, e0)) for s, e in ivs
+                   if min(e, e0) > max(s, s0)])
+
+
+def _subtract(a: List[Iv], b: List[Iv]) -> List[Iv]:
+    """a \\ b, both disjoint unions."""
+    out: List[Iv] = []
+    for s, e in a:
+        cur = s
+        for bs, be in b:
+            if be <= cur or bs >= e:
+                continue
+            if bs > cur:
+                out.append((cur, bs))
+            cur = max(cur, be)
+            if cur >= e:
+                break
+        if cur < e:
+            out.append((cur, e))
+    return out
+
+
+def _total(ivs: List[Iv]) -> float:
+    return sum(e - s for s, e in ivs)
+
+
+def load_spans(path: str) -> Tuple[Dict[int, str], List[dict]]:
+    with open(path) as f:
+        doc = json.load(f)
+    sites: Dict[int, str] = {}
+    spans: List[dict] = []
+    for e in doc["traceEvents"]:
+        if e["ph"] == "M" and e.get("name") == "process_name":
+            sites[e["pid"]] = e["args"]["name"]
+        elif e["ph"] == "X":
+            spans.append(e)
+    for e in spans:
+        e["site"] = sites.get(e["pid"], f"pid{e['pid']}")
+    return sites, spans
+
+
+def _phases_for(txn: str, spans: List[dict]) -> Dict[str, float]:
+    mine = [e for e in spans if e["args"].get("txn") == txn]
+    win = [e for e in mine if e["name"] == "txn"
+           and e["site"].startswith("client")]
+    if not win:
+        return {}
+    w: Iv = (win[0]["ts"], win[0]["ts"] + win[0]["dur"])
+    iv = lambda e: (float(e["ts"]), float(e["ts"] + e["dur"]))  # noqa: E731
+    node = lambda e: not e["site"].startswith("client")         # noqa: E731
+
+    rpc = _clip([iv(e) for e in mine if e["name"] == "rpc"], w)
+    ops = [e for e in mine if node(e) and e["args"].get("detail") == "op"]
+    ops_iv = _clip([iv(e) for e in ops], w)
+    svc = _clip([iv(e) for e in mine
+                 if e["name"] in ("service", "ro_buffer", "lw_apply")], w)
+
+    # vwait spans carry pv, not txn: attribute by containment in this
+    # transaction's own server op spans (exact under sim's serial exec).
+    def contained(e) -> bool:
+        s, t = iv(e)
+        return any(os_ <= s and t <= oe for os_, oe in ops_iv)
+
+    vw_all = [e for e in spans if e["name"] == "vwait" and node(e)]
+    gate = _clip([iv(e) for e in vw_all
+                  if e["args"].get("detail", "").startswith("access")
+                  and contained(e)], w)
+    term = _clip([iv(e) for e in vw_all
+                  if e["args"].get("detail", "").startswith("termination")
+                  and contained(e)], w)
+
+    server = _union(ops_iv + svc)
+    dispense = [iv(e) for e in ops if e["name"] == "dispense_batch"]
+    commit = [iv(e) for e in ops if e["name"] in _COMMIT_OPS]
+
+    # Nested subtraction: each phase removes what earlier phases claimed,
+    # so the eight buckets partition the window exactly.
+    out: Dict[str, float] = {"total": _total([w])}
+    claimed: List[Iv] = []
+
+    def phase(name: str, ivs: List[Iv]) -> None:
+        nonlocal claimed
+        part = _subtract(_clip(_union(ivs), w), claimed)
+        out[name] = _total(part)
+        claimed = _union(claimed + part)
+
+    phase("gate_wait", gate)
+    phase("version_wait", term)
+    phase("service", svc)
+    phase("dispense", dispense)
+    phase("commit", commit)
+    phase("server_other", server)
+    phase("wire", rpc)
+    out["client_local"] = _total(_subtract([w], claimed))
+    return out
+
+
+def report(path: str, top: int = 0) -> Dict[str, float]:
+    _sites, spans = load_spans(path)
+    txns = sorted({e["args"].get("txn") for e in spans
+                   if e["name"] == "txn" and e["args"].get("txn")},
+                  key=lambda t: int(t[1:]) if t[1:].isdigit() else 0)
+    keys = ["dispense", "gate_wait", "version_wait", "service", "commit",
+            "server_other", "wire", "client_local", "total"]
+    agg = {k: 0.0 for k in keys}
+    rows = []
+    for t in txns:
+        ph = _phases_for(t, spans)
+        if not ph:
+            continue
+        for k in keys:
+            agg[k] += ph[k]
+        rows.append((t, ph))
+
+    hdr = "txn        " + "".join(f"{k:>14}" for k in keys)
+    print(hdr)
+    print("-" * len(hdr))
+    shown = rows if top <= 0 else sorted(
+        rows, key=lambda r: -r[1]["total"])[:top]
+    for t, ph in shown:
+        print(f"{t:<11}" + "".join(f"{ph[k]:>14.1f}" for k in keys))
+    print("-" * len(hdr))
+    print(f"{'SUM (us)':<11}" + "".join(f"{agg[k]:>14.1f}" for k in keys))
+    parts = sum(agg[k] for k in keys if k != "total")
+    resid = abs(parts - agg["total"]) / max(agg["total"], 1e-9)
+    print(f"# phases sum to {parts:.1f} of total {agg['total']:.1f} "
+          f"(residual {100 * resid:.4f}%)")
+    agg["residual_pct"] = 100 * resid
+    return agg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="merged trace JSON (eigenbench --trace-out)")
+    ap.add_argument("--top", type=int, default=0,
+                    help="show only the N slowest transactions (0 = all)")
+    args = ap.parse_args()
+    report(args.trace, args.top)
+
+
+if __name__ == "__main__":
+    main()

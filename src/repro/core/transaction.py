@@ -55,6 +55,8 @@ from .executor import Task
 from .registry import Node, Registry, SharedObject
 from .versioning import skip_version
 
+from repro.obs import txtrace as _txtrace
+
 _txn_ids = itertools.count(1)
 
 
@@ -140,6 +142,14 @@ class ObjectAccess:
         """§2.7 task body: snapshot to ``buf``, then release immediately.
         Shared with the node server's session records, which subclass this
         access and wrap the body with §3.4 expiry checks."""
+        if _txtrace.enabled:
+            t0 = self._obs_tracer().now()
+            self._ro_buffer_body()
+            self._obs_span("ro_buffer", t0, detail=self.shared.name)
+        else:
+            self._ro_buffer_body()
+
+    def _ro_buffer_body(self) -> None:
         shared = self.shared
         with shared.header.lock:
             inst = shared.header.instance
@@ -154,6 +164,14 @@ class ObjectAccess:
 
     def _lw_apply_code(self) -> None:
         """§2.8.4 task body: checkpoint, apply the write log, release."""
+        if _txtrace.enabled:
+            t0 = self._obs_tracer().now()
+            self._lw_apply_body()
+            self._obs_span("lw_apply", t0, detail=self.shared.name)
+        else:
+            self._lw_apply_body()
+
+    def _lw_apply_body(self) -> None:
         shared = self.shared
         with shared.header.lock:
             inst = shared.header.instance
@@ -172,6 +190,31 @@ class ObjectAccess:
 
     def _owner_label(self) -> str:
         return f"T{self.txn.id}"
+
+    # -- observability (repro.obs; call only under ``txtrace.enabled``) -----
+    def _obs_uid(self) -> str:
+        """Correlation uid matching the wire form's ``#<id>[r<inc>]``
+        tail (remote._txn_uid) so client and server spans of one
+        transaction merge into one flow. The node server's session
+        access overrides this with the full wire uid."""
+        inc = getattr(self.txn, "incarnation", 0)
+        tid = self.txn.id
+        return f"#{tid}r{inc}" if inc else f"#{tid}"
+
+    def _obs_tracer(self):
+        """The owning site's tracer: where the state lives (stamped on
+        the header by the node server), else this thread's client site."""
+        return self.shared.header.obs_tracer or _txtrace.current()
+
+    def _obs_span(self, kind: str, t0: float, **kw: Any) -> None:
+        tr = self._obs_tracer()
+        tr.emit(kind, t0, tr.now() - t0, txn=self._obs_uid(),
+                inc=getattr(self.txn, "incarnation", 0), pv=self.pv, **kw)
+
+    def _obs_instant(self, kind: str, **kw: Any) -> None:
+        tr = self._obs_tracer()
+        tr.emit(kind, tr.now(), 0.0, txn=self._obs_uid(),
+                inc=getattr(self.txn, "incarnation", 0), pv=self.pv, **kw)
 
     def _submit_task(self, label: str, kind: str,
                      code: Callable[[], None]) -> "Task":
@@ -238,8 +281,15 @@ class ObjectAccess:
     def raw_call(self, method: str, args: tuple, kwargs: dict, *,
                  modifies: bool) -> Any:
         """Execute a method against the live state at the home node."""
-        v = self.shared.raw_call(method, args, kwargs,
-                                 from_node=self.txn.client_node)
+        if _txtrace.enabled:
+            t0 = self._obs_tracer().now()
+            v = self.shared.raw_call(method, args, kwargs,
+                                     from_node=self.txn.client_node)
+            self._obs_span("service", t0,
+                           detail=f"{self.shared.name}.{method}")
+        else:
+            v = self.shared.raw_call(method, args, kwargs,
+                                     from_node=self.txn.client_node)
         if modifies:
             self.modified = True
         return v
@@ -299,6 +349,8 @@ class ObjectAccess:
         if not self.released:
             self.shared.header.release_to(self.pv)
             self.released = True
+            if _txtrace.enabled:
+                self._obs_instant("release", detail=self.shared.name)
 
     def wait_termination(self, timeout: Optional[float]) -> bool:
         """Wait the commit condition (§2.8.5). True iff actually blocked."""
@@ -336,6 +388,8 @@ class ObjectAccess:
         self.shared.header.terminate_to(self.pv)
         self.shared.clear_holder(self.txn)
         self.terminated = True
+        if _txtrace.enabled:
+            self._obs_instant("terminate", detail=self.shared.name)
 
     def prepare_start(self) -> None:
         """Transport hook, called before any version lock is acquired
@@ -576,6 +630,22 @@ class Transaction:
         self._started = False
         self._terminated = False
         self._doomed = False
+        self._obs_t0 = 0.0   # client-window start (txtrace; set in begin())
+
+    # -- observability (client-side spans; gate on ``txtrace.enabled``) ------
+    def _obs_uid(self) -> str:
+        return (f"#{self.id}r{self.incarnation}" if self.incarnation
+                else f"#{self.id}")
+
+    def _obs_span(self, kind: str, t0: float, **kw: Any) -> None:
+        tr = _txtrace.current()
+        tr.emit(kind, t0, tr.now() - t0, txn=self._obs_uid(),
+                inc=self.incarnation, **kw)
+
+    def _obs_instant(self, kind: str, **kw: Any) -> None:
+        tr = _txtrace.current()
+        tr.emit(kind, tr.now(), 0.0, txn=self._obs_uid(),
+                inc=self.incarnation, **kw)
 
     # ------------------------------------------------------------------ #
     # Preamble (Fig. 8): declaring the access set with suprema.          #
@@ -629,8 +699,16 @@ class Transaction:
             ensure = getattr(a.shared, "ensure_primary", None)
             if ensure is not None:
                 ensure()
+        if _txtrace.enabled:
+            self._obs_t0 = _txtrace.current().now()
         try:
-            dispense_for(self._order)
+            if _txtrace.enabled:
+                t0 = _txtrace.current().now()
+                dispense_for(self._order)
+                self._obs_span("dispense", t0,
+                               detail=f"objs={len(self._order)}")
+            else:
+                dispense_for(self._order)
         except BaseException:
             # Partial start (a remote node died mid-dispense): abandon the
             # versions that were dispensed — skipped in chain order so
@@ -645,6 +723,9 @@ class Transaction:
             for a in self._order:
                 a.finish_session()
             self._terminated = True
+            if _txtrace.enabled:
+                self._obs_span("txn", self._obs_t0, detail="abort",
+                               sev=_txtrace.WARN)
             raise
         # §2.7/§2.8.1: asynchronously snapshot-and-release read-only
         # objects. Remote transports already fired these kickoffs inside
@@ -926,6 +1007,19 @@ class Transaction:
     # Commit (§2.8.5)                                                    #
     # ------------------------------------------------------------------ #
     def commit(self) -> None:
+        if not _txtrace.enabled:
+            self._commit_impl()
+            return
+        t0 = _txtrace.current().now()
+        try:
+            self._commit_impl()
+        except BaseException:
+            self._obs_span("commit", t0, detail="abort", sev=_txtrace.WARN)
+            raise
+        self._obs_span("commit", t0, detail="ok")
+        self._obs_span("txn", self._obs_t0, detail="commit")
+
+    def _commit_impl(self) -> None:
         if self._terminated:
             raise IllegalState("transaction already terminated")
         if not self._started:
@@ -1137,6 +1231,10 @@ class Transaction:
         for a in self._order:
             a.finish_session()
         self._terminated = True
+        if _txtrace.enabled:
+            self._obs_instant("abort", sev=_txtrace.WARN)
+            self._obs_span("txn", self._obs_t0, detail="abort",
+                           sev=_txtrace.WARN)
 
     # ------------------------------------------------------------------ #
     # start(): run an atomic block with commit/abort/retry handling       #

@@ -44,7 +44,11 @@ from __future__ import annotations
 import heapq
 import itertools
 import threading
+import time
 from typing import Callable, List, Optional
+
+from repro.obs import metrics as _metrics
+from repro.obs import txtrace as _txtrace
 
 _header_ids = itertools.count(1)
 _waiter_seq = itertools.count()
@@ -89,6 +93,7 @@ class VersionHeader:
         "uid", "lock", "gv", "lv", "ltv", "instance",
         "_access_waiters", "_term_waiters", "_listeners", "_restores",
         "cond_evals", "wakeups", "owner_node",
+        "obs_tracer", "obs_metrics", "obs_clock", "_handoff_mark",
     )
 
     def __init__(self, owner_node: Optional[object] = None):
@@ -114,6 +119,16 @@ class VersionHeader:
         self.cond_evals: int = 0
         self.wakeups: int = 0
         self.owner_node = owner_node
+        # Observability (repro.obs, DESIGN.md §9): the owning site's
+        # tracer/metrics/clock, stamped at bind time by NodeCore; unset
+        # headers (in-process transport) fall back to the thread's
+        # current client tracer. ``_handoff_mark`` carries the release
+        # timestamp of ``lv``'s last advance so the successor's first
+        # access records the version-handoff latency.
+        self.obs_tracer = None
+        self.obs_metrics = None
+        self.obs_clock = None
+        self._handoff_mark: Optional[tuple] = None
 
     # -- version dispensing -------------------------------------------------
     def dispense(self) -> int:
@@ -166,10 +181,18 @@ class VersionHeader:
                 fn()
 
     # -- counter updates ----------------------------------------------------
+    def _mark_release_locked(self, pv: int) -> None:
+        """Timestamp ``lv``'s advance to ``pv`` (caller holds ``lock``)
+        so the first access of ``pv + 1`` can record the version-handoff
+        latency — the direct measure of early-release pipelining."""
+        self._handoff_mark = (pv, (self.obs_clock or time.monotonic)())
+
     def release_to(self, pv: int) -> None:
         """Set ``lv = pv`` (early release / release-at-termination)."""
         with self.lock:
             if self.lv < pv:
+                if _txtrace.enabled:
+                    self._mark_release_locked(pv)
                 self.lv = pv
             fire = self._drain_ready_locked()
         self._fire(fire)
@@ -178,6 +201,8 @@ class VersionHeader:
         """Set ``ltv = pv`` (commit/abort). Implies release."""
         with self.lock:
             if self.lv < pv:
+                if _txtrace.enabled:
+                    self._mark_release_locked(pv)
                 self.lv = pv
             if self.ltv < pv:
                 self.ltv = pv
@@ -191,6 +216,8 @@ class VersionHeader:
         callbacks; the caller MUST fire them via :meth:`fire_callbacks`
         after dropping the lock."""
         if self.lv < pv:
+            if _txtrace.enabled:
+                self._mark_release_locked(pv)
             self.lv = pv
         if self.ltv < pv:
             self.ltv = pv
@@ -257,6 +284,37 @@ class VersionHeader:
     def termination_ready(self, pv: int) -> bool:
         return pv - 1 <= self.ltv
 
+    # -- observability (repro.obs; called only under ``txtrace.enabled``) ----
+    def _obs_site(self):
+        return self.obs_tracer or _txtrace.current()
+
+    def _obs_registry(self):
+        return self.obs_metrics or _metrics.registry(self._obs_site().site)
+
+    def _obs_handoff(self, pv: int) -> None:
+        """Version-handoff latency: ``lv``'s advance to ``pv - 1`` →
+        this first access-condition completion of ``pv``."""
+        mark = self._handoff_mark
+        if mark is None or mark[0] != pv - 1:
+            return
+        self._handoff_mark = None
+        now = (self.obs_clock or time.monotonic)()
+        self._obs_registry().histogram("handoff_us").record(
+            (now - mark[1]) * 1e6)
+
+    def _obs_blocked(self, kind: str, pv: int, t0: float) -> None:
+        """A version-condition wait actually blocked: span + histogram.
+        The span carries ``pv`` and the blocking threshold; the export
+        attributes it to a transaction by interval containment within
+        that transaction's op span on the same site."""
+        now = (self.obs_clock or time.monotonic)()
+        self._obs_site().emit("vwait", t0, now - t0, pv=pv,
+                              detail=f"{kind}:thr={pv - 1}")
+        name = "gate_wait_us" if kind == _ACCESS else "term_wait_us"
+        self._obs_registry().histogram(name).record((now - t0) * 1e6)
+        if kind == _ACCESS:
+            self._obs_handoff(pv)
+
     def _wait(self, kind: str, pv: int, timeout: Optional[float]) -> bool:
         """Block until the ``kind`` condition for ``pv`` holds.
 
@@ -266,8 +324,14 @@ class VersionHeader:
         ev = threading.Event()
         wake = ev.set                          # one bound method: identity key
         if not self.park(kind, pv, wake):
+            if _txtrace.enabled and kind == _ACCESS:
+                self._obs_handoff(pv)
             return False
+        t0 = ((self.obs_clock or time.monotonic)()
+              if _txtrace.enabled else 0.0)
         if blocking_wait(ev, timeout):
+            if _txtrace.enabled:
+                self._obs_blocked(kind, pv, t0)
             return True
         # Timed out: cancel the parked waiter. If it fired in the race
         # window the wait actually succeeded.

@@ -65,6 +65,8 @@ import time
 from typing import Any, Dict, List, Optional
 
 from repro.core.api import RemoteObjectFailure
+from repro.obs import metrics as _metrics
+from repro.obs import txtrace as _txtrace
 
 from .transport import (CLIENT_ID, LocalBuf, TaskWait, Transport, load_buf)
 from .wire import (ConnectionClosed, FrameReader, NOTE, OK, WireError,
@@ -282,10 +284,17 @@ class NodeClient(Transport):
                     self.n_handoff += 1
         if fut is None:
             # Late reply after a client-side timeout abandoned the
-            # call: drop it — the conversation moved on.
-            log.warning("dropping reply with unknown request id %r "
-                        "from %s (late reply after timeout?)",
-                        req_id, self.address)
+            # call: drop it — the conversation moved on. Recorded as a
+            # structured WARN event on the trace (was an ad-hoc warning
+            # line), so timeout storms show up per-connection in the
+            # merged trace instead of scrolling past on stderr.
+            if _txtrace.enabled:
+                _txtrace.current().instant(
+                    "late_reply", sev=_txtrace.WARN,
+                    detail=f"req={req_id} from {self.address}")
+            log.debug("dropping reply with unknown request id %r "
+                      "from %s (late reply after timeout?)",
+                      req_id, self.address)
             return
         if status == OK:
             fut.set_result(value)
@@ -478,6 +487,8 @@ class NodeClient(Transport):
         ``rpc_timeout`` bounds the *wait*, not the server-side execution: on
         expiry the future is abandoned (its late reply will be dropped by
         whoever reads it) and :class:`TimeoutError` raised."""
+        if _txtrace.enabled:
+            return self._traced_call(op, rpc_timeout, kwargs)
         fut = self.call_async(op, **kwargs)
         try:
             return fut.result(rpc_timeout)
@@ -491,11 +502,37 @@ class NodeClient(Transport):
                     mux.owed -= 1   # its late reply won't settle the account
             raise
 
+    def _traced_call(self, op: str, rpc_timeout: Optional[float],
+                     kwargs: Dict[str, Any]) -> Any:
+        """``call`` with an ``rpc`` span (client clock domain) — the wire
+        side of the tracereport phase decomposition."""
+        tr = _txtrace.current()
+        t0 = tr.now()
+        txn = kwargs.get("txn") or ""
+        fut = self.call_async(op, **kwargs)
+        try:
+            v = fut.result(rpc_timeout)
+        except TimeoutError:
+            with self._lock:
+                stale = [rid for rid, f in self._pending.items() if f is fut]
+                for rid in stale:
+                    del self._pending[rid]
+                mux = fut._mux
+                if stale and mux is not None and mux.owed > 0:
+                    mux.owed -= 1
+            tr.emit("rpc", t0, tr.now() - t0, txn=txn, detail=op,
+                    sev=_txtrace.WARN)
+            raise
+        dur = tr.now() - t0
+        tr.emit("rpc", t0, dur, txn=txn, detail=op)
+        _metrics.registry(tr.site).histogram("rpc_us").record(dur * 1e6)
+        return v
+
     def notify(self, op: str, **kwargs: Any) -> None:
         """Fire-and-forget one-way message: no reply, errors deferred
         (server reports them as ``oneway_err`` notes; see
         :meth:`raise_deferred`)."""
-        self.n_oneway += 1   # stats-only: not worth a lock on the hot path
+        self._oneway.inc()   # exact, lock-free (per-thread cells)
         self._send((None, op, kwargs))
 
     # -- task joins -----------------------------------------------------------

@@ -40,6 +40,8 @@ import pickle
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.obs import txtrace as _txtrace
+
 log = logging.getLogger("repro.net.replication")
 
 
@@ -170,6 +172,7 @@ class ReplicationManager:
         """First-writer-wins decision ledger. Returns the winning decision
         (which may differ from ``decision`` if one was already recorded)."""
         with self.lock:
+            first = txn not in self.decisions
             d = self.decisions.setdefault(txn, decision)
             if chain is not None and d == decision:
                 self.chains.setdefault(txn, list(chain))
@@ -177,7 +180,13 @@ class ReplicationManager:
                 self._resolve_tentatives_commit(txn)
             elif d == "abort":
                 self._resolve_tentatives_abort(txn)
-            return d
+        if _txtrace.enabled and first:
+            # The commit/abort decision point (DESIGN.md §8) — the moment
+            # the outcome became durable on this node's ledger.
+            self.core.obs_tracer.instant(
+                "commit_decide", txn=txn, detail=d,
+                sev=_txtrace.INFO if d == "commit" else _txtrace.WARN)
+        return d
 
     def decision_of(self, txn: str) -> Optional[str]:
         with self.lock:

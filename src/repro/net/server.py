@@ -86,6 +86,9 @@ from repro.core.registry import Registry, SharedObject
 from repro.core.transaction import ObjectAccess
 from repro.core.versioning import skip_version
 
+from repro.obs import metrics as _metrics
+from repro.obs import txtrace as _txtrace
+
 from .replication import ReplicationManager
 from .wire import (ConnectionClosed, ERR, FrameReader, NOTE, OK,
                    PIGGYBACK_MAX, WireError, encode_error,
@@ -237,6 +240,16 @@ class _ServerAccess(ObjectAccess):
         super()._ro_buffer_code()
 
     def _lw_apply_code(self) -> None:
+        # Full override (no super() call): re-wrap with the obs span the
+        # base class would have emitted.
+        if _txtrace.enabled:
+            t0 = self._obs_tracer().now()
+            self._lw_apply_server()
+            self._obs_span("lw_apply", t0, detail=self.shared.name)
+        else:
+            self._lw_apply_server()
+
+    def _lw_apply_server(self) -> None:
         shared = self.shared
         # The expired check and the apply happen under the header lock,
         # which _expire_session also takes before deciding whether to
@@ -314,6 +327,11 @@ class _ServerAccess(ObjectAccess):
             self.aborted = True
 
     def _owner_label(self) -> str:
+        return self.session.txn_uid
+
+    def _obs_uid(self) -> str:
+        # Full wire uid ("<client_id>#<id>[r<inc>]"): the export merges it
+        # with client-side spans by the "#..." tail.
         return self.session.txn_uid
 
     def _submit_task(self, label: str, kind: str,
@@ -452,6 +470,24 @@ class NodeCore:
         self._lock = threading.Lock()
         #: replica chains + decision ledger (DESIGN.md §8)
         self.replication = ReplicationManager(self)
+        #: observability: one trace track + metric namespace per node,
+        #: reading THIS node's clock domain (monotonic vs. sim-virtual).
+        #: Created even when tracing is off — a bare Tracer holds no ring
+        #: until the first emit, so the disabled cost is one object.
+        self.obs_tracer = _txtrace.tracer(f"node:{node_name}", clock=clock)
+        self.obs_metrics = _metrics.registry(f"node:{node_name}")
+        for shared in self.registry.all_objects().values():
+            if shared.node is self.node:
+                self._obs_stamp(shared)
+
+    def _obs_stamp(self, shared: SharedObject) -> None:
+        """Point the object's version header at this node's obs sinks, so
+        versioning's gate-wait/handoff instrumentation lands on the track
+        of the node that owns the state."""
+        h = shared.header
+        h.obs_tracer = self.obs_tracer
+        h.obs_metrics = self.obs_metrics
+        h.obs_clock = self._clock
 
     #: transport address peers/followers reach this node at; concrete
     #: transports override (TCP property / simnet attribute).
@@ -469,9 +505,10 @@ class NodeCore:
         the dead primary's private versions are meaningless on this node —
         in-flight transactions abort and retry against the new header)."""
         try:
-            self.registry.bind(name, obj, self.node)
+            shared = self.registry.bind(name, obj, self.node)
         except ValueError:
             return   # already bound here: promotion is idempotent
+        self._obs_stamp(shared)
         with self._lock:
             self._gates.setdefault(name, threading.Lock())
 
@@ -607,6 +644,10 @@ class NodeCore:
         including the session's own parked §2.7/§2.8.4 tasks — woken, they
         must no-op rather than apply a dead transaction's buffered writes."""
         session.expired = True
+        if _txtrace.enabled:
+            self.obs_tracer.instant("expire", txn=session.txn_uid,
+                                    detail="§3.4 crash-stop self-rollback",
+                                    sev=_txtrace.WARN)
         self._release_gates(session)
         with session.lock:
             accesses = list(session._accesses.items())
@@ -641,6 +682,15 @@ class NodeCore:
         handler = getattr(self, f"_op_{op}", None)
         if handler is None:
             raise WireError(f"unknown op {op!r}")
+        if _txtrace.enabled:
+            # One span per handled op, named after the op itself — so
+            # dispense_batch / commit_wave1 / repl_apply / repl_final
+            # slices read directly in the Perfetto UI.
+            t0 = self.obs_tracer.now()
+            v = handler(**kw)
+            self.obs_tracer.emit(op, t0, self.obs_tracer.now() - t0,
+                                 txn=kw.get("txn") or "", detail="op")
+            return v
         return handler(**kw)
 
     # -- helpers ------------------------------------------------------------
@@ -733,7 +783,7 @@ class NodeCore:
 
     def _op_bind(self, name: str, obj: Any,
                  followers: List[str] = ()) -> Dict[str, Mode]:
-        self.registry.bind(name, obj, self.node)
+        self._obs_stamp(self.registry.bind(name, obj, self.node))
         with self._lock:
             self._gates[name] = threading.Lock()
         if followers:
@@ -1413,7 +1463,17 @@ class NodeCore:
             sessions = len(self._sessions)
         return {"node": self.node_name, "sessions": sessions,
                 "rollbacks": list(self.monitor.rollbacks),
-                "repl_sent": self.replication.n_sent}
+                "repl_sent": self.replication.n_sent,
+                "metrics": self.obs_metrics.snapshot()}
+
+    def _op_trace_dump(self, reset: bool = False) -> List[dict]:
+        """Pull this node's trace ring (merged-export collection for TCP
+        topologies, where the rings live in the server process). Issued
+        only by explicit trace exports — never on the bench hot path."""
+        evs = self.obs_tracer.events()
+        if reset:
+            self.obs_tracer.reset()
+        return evs
 
 
 
@@ -1857,6 +1917,7 @@ def main(argv: Optional[List[str]] = None) -> None:
     # default 5 ms GIL switch interval adds multi-ms convoy latency under
     # load, so run the server with a tighter interval.
     sys.setswitchinterval(0.001)
+    _metrics.install_sigusr2()   # live metric dump: kill -USR2 <pid>
     server = NodeServer(args.name, args.host, args.port,
                         monitor_timeout=args.monitor_timeout,
                         monitor_poll=args.monitor_poll,

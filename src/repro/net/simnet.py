@@ -90,6 +90,7 @@ import random
 from repro.core import versioning
 from repro.core.api import RemoteObjectFailure
 from repro.core.registry import Registry
+from repro.obs import txtrace as _txtrace
 
 from .server import ERR, NodeCore, OK, _WouldBlock, encode_error
 from .transport import Transport
@@ -236,9 +237,19 @@ class SimTransport(Transport):
 
     def notify(self, op: str, **kwargs: Any) -> None:
         self._check_sendable(op)
-        self.n_oneway += 1
+        self._oneway.inc()   # exact, lock-free (per-thread cells)
         self.simnet._send(self, None, op, kwargs, None)
         self.simnet._check_injection(self, op, "after_send")
+
+    def _obs_tracer(self):
+        # Determinism: every sim-side span must read the virtual clock.
+        # Actor/handler threads carry their own bound tracer; calls from
+        # unbound threads (topology setup on the host thread) fall back
+        # to this client's own virtual-clock site instead of the
+        # process-wide monotonic one.
+        return (_txtrace.thread_tracer()
+                or _txtrace.tracer(f"client:{self.client_id}",
+                                   clock=self.simnet.now))
 
     def join_task(self, txn_uid: str, name: str):
         """Join a home-node task: yield to the scheduler until the pushed
@@ -637,6 +648,10 @@ class SimNet:
         def main() -> None:
             self._tl.actor = actor
             versioning.set_blocking_wait(self.wait_event)
+            # Client-side spans of this virtual client land on its own
+            # track and read the virtual clock (trace determinism).
+            _txtrace.set_thread_tracer(
+                _txtrace.tracer(f"client:{name}", clock=self.now))
             actor.sem.acquire()
             try:
                 fn()
@@ -673,6 +688,14 @@ class SimNet:
                     job = a.fn
                     if job is None:
                         return
+                    # Pooled handler threads serve different nodes over
+                    # time: bind the serving node's tracer per job so
+                    # e.g. chained-dispense peer RPCs issued from here
+                    # land on that node's track, on the virtual clock.
+                    if _txtrace.enabled:
+                        _txtrace.set_thread_tracer(
+                            a.node.obs_tracer if a.node is not None
+                            else None)
                     try:
                         job()
                     except SimCrash:

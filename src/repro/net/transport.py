@@ -41,6 +41,8 @@ import uuid
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.core.api import RemoteObjectFailure
+from repro.obs import metrics as _metrics
+from repro.obs import txtrace as _txtrace
 
 log = logging.getLogger("repro.net.transport")
 
@@ -104,6 +106,43 @@ class TaskWait:
             cb()
 
 
+class _PerThreadCounter:
+    """Exact multi-threaded counter with lock-free increments: every
+    thread bumps a private cell (registered once, under the lock); reads
+    sum the cells. The bench's ``c.n_oneway = 0`` reset-by-assignment
+    folds into ``base`` via :meth:`set`. This replaces the former bare
+    ``self.n_oneway += 1`` — an unlocked read-modify-write that could
+    drop increments when pipelined writers raced the client thread,
+    skewing the exact sim gate's per-txn message counts."""
+
+    __slots__ = ("_lock", "_cells", "_tl", "_base")
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._cells: List[List[int]] = []
+        self._tl = threading.local()
+        self._base = 0
+
+    def inc(self) -> None:
+        c = getattr(self._tl, "c", None)
+        if c is None:
+            c = [0]
+            with self._lock:
+                self._cells.append(c)
+            self._tl.c = c
+        c[0] += 1
+
+    def value(self) -> int:
+        with self._lock:
+            return self._base + sum(c[0] for c in self._cells)
+
+    def set(self, v: int) -> None:
+        with self._lock:
+            for c in self._cells:
+                c[0] = 0
+            self._base = v
+
+
 class Transport:
     """Abstract client-side transport to ONE home node (see module doc).
 
@@ -129,7 +168,7 @@ class Transport:
         self._ended: Set[str] = set()           # server already dropped these
         # -- transport statistics (per-txn wire metrics in the bench) --------
         self.n_rpc = 0          # round-trip requests issued
-        self.n_oneway = 0       # one-way messages sent
+        self._oneway = _PerThreadCounter()   # one-ways: see n_oneway property
         self.n_inline = 0       # replies read by their own awaiting caller
         self.n_handoff = 0      # replies delivered across a thread handoff
 
@@ -139,9 +178,34 @@ class Transport:
         ``result(timeout)`` / ``done()`` semantics."""
         raise NotImplementedError
 
+    @property
+    def n_oneway(self) -> int:
+        """One-way messages sent — exact under concurrency (per-thread
+        cells, summed here; the bench's ``c.n_oneway = 0`` reset goes
+        through the setter)."""
+        return self._oneway.value()
+
+    @n_oneway.setter
+    def n_oneway(self, v: int) -> None:
+        self._oneway.set(v)
+
+    def _obs_tracer(self):
+        """Site for this transport's client-side rpc spans — the calling
+        thread's bound tracer by default; the sim transport overrides the
+        fallback so even setup-phase calls read the virtual clock."""
+        return _txtrace.current()
+
     def call(self, op: str, rpc_timeout: Optional[float] = None,
              **kwargs: Any) -> Any:
         """Invoke ``op`` and wait for its reply (value or re-raised error)."""
+        if _txtrace.enabled:
+            tr = self._obs_tracer()
+            t0 = tr.now()
+            v = self.call_async(op, **kwargs).result(rpc_timeout)
+            dur = tr.now() - t0
+            tr.emit("rpc", t0, dur, txn=kwargs.get("txn") or "", detail=op)
+            _metrics.registry(tr.site).histogram("rpc_us").record(dur * 1e6)
+            return v
         return self.call_async(op, **kwargs).result(rpc_timeout)
 
     def notify(self, op: str, **kwargs: Any) -> None:
@@ -225,9 +289,16 @@ class Transport:
                 # pipelined step-5 terminate racing a §3.4 expiry): there
                 # is no sync point left to raise it at — the epoch
                 # machinery keeps the system consistent, but make the
-                # partial termination visible.
-                log.warning("one-way %r failed for finished txn %r: %r",
-                            note.get("op"), txn, err)
+                # partial termination visible as a structured WARN event
+                # on the trace (severity-tagged, correlated to the txn)
+                # instead of an ad-hoc stderr line.
+                if _txtrace.enabled:
+                    _txtrace.current().instant(
+                        "oneway_err", txn=txn or "",
+                        detail=f"{note.get('op')}: {err!r}"[:120],
+                        sev=_txtrace.WARN)
+                log.debug("one-way %r failed for finished txn %r: %r",
+                          note.get("op"), txn, err)
                 return
             # A failed kickoff never produces a completion note: fail the
             # task wait too, or its joiner would hang forever.

@@ -71,7 +71,9 @@ def test_concurrent_callers_out_of_order_replies(server):
 
 def test_late_reply_after_timeout_is_dropped_with_log(caplog):
     """A reply whose request id was abandoned by a client-side timeout is
-    dropped with a log line; the reader thread and connection survive."""
+    dropped — with a structured WARN trace event (plus a debug log line);
+    the reader thread and connection survive."""
+    from repro.obs import txtrace
     listener = socket.socket()
     listener.bind(("127.0.0.1", 0))
     listener.listen(1)
@@ -96,11 +98,25 @@ def test_late_reply_after_timeout_is_dropped_with_log(caplog):
     th = threading.Thread(target=fake_server, daemon=True)
     th.start()
     c = NodeClient(addr, conns=1)
-    with caplog.at_level(logging.WARNING, logger="repro.net.client"):
-        with pytest.raises(TimeoutError):
-            c.call("slow_op", rpc_timeout=0.1)
-        assert c.call("quick_op") == "fresh"      # connection still healthy
-    assert any("unknown request id" in r.message for r in caplog.records)
+    txtrace.reset()
+    txtrace.enable()
+    try:
+        with caplog.at_level(logging.DEBUG, logger="repro.net.client"):
+            with pytest.raises(TimeoutError):
+                c.call("slow_op", rpc_timeout=0.1)
+            assert c.call("quick_op") == "fresh"  # connection still healthy
+        # the drop is a structured severity-tagged event on the trace...
+        evs = [e for t in txtrace.all_tracers() for e in t.events()]
+        late = [e for e in evs if e["kind"] == "late_reply"]
+        assert late and late[0]["sev"] == "warn"
+        # ...and only a *debug* log line (no more warning spam).
+        assert any("unknown request id" in r.message for r in caplog.records)
+        assert not any("unknown request id" in r.message
+                       for r in caplog.records
+                       if r.levelno >= logging.WARNING)
+    finally:
+        txtrace.disable()
+        txtrace.reset()
     assert c.alive
     c.close()
     th.join(timeout=5)
