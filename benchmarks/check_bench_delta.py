@@ -111,7 +111,9 @@ def check(baseline: dict, fresh: dict, max_regress: float) -> int:
         if row.get("aborts"):
             failures.append(f"{name}: {row['aborts']} aborts (expected 0)")
         for metric in ("rpcs_per_txn", "oneways_per_txn",
-                       "replication_oneways_per_txn", "commits"):
+                       "replication_oneways_per_txn", "commits",
+                       "migrations_per_txn", "lease_renews_per_txn",
+                       "migrations"):
             if metric not in base:
                 continue
             b, f_ = base[metric], row.get(metric)

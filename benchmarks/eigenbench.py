@@ -108,6 +108,9 @@ class Result:
     oneways_per_txn: float = 0.0       # client one-way messages per txn
     handoffs_per_txn: float = 0.0      # replies crossing a thread handoff
     replication_oneways_per_txn: float = 0.0   # server->follower one-ways
+    # -- membership metrics (sim transport only; 0.0 elsewhere) --------------
+    migrations_per_txn: float = 0.0    # §10 lease handoffs completed
+    lease_renews_per_txn: float = 0.0  # §10 lease-renewal one-ways sent
 
 
 Step = Tuple[Any, str, Optional[int]]  # (shared_obj, "read"/"write", value)
@@ -482,6 +485,10 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
     # server->follower replication one-ways (DESIGN.md §8): counted at the
     # nodes, not the clients — the replication cost of the commit path.
     n_repl = sum(node.replication.n_sent for node in net._nodes.values())
+    # §10 membership metrics: lease handoffs completed and renewal
+    # one-ways sent, node-side (crashed nodes keep their counters).
+    n_migr = sum(node.n_migrations for node in net._nodes.values())
+    n_renew = sum(node.leases.n_renews for node in net._nodes.values())
     net.shutdown()
 
     commits = sum(s["commits"] for s in stats_per_client)
@@ -498,7 +505,9 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
                   rpcs_per_txn=round(n_rpc / max(commits, 1), 2),
                   oneways_per_txn=round(n_oneway / max(commits, 1), 2),
                   replication_oneways_per_txn=round(
-                      n_repl / max(commits, 1), 2))
+                      n_repl / max(commits, 1), 2),
+                  migrations_per_txn=round(n_migr / max(commits, 1), 3),
+                  lease_renews_per_txn=round(n_renew / max(commits, 1), 3))
 
 
 def run_benchmark(framework: str, cfg: EigenConfig,

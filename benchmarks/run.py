@@ -170,7 +170,7 @@ def bench_scheduler_overhead(full: bool = False,
 # Transport-overhead bench (PR2, re-measured per PR): in-proc vs real TCP wire #
 # --------------------------------------------------------------------------- #
 def bench_transport_overhead(full: bool = False,
-                             out: str = "BENCH_PR7.json") -> None:
+                             out: str = "BENCH_PR8.json") -> None:
     """Per-transaction cost of the real wire (``repro.net``), honestly.
 
     The same Eigenbench schedule (read-dominated 9:1 — the paper's
@@ -271,6 +271,8 @@ def bench_transport_overhead(full: bool = False,
                        f"oneways_per_txn={r_sim.oneways_per_txn};"
                        f"replication_oneways_per_txn="
                        f"{r_sim.replication_oneways_per_txn};"
+                       f"migrations_per_txn={r_sim.migrations_per_txn};"
+                       f"lease_renews_per_txn={r_sim.lease_renews_per_txn};"
                        f"commits={r_sim.commits};aborts={r_sim.aborts};"
                        f"waits={r_sim.waits};"
                        f"gate_wait_p50_us={gate_p50};"
@@ -285,10 +287,13 @@ def bench_transport_overhead(full: bool = False,
             "oneways_per_txn": r_sim.oneways_per_txn,
             "replication_oneways_per_txn":
                 r_sim.replication_oneways_per_txn,
+            "migrations_per_txn": r_sim.migrations_per_txn,
+            "lease_renews_per_txn": r_sim.lease_renews_per_txn,
             "gate_wait_p50_us": gate_p50,
             "handoff_p50_us": handoff_p50})
+    json_rows.extend(_bench_migration_rows())
     write_bench_json(out, json_rows, meta={
-        "bench": "transport_overhead", "pr": 7, "op_time_ms": 0.0,
+        "bench": "transport_overhead", "pr": 8, "op_time_ms": 0.0,
         "txns_per_client": txns, "repeats": repeats,
         "note": ("tcp = one node-server subprocess per registry node "
                  "(repro.net), honest wire over the multiplexed pipelined "
@@ -302,7 +307,133 @@ def bench_transport_overhead(full: bool = False,
                  "per committed transaction from the median run. "
                  "gate_wait_p50_us / handoff_p50_us are obs-registry "
                  "(repro.obs.metrics) medians from the sim run's virtual "
-                 "clock — deterministic per seed, warn-only gated.")})
+                 "clock — deterministic per seed, warn-only gated. "
+                 "migrations_per_txn / lease_renews_per_txn are §10 "
+                 "membership metrics (lease handoffs completed, renewal "
+                 "one-ways sent), node-side, sim rows only. The "
+                 "transport/migration rows are the Zipfian hot-key "
+                 "scenario: affinity-driven auto-migration must move the "
+                 "hot object to its dominant accessor and strictly lower "
+                 "rpcs_per_txn post-migration.")})
+
+
+def _bench_migration_rows() -> list:
+    """Zipfian hot-key migration scenario (§10), sim transport.
+
+    Two nodes; a pool of hot objects all homed on node0; one client whose
+    locality affinity is node1 runs transactions that each touch one
+    Zipf-picked hot object plus a node1-homed anchor — two dispense RPCs
+    per transaction while the hot object lives on node0, one once
+    affinity-driven auto-migration hands its lease to node1. The bench
+    runs two equal windows and records the exact message plan of each;
+    the gate is directional and hard: ≥1 hot object must migrate to the
+    dominant accessor's node and the post-window ``rpcs_per_txn`` must be
+    strictly lower than the pre-window's.
+    """
+    import random as _random
+
+    import benchmarks.eigenbench as eb
+    from repro.net.simnet import build_simnet
+
+    n_hot, txns = 6, 24
+    net = build_simnet(8, 2)
+    setup = net.client_registry("setup")
+    nodes = sorted(setup.nodes, key=lambda n: n.name)
+    addrs = [rn.address for rn in nodes]
+    for node in net._nodes.values():
+        node.migrate_auto = True
+    for i in range(n_hot):
+        nodes[0].bind(f"hot-{i}", eb.RefCell(0), followers=[addrs[1]])
+    nodes[1].bind("anchor", eb.RefCell(0), followers=[addrs[0]])
+    net.set_affinity("c1", addrs[1])
+
+    # Zipf(s=1.5) over the hot pool: the head object draws ~55% of the
+    # accesses — enough votes to cross MIGRATE_THRESHOLD with a 2:1 lead
+    # inside the first window.
+    weights = [1.0 / (i + 1) ** 1.5 for i in range(n_hot)]
+    total_w = sum(weights)
+
+    def pick(rng: "_random.Random") -> int:
+        x = rng.random() * total_w
+        for i, w in enumerate(weights):
+            x -= w
+            if x <= 0:
+                return i
+        return n_hot - 1
+
+    stats = [dict(commits=0, aborts=0, retries=0, waits=0) for _ in range(2)]
+    rpc_marks: list = []
+
+    def c1_rpcs() -> int:
+        # Total round trips, client AND server-to-server: the client's
+        # own plan is topology-independent (writes buffer locally, the
+        # dispense/commit chains run peer-to-peer), so the locality win
+        # of migration shows up in the peer links — the chained dispense
+        # hop and the commit wave/decide hops a single-node transaction
+        # no longer needs.
+        return sum(t.n_rpc for (cid, _n), t in net._transports.items()
+                   if cid == "c1" or cid.startswith("peer:"))
+
+    def accessor() -> None:
+        from repro.core.api import TransactionError
+
+        reg = net.client_registry("c1")
+        hot = [reg.locate(f"hot-{i}") for i in range(n_hot)]
+        anchor = reg.locate("anchor")
+        rng = _random.Random("migbench:zipf")
+        for window in range(2):
+            rpc_marks.append(c1_rpcs())
+            for _ in range(txns):
+                i = pick(rng)
+                while True:
+                    try:
+                        eb.run_optsva(reg, [(hot[i], "write", 1),
+                                            (anchor, "write", 1)],
+                                      stats[window])
+                        break
+                    except TransactionError:
+                        # A txn caught the drain-barrier mid-handoff: the
+                        # redirect already re-pointed the binding (§10) —
+                        # the retry dispenses at the new home directly.
+                        stats[window]["retries"] += 1
+            rpc_marks.append(c1_rpcs())
+            if window == 0:
+                # Quiet gap: queued affinity handoffs drain off the op
+                # path; the second window measures the settled topology.
+                net.sleep(0.05)
+
+    net.spawn(accessor, "c1")
+    net.run()
+    migrated = sum(node.n_migrations for node in net._nodes.values())
+    moved = sorted(name for name in (f"hot-{i}" for i in range(n_hot))
+                   if net._nodes["node1"].has_binding(name))
+    net.shutdown()
+
+    rows = []
+    plans = []
+    for window, label in enumerate(("pre", "post")):
+        st = stats[window]
+        n_rpc = rpc_marks[2 * window + 1] - rpc_marks[2 * window]
+        per_txn = round(n_rpc / max(st["commits"], 1), 2)
+        plans.append(per_txn)
+        derived = (f"rpcs_per_txn={per_txn};commits={st['commits']};"
+                   f"aborts={st['aborts']};retries={st['retries']};"
+                   f"migrations={migrated};moved={'/'.join(moved)}")
+        emit(f"transport/migration/{label}", 0.0, derived)
+        rows.append({"name": f"transport/migration/{label}",
+                     "transport": "sim", "us_per_call": 0.0,
+                     "derived": derived, "commits": st["commits"],
+                     "aborts": st["aborts"], "rpcs_per_txn": per_txn,
+                     "migrations": migrated})
+    if migrated < 1 or not moved:
+        raise RuntimeError(
+            f"migration bench: no hot object migrated (migrations="
+            f"{migrated}, moved={moved}) — affinity-driven handoff broken")
+    if plans[1] >= plans[0]:
+        raise RuntimeError(
+            f"migration bench: rpcs_per_txn did not drop after migration "
+            f"(pre={plans[0]}, post={plans[1]})")
+    return rows
 
 
 # --------------------------------------------------------------------------- #
@@ -367,7 +498,7 @@ def main() -> None:
                          "fig13,roofline,step")
     ap.add_argument("--bench-out", default="BENCH_PR1.json",
                     help="JSON trajectory point for the sched table")
-    ap.add_argument("--transport-out", default="BENCH_PR7.json",
+    ap.add_argument("--transport-out", default="BENCH_PR8.json",
                     help="JSON trajectory point for the transport table "
                          "(per-PR: pass BENCH_PR<n>.json for PR n)")
     args = ap.parse_args()

@@ -31,15 +31,37 @@ read back through their promoted replica follower):
   ``gv == lv == ltv``: no leaked/wedged private versions, the §3.4
   rollback-to-oldest + chain-order skip invariant;
 * **no lost/double frames** — transport accounting: everything sent was
-  delivered exactly once or deliberately dropped by a crash;
+  delivered exactly once or deliberately dropped by a crash or an active
+  partition cut;
+* **split-brain freedom (§10)** — no two nodes ever *act as primary* for
+  one object in the same lease epoch (the lease layer's auditor hook
+  fires on every version grant, bind, promotion, and migration-in);
+* **ledger boundedness (§10)** — at quiescence every live node has
+  retired every fully-acked decision-ledger entry
+  (``fully_acked_unretired() == 0``) and holds at most ``LEDGER_CAP``
+  decisions;
 * **replayability** — re-running a seed yields a byte-identical schedule
   trace (checked for a sample of seeds per sweep, and for every failing
   seed so the trace it prints is trustworthy).
+
+Membership churn (``--partitions`` / ``--migrations``, DESIGN.md §10):
+partition seeds isolate ``node0``'s peer links for the whole run (clients
+still reach both sides — the split-brain scenario) with lease TTLs shrunk
+so fencing, promise-wait takeover, and epoch-fenced redirects all fire
+inside the schedule; migration seeds run a concurrent *migrator* actor
+that forces lease handoffs (the ``migrate`` drain-barrier) mid-workload,
+turn on affinity-driven auto-migration, and extend the node-crash plan
+list with the §10 labels ``node-mid-migration`` (kill the handoff target
+before ``migrate_in`` lands — the old primary must keep serving) and
+``node-mid-lease-renewal`` (kill a follower as a renewal arrives — the
+primary must depart it from the quorum, not fence).
 
 Usage::
 
     python -m benchmarks.simsweep --seeds 200                  # PR gate
     python -m benchmarks.simsweep --seeds 100 --node-faults    # failover gate
+    python -m benchmarks.simsweep --seeds 100 --node-faults \
+        --partitions --migrations          # membership-churn gate (§10)
     python -m benchmarks.simsweep --seeds 5000 --trace-dir sim_traces
     python -m benchmarks.simsweep --seeds 200 --trace-dir sim_traces \
         --trace-failing          # + Perfetto span trace per failing seed
@@ -55,7 +77,9 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import AbortError, Transaction
 from repro.core.api import TransactionError
+from repro.net import leases as _leases
 from repro.net.demo import LedgerAccount
+from repro.net.replication import LEDGER_CAP
 from repro.net.simnet import SimDeadlock, build_simnet
 
 #: The labeled §3.4 crash-stop injection points (the PR-sized sweep must
@@ -94,6 +118,19 @@ NODE_FAULT_PLANS = [
     ("node-repl-final", "repl_final", "before_deliver"),
 ]
 
+#: Extra node crash-stop plans exercised only under ``--migrations``
+#: (DESIGN.md §10): crash the *handoff target* as the drain-barrier's
+#: ``migrate_in`` arrives (the old primary must keep serving — a torn
+#: migration never strands the object), and crash a *follower* as a
+#: ``lease_renew`` one-way lands (the primary must mark it departed and
+#: shrink the quorum, not fence itself). Appended after the base list so
+#: the seed→plan mapping of existing ``--node-faults`` sweeps only
+#: changes when the flag is on.
+MEMBERSHIP_FAULT_PLANS = [
+    ("node-mid-migration", "migrate_in", "before_deliver"),
+    ("node-mid-lease-renewal", "lease_renew", "before_deliver"),
+]
+
 
 def _topology(rng: random.Random) -> Tuple[int, int, int, int]:
     """(nodes, accounts_per_node, clients, txns_per_client) for one seed."""
@@ -102,6 +139,7 @@ def _topology(rng: random.Random) -> Tuple[int, int, int, int]:
 
 
 def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
+             partitions: bool = False, migrations: bool = False,
              keep_net: bool = False) -> Dict[str, Any]:
     """Run one seeded schedule; returns the result record (see keys below).
 
@@ -111,19 +149,44 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
     rng = random.Random(f"simsweep:{seed}")
     n_nodes, accts_per_node, n_clients, txns_per_client = _topology(rng)
     initial = 1000
-    net = build_simnet(seed, n_nodes)
+    # Membership-churn seeds (§10): a partition seed isolates node0's
+    # peer links for the ENTIRE run (cut from t=0 — no in-flight one-way
+    # straddles the cut, so every drop is an honest "silence" the lease
+    # layer must fence on). Three nodes are forced so the majority side
+    # (node1, node2) can host intact chains while node0's objects have
+    # their follower across the cut.
+    churn_part = partitions and seed % 2 == 1
+    if churn_part:
+        n_nodes = 3
+    churn = churn_part or migrations
+    # Shrink lease TTLs + reaper poll on churn seeds so renewal rounds,
+    # fencing, and promise-wait takeover all fire inside a schedule that
+    # lasts only tens of virtual milliseconds.
+    net = build_simnet(seed, n_nodes,
+                       **({"monitor_poll": 0.002} if churn else {}))
+    if churn:
+        for node in net._nodes.values():
+            node.leases.ttl = 0.01
 
     setup = net.client_registry("setup")
     nodes = sorted(setup.nodes, key=lambda n: n.name)
     addrs = [rn.address for rn in nodes]
+    # Replica chain (DESIGN.md §8): one follower, the next node
+    # round-robin — every object survives one node crash. On partition
+    # seeds the last node's follower is re-pointed INSIDE the majority
+    # group: only the isolated node0's objects have a cross-cut follower
+    # (the split-brain scenario under test); a symmetric layout would
+    # legitimately lose quorum on both sides.
+    follower_of_node = {ni: addrs[(ni + 1) % n_nodes]
+                        for ni in range(n_nodes)}
+    if churn_part:
+        follower_of_node[n_nodes - 1] = addrs[1]
     account_names: List[str] = []
     for ni, rn in enumerate(nodes):
         for ai in range(accts_per_node):
             name = f"acct-{ni}-{ai}"
-            # Replica chain (DESIGN.md §8): one follower, the next node
-            # round-robin — every object survives one node crash.
             rn.bind(name, LedgerAccount(initial),
-                    followers=[addrs[(ni + 1) % n_nodes]])
+                    followers=[follower_of_node[ni]])
             account_names.append(name)
     node_of = {f"acct-{ni}-{ai}": ni for ni in range(n_nodes)
                for ai in range(accts_per_node)}
@@ -132,17 +195,50 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
     # -- fault plan (deterministic per seed) ---------------------------------
     injected: Optional[str] = None
     node_fault: Optional[str] = None
-    if node_faults and seed % 4 != 0:
-        label, op, phase = NODE_FAULT_PLANS[seed % len(NODE_FAULT_PLANS)]
+    partitioned: Optional[str] = None
+    moves: List[Tuple[str, str]] = []
+    if migrations:
+        # Forced lease handoffs (§10): a migrator actor drives 1-2
+        # ``migrate`` drain-barriers mid-workload; affinity counters +
+        # migrate_auto exercise the access-driven path on top.
+        for node in net._nodes.values():
+            node.migrate_auto = True
+        k = rng.choice([1, 2])
+        for name in rng.sample(account_names, k):
+            moves.append((name,
+                          addrs[(node_of[name] + 1) % n_nodes]))
+    if churn_part:
+        # Partition seeds get no node crash: the cut IS the fault. Cut
+        # node0's peer links from t=0 for longer than any schedule runs;
+        # clients still reach both sides.
+        net.partition(["node0"],
+                      [f"node{i}" for i in range(1, n_nodes)],
+                      0.0, 120.0)
+        partitioned = "partition:node0"
+    elif node_faults and seed % 4 != 0:
+        plans = NODE_FAULT_PLANS + (MEMBERSHIP_FAULT_PLANS
+                                    if migrations else [])
+        label, op, phase = plans[seed % len(plans)]
         if op is None:
             target = f"node{n_nodes - 1}"
             net.crash_node_at(target, rng.uniform(0.001, 0.008))
+        elif op == "migrate_in" and not moves:
+            label = None
         else:
             # Coordinator ops land on node0 (first in global domain
             # order); wave/decide hops and replication one-ways land on
-            # later nodes — target where the op actually arrives.
-            target = "node0" if op == "commit_chain" else "node1"
-            nth = 1 + (seed // len(NODE_FAULT_PLANS)) % 2
+            # later nodes — target where the op actually arrives. The
+            # §10 ops land where the membership traffic does: migrate_in
+            # on the handoff target, lease_renew on a follower.
+            if op == "migrate_in":
+                target = moves[0][1].split("://", 1)[1]
+            elif op == "lease_renew":
+                target = "node1"
+            else:
+                target = "node0" if op == "commit_chain" else "node1"
+            nth = 1 + (seed // len(plans)) % 2
+            if op in ("migrate_in", "lease_renew"):
+                nth = 1
             net.inject_node_crash(target, op, nth=nth, phase=phase,
                                   label=label)
         node_fault = label
@@ -222,6 +318,14 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
         stats["commits"] += 1
 
     def client(cid: str) -> None:
+        if partitioned:
+            # Start past node0's fence point (see the warm actor below):
+            # no commit may ever be acknowledged by the primary that is
+            # about to be fenced — its cross-cut replication one-ways are
+            # silently dropped, so anything it acknowledged after the cut
+            # would be silently lost to the promoted follower (§10 leaves
+            # that to heal-time reconciliation, out of scope here).
+            net.sleep(0.03)
         reg = net.client_registry(cid)
         c_rng = random.Random(f"simsweep:{seed}:{cid}")
         # c0 (the injection target) runs a fixed mix that contains every
@@ -246,6 +350,59 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
                 # transaction already rolled back on surviving nodes
                 # (§3.4); the client carries on.
                 stats["aborts"] += 1
+
+    # Split-brain auditor (§10): the lease layer reports every act-as-
+    # primary event; two different nodes acting for one object in the
+    # SAME lease epoch is the §10 safety violation.
+    acted: Dict[Tuple[str, int], str] = {}
+    split_brain: List[str] = []
+
+    def _auditor(name: str, epoch: int, node_name: str) -> None:
+        prev = acted.setdefault((name, epoch), node_name)
+        if prev != node_name:
+            split_brain.append(f"split-brain: {name} epoch {epoch} "
+                               f"served by both {prev} and {node_name}")
+
+    _leases.set_split_brain_auditor(_auditor)
+
+    if partitioned:
+        def warm() -> None:
+            # Fence node0 BEFORE the workload starts. Its renewals cross
+            # the cut and can never be acked, so one post-expiry contact
+            # re-arms the lease and starts a doomed renewal round (the
+            # idle-lapse rule), and every contact after THAT expiry
+            # fences. Reads only — nothing mutates the doomed copy.
+            reg = net.client_registry("warm")
+            net.sleep(0.012)
+            try:
+                for name in account_names:
+                    if node_of[name] == 0:
+                        reg.locate(name).raw_call("balance")
+            except Exception as e:  # noqa: BLE001 - surfaced as a failure
+                failures.append(f"warm reader failed: {e!r}")
+        net.spawn(warm, "warm")
+
+    migrated: List[Tuple[str, str, bool]] = []
+    if moves:
+        for ci in range(n_clients):
+            net.set_affinity(f"c{ci}", addrs[ci % n_nodes])
+
+        def migrator() -> None:
+            # Forced lease handoffs mid-workload (§10 drain-barrier). A
+            # refused handoff (target dead / across the cut) must leave
+            # the old primary serving — recorded and checked below.
+            reg = net.client_registry("migrator")
+            m_rng = random.Random(f"simsweep:{seed}:migrator")
+            by_addr = {rn.address: rn for rn in reg.nodes}
+            for name, target in moves:
+                net.sleep(m_rng.uniform(0.001, 0.004))
+                try:
+                    ok = by_addr[addrs[node_of[name]]].client.call(
+                        "migrate", name=name, target=target)
+                except Exception:  # noqa: BLE001 - src dead/cut: refused
+                    ok = False
+                migrated.append((name, target, bool(ok)))
+        net.spawn(migrator, "migrator")
 
     for ci in range(n_clients):
         net.spawn(lambda cid=f"c{ci}": client(cid), f"c{ci}")
@@ -312,10 +469,17 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
             if mname == name and seen.count(tag) != 1:
                 failures.append(f"mark {tag!r} applied "
                                 f"{seen.count(tag)}x on {name}")
-    if injected is None and node_fault is None and stats["aborts"]:
+    # §10: a partition or a forced migration legally aborts in-flight
+    # transactions (fenced primary, drain-barrier refusals) — only truly
+    # fault-free schedules must be abort-free.
+    if (injected is None and node_fault is None and partitioned is None
+            and not moves and stats["aborts"]):
         failures.append(f"pessimism: {stats['aborts']} aborts in a "
                         f"fault-free schedule")
-    if injected is not None and not net.fired_injections:
+    # A forced migration can abort the victim client's transaction before
+    # its injected op is ever attempted — only migration-free seeds must
+    # reach their injection point.
+    if injected is not None and not net.fired_injections and not moves:
         failures.append(f"injection {injected!r} never fired")
     bad = net.converged()
     if bad:
@@ -324,6 +488,21 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
         failures.append(f"frame accounting: sent={net.sent} != "
                         f"delivered={net.delivered}+dropped={net.dropped}")
 
+    # -- §10 invariants: split-brain freedom + ledger boundedness -----------
+    _leases.set_split_brain_auditor(None)
+    failures.extend(split_brain)
+    for node in net._nodes.values():
+        if not node.alive:
+            continue
+        stuck = node.replication.fully_acked_unretired()
+        if stuck:
+            failures.append(f"ledger: {node.node_name} holds {stuck} "
+                            f"fully-acked unretired decision(s)")
+        held = len(node.replication.decisions)
+        if held > LEDGER_CAP:
+            failures.append(f"ledger: {node.node_name} holds {held} "
+                            f"decisions > LEDGER_CAP={LEDGER_CAP}")
+
     out = {
         "seed": seed, "failures": failures, "trace": net.trace_text(),
         "commits": stats["commits"], "aborts": stats["aborts"],
@@ -331,8 +510,9 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
         "committed": list(committed_transfers),
         "balances": balances,
         "injected": net.fired_injections[0] if net.fired_injections
-                    else node_fault,
+                    else (node_fault or partitioned),
         "nodes": n_nodes, "clients": n_clients,
+        "partitioned": partitioned, "migrated": migrated,
     }
     if keep_net:
         out["net"] = net
@@ -342,7 +522,8 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
 
 
 def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
-                             node_faults: bool) -> None:
+                             node_faults: bool, partitions: bool = False,
+                             migrations: bool = False) -> None:
     """Replay a failing seed with txtrace enabled and export the merged
     Perfetto span trace next to its schedule trace. The schedule is a
     pure function of the seed, so the replay reproduces the failure and
@@ -354,7 +535,8 @@ def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
     txtrace.reset()
     txtrace.enable()
     try:
-        run_seed(seed, faults=faults, node_faults=node_faults)
+        run_seed(seed, faults=faults, node_faults=node_faults,
+                 partitions=partitions, migrations=migrations)
     finally:
         if not was_enabled:
             txtrace.disable()
@@ -364,18 +546,25 @@ def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
 
 
 def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
+          partitions: bool = False, migrations: bool = False,
           replay_check: int = 10,
           trace_dir: Optional[str] = None,
           trace_failing: bool = False) -> int:
     failed: List[Dict[str, Any]] = []
     coverage: Dict[str, int] = {}
+    n_migrated = n_refused = 0
     replayed = 0
     for seed in seeds:
-        res = run_seed(seed, faults=faults, node_faults=node_faults)
+        res = run_seed(seed, faults=faults, node_faults=node_faults,
+                       partitions=partitions, migrations=migrations)
         if res["injected"]:
             coverage[res["injected"]] = coverage.get(res["injected"], 0) + 1
+        for _name, _target, ok in res.get("migrated", ()):
+            n_migrated += 1 if ok else 0
+            n_refused += 0 if ok else 1
         if res["failures"] or replayed < replay_check:
-            res2 = run_seed(seed, faults=faults, node_faults=node_faults)
+            res2 = run_seed(seed, faults=faults, node_faults=node_faults,
+                            partitions=partitions, migrations=migrations)
             replayed += 1
             if res2["trace"] != res["trace"]:
                 res["failures"].append(
@@ -391,7 +580,8 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
                 if trace_failing:
                     _span_trace_failing_seed(
                         seed, d / f"seed-{seed}.trace.json",
-                        faults=faults, node_faults=node_faults)
+                        faults=faults, node_faults=node_faults,
+                        partitions=partitions, migrations=migrations)
             else:
                 print("  --- replayable schedule (tail) ---")
                 for line in res["trace"].splitlines()[-40:]:
@@ -401,6 +591,9 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
           f"{len(failed)} failed; replay-checked {replayed}")
     print(f"crash-injection coverage: "
           f"{ {k: coverage[k] for k in sorted(coverage)} }")
+    if migrations:
+        print(f"forced migrations: {n_migrated} handed off, "
+              f"{n_refused} refused (dead/cut target)")
     rc = 1 if failed else 0
     if faults and n >= 50:
         distinct = len([k for k in coverage if not k.startswith("node-")])
@@ -429,6 +622,13 @@ def main() -> None:
     ap.add_argument("--node-faults", action="store_true",
                     help="also crash-stop home nodes on some seeds "
                          "(relaxed invariants on those)")
+    ap.add_argument("--partitions", action="store_true",
+                    help="isolate node0's peer links on odd seeds (§10 "
+                         "split-brain scenario: fencing + takeover)")
+    ap.add_argument("--migrations", action="store_true",
+                    help="force lease handoffs mid-workload, enable "
+                         "affinity auto-migration, and add the §10 "
+                         "membership crash plans")
     ap.add_argument("--replay-check", type=int, default=10,
                     help="re-run this many seeds and require "
                          "byte-identical traces")
@@ -444,17 +644,21 @@ def main() -> None:
 
     if args.seed is not None:
         res = run_seed(args.seed, faults=not args.no_faults,
-                       node_faults=args.node_faults)
+                       node_faults=args.node_faults,
+                       partitions=args.partitions,
+                       migrations=args.migrations)
         if args.print_trace:
             sys.stdout.write(res["trace"])
         print(f"seed {args.seed}: commits={res['commits']} "
               f"aborts={res['aborts']} injected={res['injected']} "
-              f"failures={res['failures']}")
+              f"migrated={res['migrated']} failures={res['failures']}")
         sys.exit(1 if res["failures"] else 0)
 
     sys.exit(sweep(range(args.start, args.start + args.seeds),
                    faults=not args.no_faults,
                    node_faults=args.node_faults,
+                   partitions=args.partitions,
+                   migrations=args.migrations,
                    replay_check=args.replay_check,
                    trace_dir=args.trace_dir,
                    trace_failing=args.trace_failing))

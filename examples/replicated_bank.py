@@ -1,9 +1,13 @@
-"""Replica chains + follower failover quickstart (DESIGN.md §8).
+"""Replica chains, live lease migration, and follower failover
+(DESIGN.md §8 + §10).
 
 Spawns two real node-server processes, binds a bank account on the first
 with the second configured as its replica follower, commits a transfer,
-then SIGKILLs the primary mid-run: the next transaction transparently
-promotes the follower and the committed balance survives the home node.
+then migrates the account's ownership lease to the replica LIVE — the
+client follows the epoch-fenced redirect without reconnecting, and the
+old primary joins the chain as a follower. Finally the new home is
+SIGKILLed mid-run: the next transaction transparently promotes the
+follower (the original primary) and the committed balance survives.
 
     PYTHONPATH=src python examples/replicated_bank.py
 """
@@ -20,10 +24,19 @@ def txn_balance(reg, name):
     return t.start(lambda _t: p.balance())
 
 
-def txn_withdraw(reg, name, amt):
-    t = Transaction(reg)
-    p = t.updates(reg.locate(name), 1)
-    t.start(lambda _t: p.withdraw(amt))
+def txn_withdraw(reg, name, amt, retries=1):
+    # One retry: a transaction that catches a migration's drain-barrier
+    # gets the epoch-fenced redirect (the binding is already re-pointed
+    # when it surfaces) — the retry dispenses at the new home directly.
+    for attempt in range(retries + 1):
+        t = Transaction(reg)
+        p = t.updates(reg.locate(name), 1)
+        try:
+            t.start(lambda _t: p.withdraw(amt))
+            return
+        except RemoteObjectFailure:
+            if attempt == retries:
+                raise
 
 
 def main() -> None:
@@ -46,9 +59,29 @@ def main() -> None:
         print("  committed withdraw(100); balance =",
               txn_balance(reg, "savings"))
 
-        print(f"  SIGKILL {primary.name} (crash-stop: no shutdown, "
+        # -- live lease migration (DESIGN.md §10) --------------------------
+        # Hand the ownership lease to the replica while the client keeps
+        # its binding: `migrate` is a drain-barrier (in-flight versions
+        # finish, state + epoch+1 ship, the old home leaves an epoch-
+        # fenced redirect tombstone) and the old primary joins the new
+        # chain as a follower. The client's next transaction follows the
+        # redirect without reconnecting.
+        for node in reg.nodes:
+            if node.address == primary.address:
+                assert node.client.call("migrate", name="savings",
+                                        target=replica.address)
+        print(f"  migrated 'savings' lease {primary.name} -> "
+              f"{replica.name} (drain-barrier, epoch-fenced redirect)")
+        txn_withdraw(reg, "savings", 25)
+        bal = txn_balance(reg, "savings")
+        print("  committed withdraw(25) through the redirect; balance =",
+              bal)
+        assert bal == 875, bal
+
+        # -- crash the NEW home: the chain survived the migration ----------
+        print(f"  SIGKILL {replica.name} (crash-stop: no shutdown, "
               f"no cleanup)")
-        primary.kill()
+        replica.kill()
 
         # A transaction begun inside the crash-detection window fails
         # with RemoteObjectFailure (§3.4: the programmer retries); the
@@ -64,15 +97,15 @@ def main() -> None:
                     raise
                 time.sleep(0.05)
         print("  balance after failover =", bal)
-        assert bal == 900, bal
+        assert bal == 875, bal
 
         # the promoted follower is a full primary: commits keep flowing
         txn_withdraw(reg, "savings", 50)
         print("  committed withdraw(50) on the promoted follower; "
               "balance =", txn_balance(reg, "savings"))
-        assert txn_balance(reg, "savings") == 850
+        assert txn_balance(reg, "savings") == 825
         reg.shutdown()
-    print("  OK: the home node died, the money did not")
+    print("  OK: the lease moved, the home node died, the money did not")
 
 
 if __name__ == "__main__":

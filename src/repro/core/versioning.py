@@ -402,6 +402,28 @@ def skip_version(h: VersionHeader, pv: int) -> None:
         h.terminate_to(pv)
 
 
+def wait_quiescent(h: VersionHeader, *,
+                   timeout: Optional[float] = None) -> bool:
+    """Block until every dispensed version of ``h`` has terminated
+    (``gv == lv == ltv``) — the migration drain-barrier (DESIGN.md §10).
+
+    The caller must have stopped new dispensing first (the migration mark
+    is taken under the header lock before this is called), otherwise the
+    barrier chases a moving ``gv``. Blocks through the per-thread
+    :func:`blocking_wait` hook, so under simnet the wait is a
+    deterministic virtual-time event. Returns False on timeout."""
+    while True:
+        with h.lock:
+            g = h.gv
+            if h.ltv >= g and h.lv >= g:
+                return True
+        try:
+            # termination condition for version g+1 is ``ltv >= g``
+            h.wait_termination(g + 1, timeout=timeout)
+        except TimeoutError:
+            return False
+
+
 def dispense_versions(headers: List[VersionHeader]) -> List[int]:
     """Atomically dispense private versions for an access set (paper §2.10.2).
 

@@ -58,6 +58,7 @@ from __future__ import annotations
 import collections
 import itertools
 import logging
+import random
 import select
 import socket
 import threading
@@ -73,6 +74,12 @@ from .wire import (ConnectionClosed, FrameReader, NOTE, OK, WireError,
                    parse_address, recv_msg, send_msg)
 
 log = logging.getLogger("repro.net.client")
+
+#: Mux-connect retry budget: first retry after ~50 ms, doubling to a
+#: 500 ms cap, each jittered to 50–150% — worst case well under the
+#: failure detector's timeout, so a genuinely dead server still reads as
+#: crash-stop promptly.
+_CONNECT_ATTEMPTS = 4
 
 # Backwards-compatible aliases: the bookkeeping classes moved to
 # repro.net.transport when the Transport interface was carved out.
@@ -215,31 +222,58 @@ class NodeClient(Transport):
             if not self.alive or self._closed.is_set():
                 raise RemoteObjectFailure(
                     f"node server {self.address} is unreachable (crash-stop)")
-            try:
-                sock = socket.create_connection((self.host, self.port),
-                                                timeout=self.connect_timeout)
-                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                # Handshake before any reader exists: announce this process
-                # (the server maps the connection to our sessions — the drop
-                # of our last connection is the §3.4 instant crash-stop
-                # signal) and await the ack on the still-private socket.
-                send_msg(sock, (0, "mux_hello", {"client_id": self.client_id}))
-                req_id, status, value, _notes = recv_msg(sock)
-                if req_id != 0 or status != OK:
-                    raise ConnectionClosed("mux_hello rejected")
-                sock.settimeout(None)   # replies may legitimately take long
-            except (OSError, ConnectionClosed, WireError) as e:
-                # A transient refusal (backlog overflow, port exhaustion)
-                # establishing a *supplementary* connection must not
-                # crash-stop the whole client while an established healthy
-                # connection exists: re-pin this thread onto one instead.
+            # Transient refusals (backlog overflow, port exhaustion, a
+            # server still binding its listener) get a bounded, jittered
+            # exponential backoff before the connection counts as dead —
+            # jitter decorrelates a thundering herd of clients retrying
+            # into the same backlog that just overflowed.
+            err: Optional[Exception] = None
+            for attempt in range(_CONNECT_ATTEMPTS):
+                if attempt:
+                    delay = (min(0.05 * (2 ** (attempt - 1)), 0.5)
+                             * (0.5 + random.random()))
+                    if _txtrace.enabled:
+                        self._obs_tracer().instant(
+                            "connect_retry",
+                            detail=f"{self.address} #{attempt} "
+                                   f"+{delay * 1000:.0f}ms",
+                            sev=_txtrace.WARN)
+                    time.sleep(delay)
+                    if not self.alive or self._closed.is_set():
+                        break
+                try:
+                    sock = socket.create_connection(
+                        (self.host, self.port), timeout=self.connect_timeout)
+                    sock.setsockopt(socket.IPPROTO_TCP,
+                                    socket.TCP_NODELAY, 1)
+                    # Handshake before any reader exists: announce this
+                    # process (the server maps the connection to our
+                    # sessions — the drop of our last connection is the
+                    # §3.4 instant crash-stop signal) and await the ack on
+                    # the still-private socket.
+                    send_msg(sock,
+                             (0, "mux_hello", {"client_id": self.client_id}))
+                    req_id, status, value, _notes = recv_msg(sock)
+                    if req_id != 0 or status != OK:
+                        raise ConnectionClosed("mux_hello rejected")
+                    sock.settimeout(None)   # replies may take long
+                    err = None
+                    break
+                except (OSError, ConnectionClosed, WireError) as e:
+                    err = e
+            if err is not None:
+                # Still refused after the backoff budget. Establishing a
+                # *supplementary* connection must not crash-stop the whole
+                # client while an established healthy connection exists:
+                # re-pin this thread onto one instead.
                 for i, mux in enumerate(self._muxes):
                     if mux is not None and self.alive:
                         self._tl.idx = i
                         return mux
-                self._mark_dead(f"connect failed: {e}")
+                self._mark_dead(f"connect failed: {err}")
                 raise RemoteObjectFailure(
-                    f"node server {self.address} is unreachable: {e}") from e
+                    f"node server {self.address} is unreachable: "
+                    f"{err}") from err
             mux = _Mux(sock)
             self._muxes[idx] = mux
             threading.Thread(

@@ -48,12 +48,14 @@ from repro.core.api import RemoteObjectFailure, Suprema
 from repro.core.transaction import Completed, ObjectAccess
 
 from .client import Future, NodeClient
+from .leases import LeaseFencedError, ObjectMovedError
 from .transport import CLIENT_ID, Transport, load_buf
 
-#: Failure-detection grace before promoting a follower (DESIGN.md §8):
-#: one detection period >> the maximum one-way latency, so every frame a
-#: dead primary queued before crashing has landed by promotion time.
-FAILOVER_GRACE = 0.05
+# The failure-detection grace before promoting a follower (DESIGN.md §8)
+# is transport-supplied (`Transport.failover_grace`): one detection period
+# >> the maximum one-way latency, so every frame a dead primary queued
+# before crashing has landed by promotion time — 50 ms real time on TCP,
+# derived from the virtual link latencies under simnet.
 
 
 class _RemoteBufMarker:
@@ -264,15 +266,27 @@ class RemoteSharedObject:
             return reg.connect(addr)
         return RemoteNode(addr)
 
+    def follow_move(self, e: ObjectMovedError) -> None:
+        """Follow an epoch-fenced redirect (§10 migration): re-point the
+        binding at the new primary without reconnecting — the registry
+        either already holds a connection to the target (sim/federation)
+        or dials one lazily."""
+        self.node = self._follower_node(e.target)
+        self.failed = False
+        if e.followers:
+            self.followers = [a for a in e.followers if a != e.target]
+
     def ensure_primary(self) -> None:
-        """Fail over to the first live follower iff the current primary is
-        dead (crash-stop: a node that looks dead IS dead). Every client —
-        and the decision chain's server-side redirect — walks the same
-        configured order, so they converge on the same new primary.
-        Promotion can report *busy* while a still-live coordinator's
-        decision is pending for some buffered tentative; the window is
-        bounded (a live coordinator's chained commit is synchronous), so
-        busy is retried with transport-clocked backoff."""
+        """Lease acquisition with quorum-of-chain acknowledgement (§10):
+        fail over iff the current primary is dead (crash-stop: a node that
+        looks dead IS dead) or fenced. Every client — and the decision
+        chain's server-side redirect — walks the same configured order, so
+        they converge on the same new primary. ``lease_acquire`` reports
+        *busy* while the old primary's lease promise is still live (it
+        self-fences before the promise lapses — waiting it out is the
+        split-brain-freedom condition) or while a buffered tentative's
+        coordinator is alive but undecided; both windows are bounded by
+        one lease TTL, which the retry budget here outlasts."""
         if not self.failed and self.node.alive and self.client.alive:
             return
         if not self.followers:
@@ -286,13 +300,14 @@ class RemoteSharedObject:
         # same assumption the §3.4 expiry reaper makes); sleeping one
         # detection period here makes it explicit. Transport-clocked:
         # virtual under simnet, 50ms real on TCP.
-        self.client.sleep(FAILOVER_GRACE)
-        for _attempt in range(60):
+        self.client.sleep(self.client.failover_grace())
+        for _attempt in range(90):
             busy_node = None
             for i, addr in enumerate(list(self.followers)):
                 try:
                     node = self._follower_node(addr)
-                    res = node.client.call("promote", names=[self.name])
+                    res = node.client.call("lease_acquire",
+                                           names=[self.name])
                 except Exception:  # noqa: BLE001 - this follower is dead too
                     continue
                 if self.name in res.get("promoted", ()):
@@ -313,11 +328,22 @@ class RemoteSharedObject:
     def raw_call(self, method: str, args: tuple = (), kwargs: dict = None,
                  from_node: Optional[object] = None) -> Any:
         """Non-transactional direct invocation at the home node (fails
-        over to a promoted follower when the primary is dead)."""
-        self.ensure_primary()
-        self.check_reachable()
-        return self.client.call("raw_call", name=self.name, method=method,
-                                args=args, kwargs=kwargs or {})
+        over to a promoted follower when the primary is dead or fenced,
+        follows migration redirects — bounded hops, no reconnect)."""
+        for _hop in range(3):
+            self.ensure_primary()
+            self.check_reachable()
+            try:
+                return self.client.call("raw_call", name=self.name,
+                                        method=method, args=args,
+                                        kwargs=kwargs or {})
+            except ObjectMovedError as e:
+                self.follow_move(e)
+            except LeaseFencedError:
+                self.fail()    # next hop resolves through the chain
+        raise RemoteObjectFailure(
+            f"raw_call on {self.name!r} kept redirecting (ownership moving "
+            f"faster than the client can chase)")
 
     def touch(self, txn: object) -> None:
         uid = _txn_uid(txn, self.client.client_id)
@@ -440,11 +466,38 @@ class RemoteObjectAccess(ObjectAccess):
                   "names": [a.shared.name for a in accs],
                   "ro_names": [a.shared.name for a in ro_accs]}
                  for accs, ro_accs in metas[1:]]
-        res = self.client.call(
-            "dispense_batch", txn=uid, client_id=self.client.client_id,
-            names=[a.shared.name for a in head_accs],
-            ro_names=[a.shared.name for a in head_ro], kind=kind,
-            chain=chain)
+        try:
+            res = self.client.call(
+                "dispense_batch", txn=uid, client_id=self.client.client_id,
+                names=[a.shared.name for a in head_accs],
+                ro_names=[a.shared.name for a in head_ro], kind=kind,
+                chain=chain,
+                affinity=getattr(self.client, "affinity", None) or "")
+        except ObjectMovedError as e:
+            # Drop the start-time liveness registrations on the ORIGINAL
+            # transports BEFORE any candidate re-pointing: end_txn must
+            # reach the node that opened the session, or its reaper keeps
+            # the ghost session alive while our heartbeats keep feeding
+            # it — a self-sustaining wedge.
+            for accs, _ro in metas:
+                accs[0].client.finish_txn(uid)
+            # §10 migration redirect: re-point the binding now so the
+            # retried transaction dispenses at the new home directly.
+            for accs, _ro in metas:
+                for a in accs:
+                    if a.shared.name == e.name:
+                        a.shared.follow_move(e)
+            raise
+        except LeaseFencedError as e:
+            for accs, _ro in metas:
+                accs[0].client.finish_txn(uid)
+            # the primary self-fenced (partition suspicion): treat it like
+            # a dead home — the retry resolves through the follower chain.
+            for accs, _ro in metas:
+                for a in accs:
+                    if a.shared.name == e.name:
+                        a.shared.fail()
+            raise
         pvs = res["pvs"]
         for accs, ro_accs in metas:
             for a in accs:
@@ -822,7 +875,11 @@ class RemoteObjectAccess(ObjectAccess):
             follower's decision ledger is authoritative: a recorded
             commit is reported as success, anything else dooms to abort
             (first-writer-wins, same as the chain path)."""
-            self.client.sleep(FAILOVER_GRACE)
+            if isinstance(err, LeaseFencedError):
+                for a in accs:       # fenced primary: re-resolve next txn
+                    if a.shared.name == err.name:
+                        a.shared.fail()
+            self.client.sleep(self.client.failover_grace())
             targets: List[str] = []
             for a in accs:
                 for addr in a.shared.followers:
@@ -918,7 +975,12 @@ class RemoteObjectAccess(ObjectAccess):
             # but travels on other links: wait one detection grace so a
             # decision the dead coordinator DID replicate has landed
             # before we ask (else we could doom a committed transaction).
-            self.client.sleep(FAILOVER_GRACE)
+            if isinstance(err, LeaseFencedError):
+                for accs, _items in per_domain:
+                    for a in accs:   # fenced primary: re-resolve next txn
+                        if a.shared.name == err.name:
+                            a.shared.fail()
+            self.client.sleep(self.client.failover_grace())
             targets: List[str] = []
             for a in head_accs:
                 for addr in a.shared.followers:

@@ -38,11 +38,29 @@ from __future__ import annotations
 import logging
 import pickle
 import threading
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.obs import txtrace as _txtrace
 
 log = logging.getLogger("repro.net.replication")
+
+#: Follower-side decision-ledger backstop (§10 GC): entries are normally
+#: retired by the head's ``repl_retire`` once every chain member acked the
+#: decision; the cap only bites when the head died before retiring, and
+#: evicts oldest-first among entries no live tentative still references.
+LEDGER_CAP = 512
+
+#: Retired-commit memo (§10 GC): retirement must not make a committed
+#: transaction indistinguishable from a never-decided one — a client whose
+#: coordinator crashed after driving the full chain (acks in, entry
+#: retired) but before its reply was delivered still recovers via
+#: ``txn_decision``, and dooming that txn to abort would contradict the
+#: already-applied commit. Only commits ever retire (aborts are never
+#: broadcast), so a fixed-size ring of retired txn ids suffices: recovery
+#: happens within a failover grace of the crash, far inside the ring's
+#: horizon. Ids only — no chains, no payloads — so the ledger stays bounded.
+RETIRED_MEMO_CAP = 512
 
 
 class ReplicaRecord:
@@ -87,6 +105,15 @@ class ReplicationManager:
         # -- decision ledger (coordinator memo + follower recoverability) ----
         self.decisions: Dict[str, str] = {}          # txn -> commit | abort
         self.chains: Dict[str, List[dict]] = {}      # txn -> decision chain
+        # -- ledger GC (§10): head-side ack tracking + retirement -------------
+        self._acks: Dict[str, set] = {}            # txn -> followers unacked
+        self._retire_targets: Dict[str, List[str]] = {}
+        self._ended: set = set()                    # txns safe to retire
+        self.n_retired = 0
+        #: retired *commit* ids (head and follower side): keeps a retired
+        #: commit answerable — never doomed to abort — during the client
+        #: recovery window. Bounded ring, oldest evicted first.
+        self._retired_commits: "OrderedDict[str, None]" = OrderedDict()
         # -- follower side ---------------------------------------------------
         self.replicas: Dict[str, ReplicaRecord] = {}
 
@@ -180,6 +207,7 @@ class ReplicationManager:
                 self._resolve_tentatives_commit(txn)
             elif d == "abort":
                 self._resolve_tentatives_abort(txn)
+            self._trim_ledger()
         if _txtrace.enabled and first:
             # The commit/abort decision point (DESIGN.md §8) — the moment
             # the outcome became durable on this node's ledger.
@@ -190,7 +218,10 @@ class ReplicationManager:
 
     def decision_of(self, txn: str) -> Optional[str]:
         with self.lock:
-            return self.decisions.get(txn)
+            d = self.decisions.get(txn)
+            if d is None and txn in self._retired_commits:
+                return "commit"   # retired entries were all commits (§10 GC)
+            return d
 
     def chain_of(self, txn: str) -> List[dict]:
         with self.lock:
@@ -205,9 +236,14 @@ class ReplicationManager:
         with self.lock:
             for fl in self.followers.values():
                 targets.update(fl)
+            # GC bookkeeping: this node is the ledger *head* for ``txn``.
+            # The entry retires (here and at every target) once every
+            # target acked the decision AND the transaction ended locally.
+            self._acks[txn] = set(targets)
+            self._retire_targets[txn] = sorted(targets)
         for t in sorted(targets):
             self._notify(t, "repl_decision", txn=txn, decision="commit",
-                         chain=chain)
+                         chain=chain, head=self.core.address)
 
     # ------------------------------------------------------------------ #
     # follower side                                                      #
@@ -237,6 +273,14 @@ class ReplicationManager:
                 return   # stale (re)init from an older generation
             self.replicas[name] = ReplicaRecord(
                 name, primary, order, epoch, payload, (epoch, seq))
+        leases = getattr(self.core, "leases", None)
+        if leases is not None:
+            # Implicit promise (§10): accepting a chain seat IS a promise
+            # not to promote past this primary until its lease could have
+            # lapsed. Without it, a takeover in the window before the
+            # first renewal round would race a healthy, un-fenced primary
+            # (promises otherwise only appear on ``lease_renew``).
+            leases.on_grant(name, epoch, primary)
 
     def repl_apply(self, name: str, txn: str, epoch: int, seq: int,
                    payload: bytes, head: str) -> None:
@@ -253,8 +297,11 @@ class ReplicationManager:
 
     def repl_final(self, name: str, txn: str, epoch: int, seq: int) -> None:
         with self.lock:
-            self.decisions.setdefault(txn, "commit")
             rec = self.replicas.get(name)
+            if rec is not None and epoch < rec.epoch:
+                return   # fenced-out primary generation (§10): reject
+            self.decisions.setdefault(txn, "commit")
+            self._trim_ledger()
             if rec is None or rec.promoted:
                 return
             t = rec.tentative.pop(txn, None)
@@ -268,8 +315,92 @@ class ReplicationManager:
                 rec.tentative.pop(txn, None)
 
     def repl_decision(self, txn: str, decision: str,
-                      chain: List[dict]) -> None:
+                      chain: List[dict], head: Optional[str] = None) -> None:
         self.record_decision(txn, decision, chain)
+        if head and head != self.core.address:
+            # Ack the ledger head so it can retire the entry (§10 GC).
+            self._notify(head, "repl_decision_ack", count=False,
+                         txn=txn, node=self.core.address)
+
+    # ------------------------------------------------------------------ #
+    # ledger GC (§10)                                                    #
+    # ------------------------------------------------------------------ #
+    def repl_decision_ack(self, txn: str, node: str) -> None:
+        with self.lock:
+            pending = self._acks.get(txn)
+            if pending is not None:
+                pending.discard(node)
+        self._maybe_retire(txn)
+
+    def mark_ended(self, txn: str) -> None:
+        """The transaction's commit drive completed on this node — its
+        ledger entry may retire as soon as every follower has acked."""
+        with self.lock:
+            if txn not in self.decisions:
+                return
+            self._ended.add(txn)
+        self._maybe_retire(txn)
+
+    def _memo_retired(self, txn: str) -> None:
+        """Remember a retired commit id (lock held by caller)."""
+        self._retired_commits[txn] = None
+        self._retired_commits.move_to_end(txn)
+        while len(self._retired_commits) > RETIRED_MEMO_CAP:
+            self._retired_commits.popitem(last=False)
+
+    def _maybe_retire(self, txn: str) -> None:
+        with self.lock:
+            pending = self._acks.get(txn)
+            if pending is None or pending or txn not in self._ended:
+                return
+            self._acks.pop(txn, None)
+            self._ended.discard(txn)
+            targets = self._retire_targets.pop(txn, [])
+            self.decisions.pop(txn, None)
+            self.chains.pop(txn, None)
+            self._memo_retired(txn)
+            self.n_retired += 1
+        for t in targets:   # sends outside the lock, like every one-way
+            self._notify(t, "repl_retire", count=False, txn=txn)
+
+    def repl_retire(self, txn: str) -> None:
+        """Head says every chain member acked: drop the ledger entry. Any
+        tentative for ``txn`` was resolved before this node's ack went out
+        (FIFO link: repl_apply ≺ repl_decision ≺ our ack ≺ repl_retire)."""
+        with self.lock:
+            self.decisions.pop(txn, None)
+            self.chains.pop(txn, None)
+            self._memo_retired(txn)
+
+    def fully_acked_unretired(self) -> int:
+        """Invariant probe: at convergence this is 0 — every fully-acked,
+        ended entry has been retired (simsweep ledger-boundedness check)."""
+        with self.lock:
+            return sum(1 for txn, pending in self._acks.items()
+                       if not pending and txn in self._ended)
+
+    def ledger_stats(self) -> Dict[str, int]:
+        with self.lock:
+            return {"decisions": len(self.decisions),
+                    "heads_unretired": len(self._acks),
+                    "fully_acked_unretired": self.fully_acked_unretired(),
+                    "retired": self.n_retired,
+                    "retired_memo": len(self._retired_commits)}
+
+    def _trim_ledger(self) -> None:
+        """Follower-side backstop: bound the ledger even if heads died
+        before retiring. Must be called with the lock held."""
+        if len(self.decisions) <= LEDGER_CAP:
+            return
+        referenced = {txn for rec in self.replicas.values()
+                      for txn in rec.tentative}
+        for txn in list(self.decisions):
+            if len(self.decisions) <= LEDGER_CAP:
+                break
+            if txn in self._acks or txn in referenced:
+                continue   # head-tracked / still resolving: never evict
+            self.decisions.pop(txn, None)
+            self.chains.pop(txn, None)
 
     # ------------------------------------------------------------------ #
     # promotion                                                          #
@@ -343,6 +474,11 @@ class ReplicationManager:
         self.followers[name] = tail
         self.epochs[name] = epoch
         rec.promoted = True
+        leases = getattr(self.core, "leases", None)
+        if leases is not None:
+            # Ownership is lease-based (§10): the promotion IS a lease
+            # grant at the new epoch — renewal over `tail` starts now.
+            leases.grant_local(name, epoch)
         log.info("promoted to primary of %r (epoch %d, %d followers)",
                  name, epoch, len(tail))
         if tail:
@@ -350,6 +486,32 @@ class ReplicationManager:
                 self._notify(f, "repl_init", count=False, name=name,
                              primary=me, order=tail, epoch=epoch,
                              payload=rec.payload, seq=0)
+
+    # ------------------------------------------------------------------ #
+    # ownership migration (§10)                                          #
+    # ------------------------------------------------------------------ #
+    def adopt(self, name: str, followers: List[str], epoch: int,
+              payload: bytes) -> None:
+        """Become primary of ``name`` by *handoff* (migrate_in): take over
+        the chain at the shipped epoch, re-seed the followers, and mark any
+        local replica record promoted so the old primary's stale one-ways
+        are ignored."""
+        followers = [f for f in followers if f != self.core.address]
+        with self.lock:
+            self.followers[name] = list(followers)
+            self.epochs[name] = epoch
+            rec = self.replicas.get(name)
+            if rec is not None:
+                rec.promoted = True
+        for f in followers:
+            self._notify(f, "repl_init", count=False, name=name,
+                         primary=self.core.address, order=list(followers),
+                         epoch=epoch, payload=payload, seq=0)
+
+    def drop_primary(self, name: str) -> None:
+        """Old primary after a successful handoff: stop replicating."""
+        with self.lock:
+            self.followers.pop(name, None)
 
     # ------------------------------------------------------------------ #
     # client recovery                                                    #
@@ -360,8 +522,14 @@ class ReplicationManager:
         died before making it recoverable — doom to abort, first-writer-
         wins (atomic either way: the decision broadcast precedes every
         effect of the decision, so a doomed transaction committed
-        nowhere)."""
+        nowhere). A *retired* commit (fully acked + GC'd before the
+        client's reply arrived — e.g. the coordinator crashed between the
+        decision drive and the reply send) answers ``commit`` from the
+        retired memo: its chain already drove to completion everywhere, so
+        no re-drive is needed."""
         with self.lock:
+            if txn not in self.decisions and txn in self._retired_commits:
+                return "commit", []
             d = self.decisions.setdefault(txn, "abort")
             if d == "abort":
                 self._resolve_tentatives_abort(txn)

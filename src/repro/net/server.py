@@ -75,20 +75,22 @@ import socket
 import sys
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core.api import (INF, InstanceInvalidated, Mode, Suprema,
+from repro.core.api import (INF, InstanceInvalidated, Mode,
+                            RemoteObjectFailure, Suprema,
                             TransactionError, method_mode)
 from repro.core.buffers import CopyBuffer
 from repro.core.executor import Task, defer_wake_inline
 from repro.core.faults import TransactionMonitor
 from repro.core.registry import Registry, SharedObject
 from repro.core.transaction import ObjectAccess
-from repro.core.versioning import skip_version
+from repro.core.versioning import blocking_wait, skip_version, wait_quiescent
 
 from repro.obs import metrics as _metrics
 from repro.obs import txtrace as _txtrace
 
+from .leases import LeaseManager, ObjectMovedError
 from .replication import ReplicationManager
 from .wire import (ConnectionClosed, ERR, FrameReader, NOTE, OK,
                    PIGGYBACK_MAX, WireError, encode_error,
@@ -97,6 +99,12 @@ from .wire import (ConnectionClosed, ERR, FrameReader, NOTE, OK,
 log = logging.getLogger("repro.net.server")
 
 _SERVER_SUP = Suprema(reads=INF, writes=INF, updates=INF)
+
+#: Auto-migration trigger (§10): a remote affinity group must cast at
+#: least this many votes on an object AND lead every other group 2:1
+#: before a lease handoff is queued — hysteresis against ping-ponging a
+#: hot object between two balanced accessors.
+MIGRATE_THRESHOLD = 8
 
 
 class _WouldBlock(Exception):
@@ -470,6 +478,16 @@ class NodeCore:
         self._lock = threading.Lock()
         #: replica chains + decision ledger (DESIGN.md §8)
         self.replication = ReplicationManager(self)
+        #: ownership leases + epoch fencing + redirect tombstones (§10)
+        self.leases = LeaseManager(self)
+        #: migration drain-barriers in flight: name -> threading.Event
+        #: (set when the migration resolves either way); per-object
+        #: access-affinity votes: name -> {node_addr: count}.
+        self._migrating: Dict[str, threading.Event] = {}
+        self._affinity: Dict[str, Dict[str, int]] = {}
+        self._migrate_queue: List[Tuple[str, str]] = []
+        self.migrate_auto = False       # affinity-triggered handoff opt-in
+        self.n_migrations = 0
         #: observability: one trace track + metric namespace per node,
         #: reading THIS node's clock domain (monotonic vs. sim-virtual).
         #: Created even when tracing is off — a bare Tracer holds no ring
@@ -543,7 +561,12 @@ class NodeCore:
         ``now - monitor.timeout`` (§3.4) — the one staleness scan shared
         by the TCP real-time reaper thread and the simulation's
         virtual-clock reaper events. Returns True iff sessions remain
-        (the caller decides whether to keep polling)."""
+        (the caller decides whether to keep polling).
+
+        Lease renewal rides the same cadence: one-way ``lease_renew``
+        sends are non-blocking, so the tick is safe in both the TCP
+        reaper thread and the simulation's scheduler loop."""
+        self.leases.tick(now)
         with self._lock:
             stale = [(uid, s) for uid, s in self._sessions.items()
                      if now - s.last_contact > self.monitor.timeout]
@@ -695,7 +718,16 @@ class NodeCore:
 
     # -- helpers ------------------------------------------------------------
     def _shared(self, name: str) -> SharedObject:
-        return self.registry.locate(name)
+        try:
+            return self.registry.locate(name)
+        except KeyError:
+            # A migrated-away binding: the name is gone from the local
+            # registry but the lease layer keeps the epoch-fenced redirect
+            # tombstone — raise the redirect (which clients follow) rather
+            # than a bare KeyError no transport can act on. Never-bound
+            # names still get the KeyError.
+            self.leases.check_grant(name)
+            raise
 
     def _session(self, txn: str) -> _Session:
         with self._lock:
@@ -753,6 +785,111 @@ class NodeCore:
             except RuntimeError:  # pragma: no cover - already released
                 pass
 
+    # -- ownership migration (§10) --------------------------------------------
+    def _spawn_bg(self, fn: Callable[[], None], name: str = "bg") -> None:
+        """Run a blocking background job (migration drain). The simulation
+        overrides this to run the job on a handler actor, on virtual time."""
+        threading.Thread(target=fn, name=f"{name}-{self.node_name}",
+                         daemon=True).start()
+
+    def _affinity_vote(self, name: str, affinity: str) -> None:
+        """Per-object access-affinity tally (§10): every dispense carries
+        the client's locality hint; a sustained dominant remote accessor
+        triggers a lease handoff to it. Votes are cheap bookkeeping — the
+        migration itself is queued and drained off the op path."""
+        if not affinity:
+            return
+        with self._lock:
+            tally = self._affinity.setdefault(name, {})
+            tally[affinity] = tally.get(affinity, 0) + 1
+            if not self.migrate_auto or affinity == self.address:
+                return
+            votes = tally[affinity]
+            rest = max((v for a, v in tally.items() if a != affinity),
+                       default=0)
+            if votes < MIGRATE_THRESHOLD or votes < 2 * max(rest, 1):
+                return
+            if (name in self._migrating
+                    or any(n == name for n, _t in self._migrate_queue)):
+                return
+            tally.clear()
+            self._migrate_queue.append((name, affinity))
+
+    def _drain_migrations(self) -> None:
+        with self._lock:
+            pending, self._migrate_queue = self._migrate_queue, []
+        for name, target in pending:
+            self._spawn_bg(lambda n=name, t=target: self._do_migrate(n, t),
+                           name="migrate")
+
+    def _do_migrate(self, name: str, target: str) -> bool:
+        """Ownership handoff as a drain-barrier (§10).
+
+        1. Mark the object migrating *under its header lock* — paired with
+           the grant check in ``_op_dispense_batch``, so no new version is
+           dispensed after the mark.
+        2. Drain: wait until every dispensed version terminated
+           (``gv == lv == ltv``). After the drain there are no in-flight
+           accesses and no undecided tentatives for this object, so the
+           applied state is the whole truth — a fresh header at the target
+           is exact, like the promotion path.
+        3. Ship state + epoch + 1 + the new chain (old primary joins it as
+           a follower) via a synchronous ``migrate_in``.
+        4. Atomically re-point: unbind here, leave an epoch-fenced redirect
+           tombstone; parked dispensers wake, re-check, and raise
+           :class:`ObjectMovedError`, which clients follow without
+           reconnecting.
+        """
+        try:
+            shared = self._shared(name)
+        except KeyError:
+            return False
+        if shared.node is not self.node or target == self.address:
+            return False
+        h = shared.header
+        ev = threading.Event()
+        with h.lock:
+            if name in self._migrating:
+                return False
+            try:
+                self.leases.check_grant(name)
+            except RemoteObjectFailure:
+                return False        # fenced or already moved: nothing to do
+            self._migrating[name] = ev
+        t0 = self.obs_tracer.now() if _txtrace.enabled else 0.0
+        ok = False
+        try:
+            if not wait_quiescent(h, timeout=5 * self.leases.ttl):
+                return False        # drain never settled: abort the handoff
+            payload = pickle.dumps(shared.holder.obj,
+                                   protocol=pickle.HIGHEST_PROTOCOL)
+            epoch = self.replication.epochs.get(name, 0) + 1
+            chain = [self.address] + [
+                f for f in self.replication.followers_of(name)
+                if f != target and f != self.address]
+            self._peer(target).call("migrate_in", name=name, payload=payload,
+                                    epoch=epoch, followers=chain)
+            self.replication.drop_primary(name)
+            self.registry.unbind(name)
+            self.leases.drop_local(name, target, epoch, chain)
+            with self._lock:
+                self._affinity.pop(name, None)
+                self.n_migrations += 1
+            ok = True
+            return True
+        except Exception as e:  # noqa: BLE001 - target died mid-handoff
+            log.warning("migration of %r -> %s failed: %r", name, target, e)
+            return False
+        finally:
+            with h.lock:
+                self._migrating.pop(name, None)
+            ev.set()
+            if _txtrace.enabled:
+                self.obs_tracer.emit(
+                    "migrate", t0, self.obs_tracer.now() - t0,
+                    detail=f"{name}->{target}"
+                           f"{'' if ok else ' (failed)'}")
+
     # -- directory ----------------------------------------------------------
     def _op_ping(self) -> Dict[str, Any]:
         return {"node": self.node_name, "time": time.time(),
@@ -788,6 +925,9 @@ class NodeCore:
             self._gates[name] = threading.Lock()
         if followers:
             self.replication.set_followers(name, list(followers), obj)
+        # Ownership starts as a lease (§10): granted at the binding epoch,
+        # renewed over the chain. Follower-less binds self-renew trivially.
+        self.leases.grant_local(name, self.replication.epochs.get(name, 0))
         return self._declared_modes(obj)
 
     def _op_mode_of(self, name: str, method: str) -> Mode:
@@ -796,6 +936,7 @@ class NodeCore:
     def _op_raw_call(self, name: str, method: str, args: tuple,
                      kwargs: dict) -> Any:
         """Non-transactional direct invocation (Registry-level access)."""
+        self.leases.check_grant(name)
         return self._shared(name).raw_call(method, args, kwargs)
 
     # -- header surface (RemoteHeader duck type) -----------------------------
@@ -821,7 +962,7 @@ class NodeCore:
     # -- start: batched version dispensing (§2.10.2) -------------------------
     def _op_dispense_batch(self, txn: str, client_id: str, names: List[str],
                            ro_names: List[str] = (), kind: str = "access",
-                           chain: List[dict] = (),
+                           chain: List[dict] = (), affinity: str = "",
                            _conn: Optional[_Conn] = None,
                            _nb: bool = False) -> Dict[str, Any]:
         """Lock-and-dispense for this node's batch; then *forward the
@@ -856,8 +997,21 @@ class NodeCore:
                 self._gate_acquire(gate, nb=_nb)
                 acquired.append(gate)
             for shared, name in objs:
-                with shared.header.lock:
-                    pv = shared.header.dispense()
+                # Lease fence + drain-barrier (§10): no version is ever
+                # granted by a fenced primary or while a migration is
+                # draining the header. Both checks sit under the header
+                # lock, paired with `_do_migrate` which marks the object
+                # under the same lock — so a grant and a drain snapshot
+                # can never interleave.
+                while True:
+                    with shared.header.lock:
+                        ev = self._migrating.get(name)
+                        if ev is None:
+                            self.leases.check_grant(name)
+                            pv = shared.header.dispense()
+                            break
+                    blocking_wait(ev, None)  # drain in progress: park, redo
+                self._affinity_vote(name, affinity)
                 with session.lock:   # heartbeats iterate _accesses live
                     session._accesses[shared] = _ServerAccess(
                         self, session, shared, pv)
@@ -1133,6 +1287,12 @@ class NodeCore:
         it must wait for every node's validation verdict. ``origin`` names
         the chained commit's coordinator (None outside a chain): tentative
         replication ships it so a promoting follower knows whom to ask."""
+        # Lease fence (§10): a primary that lost its lease must not apply
+        # commits — the promoted follower's epoch owns the object now. The
+        # abort/rollback paths deliberately stay fence-free (converging
+        # versions must always work, or survivors wedge).
+        for name, _entries in items:
+            self.leases.check_grant(name)
         blocked = 0
         for name, _entries in items:
             if self._acc(txn, name).wait_termination(timeout):
@@ -1214,6 +1374,7 @@ class NodeCore:
             # the commit still drives to completion everywhere else.
             log.warning("coordinator-local finish failed for %r: %r", txn, e)
         self._drive_decision(txn, decision_chain)
+        self.replication.mark_ended(txn)   # ledger GC: retirable once acked
         return {"blocked": res["blocked"], "bad": [], "decided": True}
 
     def _op_commit_decide(self, txn: str, names: List[str],
@@ -1403,6 +1564,9 @@ class NodeCore:
             # ghost session no reaper ever visits.
             session.expired = True
             self._release_gates(session)
+        # Quiet point: queued affinity-triggered handoffs start now, off
+        # the op path (the drain would stall this reply otherwise).
+        self._drain_migrations()
 
     def _op_abandon(self, txn: str) -> None:
         """Failed-start cleanup: expire the session now (chain-order skip
@@ -1432,6 +1596,104 @@ class NodeCore:
         """Caller-driven failover: try to become primary for ``names``
         (idempotent). See :meth:`ReplicationManager.promote`."""
         return self.replication.promote(list(names))
+
+    # -- leases + ownership migration (§10) -----------------------------------
+    def _op_lease_renew(self, name: str, epoch: int, ttl: float,
+                        primary: str) -> None:
+        self.leases.on_renew(name, epoch, ttl, primary)
+
+    def _op_lease_ack(self, name: str, epoch: int, ok: bool, cur_epoch: int,
+                      node: str) -> None:
+        self.leases.on_ack(name, epoch, ok, cur_epoch, node)
+
+    def _op_lease_grant(self, name: str, epoch: int, primary: str) -> bool:
+        return self.leases.on_grant(name, epoch, primary)
+
+    def _op_lease_acquire(self, names: List[str]) -> Dict[str, List[str]]:
+        """Lease-based takeover (§10): ``ensure_primary``'s server half.
+
+        Refuses *busy* while the current primary's promise is still live
+        (it self-fences before the promise lapses — waiting it out is what
+        makes the takeover split-brain free); then promotes through the
+        replication state machine (which grants the local lease at the new
+        epoch) and collects the quorum-of-chain acknowledgement with
+        synchronous ``lease_grant`` calls to the remaining followers."""
+        busy: List[str] = []
+        for n in names:
+            if self.has_binding(n):
+                continue
+            p = self.leases.promised_primary(n)
+            if p is None:
+                continue
+            if self._provably_dead(p):
+                # Crash-stop fast path: a *refused* connection means the
+                # promised primary's process is gone for good — void the
+                # promise instead of waiting out a TTL that can never be
+                # exercised again.
+                self.leases.void_promise(n, p)
+            else:
+                busy.append(n)
+        if busy:
+            return {"promoted": [], "busy": busy}
+        res = self.replication.promote(list(names))
+        for name in list(res["promoted"]):
+            epoch = self.replication.epochs.get(name, 0)
+            for addr in self.replication.followers_of(name):
+                try:
+                    ok = self._peer(addr).call(
+                        "lease_grant", name=name, epoch=epoch,
+                        primary=self.address)
+                except Exception:  # noqa: BLE001 - dead follower: departs
+                    self.leases.departed.add(addr)
+                    continue
+                if not ok:
+                    # the follower knows a successor epoch: our promotion
+                    # was stale — fence it permanently and report busy so
+                    # the caller re-resolves.
+                    self.leases.on_ack(name, epoch, ok=False,
+                                       cur_epoch=epoch + 1, node=addr)
+                    res["promoted"].remove(name)
+                    res["busy"].append(name)
+                    break
+        return res
+
+    def _provably_dead(self, address: str) -> bool:
+        """Probe a promised primary before honoring its promise. Only a
+        *synchronously refused* connection is proof of death (crash-stop:
+        the process is gone and never returns). A ping reply means alive;
+        silence, a reset, or any in-flight failure could be a partition —
+        then the promise must be waited out (§10 split-brain freedom)."""
+        try:
+            fut = self._peer(address).call_async("ping")
+        except Exception:  # noqa: BLE001 - refused at connect/send: dead
+            return True
+        try:
+            fut.result(timeout=max(2 * self.leases.ttl, 0.05))
+        except Exception:  # noqa: BLE001 - ambiguous: treat as alive
+            return False
+        return False
+
+    def _op_migrate(self, name: str, target: str) -> bool:
+        """Forced lease handoff (admin/benchmarks/sweeps): synchronous —
+        the reply means the drain-barrier completed one way or the other."""
+        return self._do_migrate(name, target)
+
+    def _op_migrate_in(self, name: str, payload: bytes, epoch: int,
+                       followers: List[str]) -> bool:
+        """Target side of the §10 handoff: bind the shipped state under a
+        fresh header, adopt the chain at the shipped epoch, take the lease.
+        Idempotent — a retried handoff finds the binding already here."""
+        if not self.has_binding(name):
+            self.bind_local(name, pickle.loads(payload))
+        self.replication.adopt(name, list(followers), epoch, payload)
+        self.leases.grant_local(name, epoch)
+        return True
+
+    def _op_repl_decision_ack(self, **kw: Any) -> None:
+        self.replication.repl_decision_ack(**kw)
+
+    def _op_repl_retire(self, **kw: Any) -> None:
+        self.replication.repl_retire(**kw)
 
     def _op_txn_status(self, txn: str) -> str:
         """The coordinator's decision memo, queried by a promoting
@@ -1464,6 +1726,9 @@ class NodeCore:
         return {"node": self.node_name, "sessions": sessions,
                 "rollbacks": list(self.monitor.rollbacks),
                 "repl_sent": self.replication.n_sent,
+                "leases": self.leases.stats(),
+                "ledger": self.replication.ledger_stats(),
+                "migrations": self.n_migrations,
                 "metrics": self.obs_metrics.snapshot()}
 
     def _op_trace_dump(self, reset: bool = False) -> List[dict]:
@@ -1498,7 +1763,8 @@ class NodeServer(NodeCore):
         "ensure_checkpoint", "buffer_snapshot", "snap_release", "stats",
         "touch", "clear_holder", "heartbeat", "abandon", "ro_buffer",
         "lw_apply", "repl_init", "repl_apply", "repl_final", "repl_drop",
-        "repl_decision", "txn_status",
+        "repl_decision", "repl_decision_ack", "repl_retire", "txn_status",
+        "lease_renew", "lease_ack", "lease_grant", "migrate_in",
     })
 
     #: wire v3 ships bulk payloads as out-of-band segments.

@@ -209,6 +209,7 @@ class SimTransport(Transport):
         self.to_server = _Link()
         self.to_client = _Link()
         self._hb_armed = False
+        self.affinity = simnet._affinity.get(client_id)
         simnet._register_transport(self)
 
     # -- message primitives ---------------------------------------------------
@@ -273,6 +274,13 @@ class SimTransport(Transport):
         """Transport-clocked backoff (failover grace / promote retries):
         virtual time inside the simulation, a short native wait outside."""
         self.simnet.sleep(seconds)
+
+    def failover_grace(self) -> float:
+        """Virtual-clock failure-detection grace, derived from the
+        simulated link latencies (100x the worst one-way) instead of a
+        wall-clock constant — so sweeps with stretched latencies keep the
+        detection-time >> flight-time assumption by construction."""
+        return max(100.0 * self.simnet.latency[1], 1e-4)
 
     def close(self) -> None:
         self.alive = False
@@ -375,6 +383,12 @@ class SimNode(NodeCore):
             self._peers[address] = peer
         return peer
 
+    def _spawn_bg(self, fn: Callable[[], None], name: str = "bg") -> None:
+        """Background jobs (migration drains) run on a handler actor: they
+        may block at virtual-time waits, and must never block the
+        scheduler loop itself."""
+        self.simnet._spawn_handler(fn, self)
+
     # -- tracing hooks --------------------------------------------------------
     def _op_dispense_batch(self, *args: Any, **kwargs: Any):
         out = super()._op_dispense_batch(*args, **kwargs)
@@ -419,6 +433,8 @@ class SimNet:
         self._node_op_counts: Dict[Tuple[str, str], int] = {}
         self._crashed_clients: Dict[str, str] = {}   # client_id -> label
         self.fired_injections: List[str] = []
+        self._partitions: List[dict] = []   # active cuts: {a, b, label}
+        self._affinity: Dict[str, str] = {}   # client_id -> home address
         self._sched_sem = threading.Semaphore(0)
         self._tl = threading.local()
         self._running = False
@@ -456,6 +472,38 @@ class SimNet:
     def _transport_for(self, client_id: str,
                        node_name: str) -> Optional[SimTransport]:
         return self._transports.get((client_id, node_name))
+
+    def set_affinity(self, client_id: str, address: str) -> None:
+        """Declare a client process's locality group (a node address): it
+        rides every dispense batch the client sends and feeds the home
+        node's per-object affinity counters (§10 lease migration)."""
+        self._affinity[client_id] = address
+        for (cid, _n), t in self._transports.items():
+            if cid == client_id:
+                t.affinity = address
+
+    # -- partitions (§10 split-brain exploration) ------------------------------
+    def partition(self, a_nodes: List[str], b_nodes: List[str],
+                  start: float, duration: float,
+                  label: Optional[str] = None) -> None:
+        """Cut the server-to-server links between node groups ``a`` and
+        ``b`` during ``[start, start + duration)`` of virtual time. Client
+        links stay up on BOTH sides — the split-brain scenario: clients
+        keep talking to a primary that can no longer renew its lease while
+        the other side promotes. Cut peer frames are dropped (one-ways
+        silently; requests/replies fail the in-flight future, the TCP-RST
+        analogue), all counted in ``dropped``."""
+        cut = {"a": frozenset(a_nodes), "b": frozenset(b_nodes),
+               "label": label or f"{'+'.join(a_nodes)}|{'+'.join(b_nodes)}"}
+        self._push(start, "partition_on", cut)
+        self._push(start + duration, "partition_off", cut)
+
+    def _is_cut(self, sender: str, receiver: str) -> bool:
+        for cut in self._partitions:
+            if ((sender in cut["a"] and receiver in cut["b"])
+                    or (sender in cut["b"] and receiver in cut["a"])):
+                return True
+        return False
 
     def client_registry(self, client_id: str) -> Registry:
         """A client-side :class:`Registry` for one simulated client
@@ -816,6 +864,13 @@ class SimNet:
             self._fire_reaper(payload)
         elif kind == "node_crash":
             self._do_node_crash(payload)
+        elif kind == "partition_on":
+            self._partitions.append(payload)
+            self._trace(f"partition-on {payload['label']}")
+        elif kind == "partition_off":
+            if payload in self._partitions:
+                self._partitions.remove(payload)
+                self._trace(f"partition-off {payload['label']}")
         elif kind == "unlock":
             t, link = payload
             link.locked = False
@@ -859,6 +914,20 @@ class SimNet:
             node._client_vanished(t.client_id)
             return
         op, (kwargs, fut) = a, b
+        if (self._partitions and t.client_id.startswith("peer:")
+                and self._is_cut(t.client_id[5:], node.node_name)):
+            # A cut peer link: the frame is lost. One-ways go silently
+            # (lease renewals starve — that is the point); a request's
+            # sender learns promptly (the TCP-RST analogue), so no actor
+            # is stranded awaiting a reply that can never come.
+            self._trace(f"drop {t.client_id}->{node.node_name} "
+                        f"{self._msg_label(req_id, op, kwargs)} (partition)")
+            self.dropped += 1
+            if fut is not None and not fut.done():
+                fut.set_error(RemoteObjectFailure(
+                    f"link {t.client_id}->{node.address} partitioned with "
+                    f"{op!r} in flight"))
+            return
         self._check_node_injection(node, op)
         if not node.alive:
             self._trace(f"drop {t.client_id}->{node.node_name} "
@@ -917,6 +986,19 @@ class SimNet:
             self._trace(f"drop {node.node_name}->{t.client_id} "
                         f"{kind}#{req_id} (client crashed)")
             self.dropped += 1
+            return
+        if (self._partitions and t.client_id.startswith("peer:")
+                and self._is_cut(node.node_name, t.client_id[5:])):
+            self._trace(f"drop {node.node_name}->{t.client_id} "
+                        f"{kind}#{req_id} (partition)")
+            self.dropped += 1
+            if kind == "reply":
+                with t._lock:
+                    fut = t._pending.pop(req_id, None)
+                if fut is not None and not fut.abandoned:
+                    fut.set_error(RemoteObjectFailure(
+                        f"link {node.address}->{t.client_id} partitioned "
+                        f"with reply#{req_id} in flight"))
             return
         self.delivered += 1
         if kind == "reply":

@@ -161,6 +161,10 @@ class Transport:
         self.address = address
         self.client_id = client_id
         self.alive = True
+        #: optional locality hint (a node address) shipped with dispense
+        #: batches — feeds the home node's per-object access-affinity
+        #: counters that drive lease migration (DESIGN.md §10).
+        self.affinity: Optional[str] = None
         self._lock = threading.Lock()
         self._tasks: Dict[Tuple[str, str], TaskWait] = {}
         self._deferred: Dict[str, List[BaseException]] = {}
@@ -226,6 +230,15 @@ class Transport:
         """Transport-clocked backoff (failover promote retries): real time
         on TCP, virtual time under the simulation transport."""
         time.sleep(seconds)
+
+    def failover_grace(self) -> float:
+        """Failure-detection grace before promoting a follower or querying
+        a decision ledger (DESIGN.md §8): one detection period >> the
+        maximum one-way latency, so every frame a dead primary queued
+        before crashing has landed by promotion time. Transport-supplied
+        so the simulation derives it from its *virtual* link latencies
+        instead of a wall-clock constant."""
+        return 0.05
 
     def close(self) -> None:
         raise NotImplementedError

@@ -87,6 +87,94 @@ def test_tcp_killed_primary_follower_serves_committed_state():
 
 
 # --------------------------------------------------------------------------- #
+# double fault: primary AND every follower dead -> clean refusal              #
+# --------------------------------------------------------------------------- #
+
+def test_tcp_double_fault_refuses_cleanly_no_partial_apply():
+    """Kill the primary and its only follower: a transaction touching the
+    doomed object must fail promptly with RemoteObjectFailure — no hang,
+    and nothing partially applied on the surviving node."""
+    with spawn_server("dbl2") as h2:
+        h0 = spawn_server("dbl0")
+        h1 = spawn_server("dbl1")
+        try:
+            reg = Registry()
+            for h in (h0, h1, h2):
+                reg.connect(h.address)
+            for node in reg.nodes:
+                if node.address == h0.address:
+                    node.bind("A", Account(1000), followers=[h1.address])
+                if node.address == h2.address:
+                    node.bind("B", Account(500))
+
+            h0.kill()
+            h1.kill()
+
+            def doomed_transfer():
+                t = Transaction(reg)
+                a = t.updates(reg.locate("A"), 1)
+                b = t.updates(reg.locate("B"), 1)
+
+                def body(tt):
+                    a.withdraw(100)
+                    b.deposit(100)
+
+                t.start(body)
+
+            t0 = time.monotonic()
+            with pytest.raises(RemoteObjectFailure):
+                # both the primary and the whole chain are gone: every
+                # failover candidate refuses, the client must NOT retry
+                # forever
+                _retry_txn(doomed_transfer, deadline=8.0)
+            assert time.monotonic() - t0 < 30.0   # refusal, not a hang
+
+            # zero partial apply: the survivor-side deposit never landed
+            t2 = Transaction(reg)
+            rb = t2.reads(reg.locate("B"), 1)
+            assert t2.start(lambda tt: rb.balance()) == 500
+            reg.shutdown()
+        finally:
+            h0.stop()
+            h1.stop()
+
+
+def test_sim_double_fault_refuses_cleanly_no_partial_apply():
+    net = build_simnet(seed=11, n_nodes=3)
+    setup = net.client_registry("setup")
+    n0, n1, n2 = sorted(setup.nodes, key=lambda n: n.name)
+    n0.bind("A", Account(1000), followers=[n1.address])
+    n2.bind("B", Account(500))
+    out = {}
+
+    def client():
+        reg = net.client_registry("c0")
+        net.crash_node_at("node0", 0.01)
+        net.crash_node_at("node1", 0.01)
+        reg.nodes[0].client.sleep(0.05)
+        try:
+            t = Transaction(reg)
+            a = t.updates(reg.locate("A"), 1)
+            b = t.updates(reg.locate("B"), 1)
+
+            def body(tt):
+                a.withdraw(100)
+                b.deposit(100)
+
+            t.start(body)
+            out["error"] = None
+        except RemoteObjectFailure as e:
+            out["error"] = e
+
+    net.spawn(client, "c0")
+    net.run()      # returning at all proves no wedge (SimDeadlock otherwise)
+    assert isinstance(out["error"], RemoteObjectFailure)
+    # zero partial apply on the survivor
+    assert setup.locate("B").raw_call("balance") == 500
+    net.shutdown()
+
+
+# --------------------------------------------------------------------------- #
 # exactly-once application across the chain                                   #
 # --------------------------------------------------------------------------- #
 
@@ -286,4 +374,20 @@ def test_equivalence_inproc_tcp_sim_across_failover():
 ])
 def test_sweep_regression_seed(seed, node_faults):
     res = simsweep.run_seed(seed, faults=True, node_faults=node_faults)
+    assert res["failures"] == [], (seed, res["failures"])
+
+
+@pytest.mark.parametrize("seed", [
+    1,    # partition seed: node0 cut from peers, lazy fence + failover
+    10,   # fenced-forever: check_grant must retry a round before refusing
+    42,   # ledger GC raced client recovery: retired commit doomed to abort
+    130,  # lazy fence on idle lapse must heal via departed-follower round
+    36,   # migrated-away binding: redirect, not KeyError; no ghost session
+])
+def test_sweep_membership_churn_regression_seed(seed):
+    """Seeds that found real §10 lease/migration/partition bugs: each one
+    is pinned with the full membership-churn fault plan (node crashes,
+    a node0 partition on odd seeds, forced + affinity-driven migrations)."""
+    res = simsweep.run_seed(seed, faults=True, node_faults=True,
+                            partitions=True, migrations=True)
     assert res["failures"] == [], (seed, res["failures"])
