@@ -113,6 +113,7 @@ def check(baseline: dict, fresh: dict, max_regress: float) -> int:
         for metric in ("rpcs_per_txn", "oneways_per_txn",
                        "replication_oneways_per_txn", "commits",
                        "migrations_per_txn", "lease_renews_per_txn",
+                       "wal_appends_per_txn", "fsync_batches_per_txn",
                        "migrations"):
             if metric not in base:
                 continue

@@ -111,6 +111,9 @@ class Result:
     # -- membership metrics (sim transport only; 0.0 elsewhere) --------------
     migrations_per_txn: float = 0.0    # §10 lease handoffs completed
     lease_renews_per_txn: float = 0.0  # §10 lease-renewal one-ways sent
+    # -- durability metrics (sim transport only; 0.0 elsewhere) --------------
+    wal_appends_per_txn: float = 0.0   # §11 ledger records per committed txn
+    fsync_batches_per_txn: float = 0.0 # §11 group-commit flushes per txn
 
 
 Step = Tuple[Any, str, Optional[int]]  # (shared_obj, "read"/"write", value)
@@ -489,6 +492,15 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
     # one-ways sent, node-side (crashed nodes keep their counters).
     n_migr = sum(node.n_migrations for node in net._nodes.values())
     n_renew = sum(node.leases.n_renews for node in net._nodes.values())
+    # §11 durability metrics: ledger records appended and group-commit
+    # flush batches, node-side. Exact under simnet (the VirtualDisk is
+    # part of the deterministic schedule), so gate-able like the message
+    # plan: a protocol change that writes more WAL records per commit —
+    # or breaks fsync batching — moves these.
+    n_walapp = sum(node.wal.n_appends for node in net._nodes.values()
+                   if node.wal is not None)
+    n_walsync = sum(node.wal.n_syncs for node in net._nodes.values()
+                    if node.wal is not None)
     net.shutdown()
 
     commits = sum(s["commits"] for s in stats_per_client)
@@ -507,7 +519,9 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
                   replication_oneways_per_txn=round(
                       n_repl / max(commits, 1), 2),
                   migrations_per_txn=round(n_migr / max(commits, 1), 3),
-                  lease_renews_per_txn=round(n_renew / max(commits, 1), 3))
+                  lease_renews_per_txn=round(n_renew / max(commits, 1), 3),
+                  wal_appends_per_txn=round(n_walapp / max(commits, 1), 2),
+                  fsync_batches_per_txn=round(n_walsync / max(commits, 1), 2))
 
 
 def run_benchmark(framework: str, cfg: EigenConfig,

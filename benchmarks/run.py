@@ -170,7 +170,7 @@ def bench_scheduler_overhead(full: bool = False,
 # Transport-overhead bench (PR2, re-measured per PR): in-proc vs real TCP wire #
 # --------------------------------------------------------------------------- #
 def bench_transport_overhead(full: bool = False,
-                             out: str = "BENCH_PR8.json") -> None:
+                             out: str = "BENCH_PR9.json") -> None:
     """Per-transaction cost of the real wire (``repro.net``), honestly.
 
     The same Eigenbench schedule (read-dominated 9:1 — the paper's
@@ -273,6 +273,9 @@ def bench_transport_overhead(full: bool = False,
                        f"{r_sim.replication_oneways_per_txn};"
                        f"migrations_per_txn={r_sim.migrations_per_txn};"
                        f"lease_renews_per_txn={r_sim.lease_renews_per_txn};"
+                       f"wal_appends_per_txn={r_sim.wal_appends_per_txn};"
+                       f"fsync_batches_per_txn="
+                       f"{r_sim.fsync_batches_per_txn};"
                        f"commits={r_sim.commits};aborts={r_sim.aborts};"
                        f"waits={r_sim.waits};"
                        f"gate_wait_p50_us={gate_p50};"
@@ -289,11 +292,13 @@ def bench_transport_overhead(full: bool = False,
                 r_sim.replication_oneways_per_txn,
             "migrations_per_txn": r_sim.migrations_per_txn,
             "lease_renews_per_txn": r_sim.lease_renews_per_txn,
+            "wal_appends_per_txn": r_sim.wal_appends_per_txn,
+            "fsync_batches_per_txn": r_sim.fsync_batches_per_txn,
             "gate_wait_p50_us": gate_p50,
             "handoff_p50_us": handoff_p50})
     json_rows.extend(_bench_migration_rows())
     write_bench_json(out, json_rows, meta={
-        "bench": "transport_overhead", "pr": 8, "op_time_ms": 0.0,
+        "bench": "transport_overhead", "pr": 9, "op_time_ms": 0.0,
         "txns_per_client": txns, "repeats": repeats,
         "note": ("tcp = one node-server subprocess per registry node "
                  "(repro.net), honest wire over the multiplexed pipelined "
@@ -498,7 +503,7 @@ def main() -> None:
                          "fig13,roofline,step")
     ap.add_argument("--bench-out", default="BENCH_PR1.json",
                     help="JSON trajectory point for the sched table")
-    ap.add_argument("--transport-out", default="BENCH_PR8.json",
+    ap.add_argument("--transport-out", default="BENCH_PR9.json",
                     help="JSON trajectory point for the transport table "
                          "(per-PR: pass BENCH_PR<n>.json for PR n)")
     args = ap.parse_args()

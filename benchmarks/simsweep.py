@@ -56,12 +56,26 @@ before ``migrate_in`` lands — the old primary must keep serving) and
 ``node-mid-lease-renewal`` (kill a follower as a renewal arrives — the
 primary must depart it from the quorum, not fence).
 
+Durability / restarts (``--restarts``, DESIGN.md §11): every crashed
+node is restarted under its old identity — a fresh process replays the
+seed-deterministic virtual-disk WAL image the crash left behind
+(including torn tails) and runs the rejoin protocol against the live
+chains — and the plan list grows the ``node-mid-wal-append``,
+``restart-mid-catchup``, and ``double-fault-then-restart`` labels. Two
+§11 invariants ride on top: no committed-and-WAL'd write is lost across
+a restart (the final readback goes through the *healed* chains, and
+every restarted node must have replayed a non-empty image), and chain
+width recovers — once all nodes are back, each object has exactly one
+primary and a live follower again.
+
 Usage::
 
     python -m benchmarks.simsweep --seeds 200                  # PR gate
     python -m benchmarks.simsweep --seeds 100 --node-faults    # failover gate
     python -m benchmarks.simsweep --seeds 100 --node-faults \
         --partitions --migrations          # membership-churn gate (§10)
+    python -m benchmarks.simsweep --seeds 100 --node-faults \
+        --restarts                         # restart-churn gate (§11)
     python -m benchmarks.simsweep --seeds 5000 --trace-dir sim_traces
     python -m benchmarks.simsweep --seeds 200 --trace-dir sim_traces \
         --trace-failing          # + Perfetto span trace per failing seed
@@ -131,6 +145,32 @@ MEMBERSHIP_FAULT_PLANS = [
     ("node-mid-lease-renewal", "lease_renew", "before_deliver"),
 ]
 
+#: Durability / restart plans exercised only under ``--restarts``
+#: (DESIGN.md §11). Appended after the other lists so existing
+#: seed→plan mappings only change when the flag is on. These plans are
+#: scheduled by virtual time rather than op delivery, and every crashed
+#: node is restarted under its old identity (WAL replay + chain rejoin):
+#:
+#: * ``node-mid-wal-append`` — crash the node AT a WAL frame append,
+#:   tearing that frame: replay must truncate the torn tail and the
+#:   chain must still heal;
+#: * ``restart-mid-catchup`` — crash, restart, then crash AGAIN while
+#:   the node is probing/rejoining (anti-entropy catch-up), restart once
+#:   more: the second replay sees the partially-caught-up image;
+#: * ``double-fault-then-restart`` — crash two nodes (on 2-node seeds:
+#:   the whole deployment), then restart both: recovery must
+#:   re-establish exactly one primary per object without split-brain.
+#:
+#: Under ``--restarts`` the base ``NODE_FAULT_PLANS`` crashes also get a
+#: restart scheduled, so the final readback exercises healed chains
+#: instead of promoted-follower-only service.
+RESTART_FAULT_PLANS = [
+    ("node-mid-wal-append", None, None),
+    ("restart-mid-catchup", None, None),
+    ("double-fault-then-restart", None, None),
+]
+RESTART_LABELS = {label for label, _op, _phase in RESTART_FAULT_PLANS}
+
 
 def _topology(rng: random.Random) -> Tuple[int, int, int, int]:
     """(nodes, accounts_per_node, clients, txns_per_client) for one seed."""
@@ -140,6 +180,7 @@ def _topology(rng: random.Random) -> Tuple[int, int, int, int]:
 
 def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
              partitions: bool = False, migrations: bool = False,
+             restarts: bool = False,
              keep_net: bool = False) -> Dict[str, Any]:
     """Run one seeded schedule; returns the result record (see keys below).
 
@@ -158,7 +199,9 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
     churn_part = partitions and seed % 2 == 1
     if churn_part:
         n_nodes = 3
-    churn = churn_part or migrations
+    # Restart seeds need churn timing too: the §11 rejoin backoff is
+    # max(ttl/2, 4*poll), so heal must fit inside the schedule.
+    churn = churn_part or migrations or restarts
     # Shrink lease TTLs + reaper poll on churn seeds so renewal rounds,
     # fencing, and promise-wait takeover all fire inside a schedule that
     # lasts only tens of virtual milliseconds.
@@ -196,6 +239,7 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
     injected: Optional[str] = None
     node_fault: Optional[str] = None
     partitioned: Optional[str] = None
+    restart_targets: List[str] = []
     moves: List[Tuple[str, str]] = []
     if migrations:
         # Forced lease handoffs (§10): a migrator actor drives 1-2
@@ -216,12 +260,51 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
                       0.0, 120.0)
         partitioned = "partition:node0"
     elif node_faults and seed % 4 != 0:
-        plans = NODE_FAULT_PLANS + (MEMBERSHIP_FAULT_PLANS
-                                    if migrations else [])
-        label, op, phase = plans[seed % len(plans)]
-        if op is None:
+        plans = (NODE_FAULT_PLANS
+                 + (MEMBERSHIP_FAULT_PLANS if migrations else [])
+                 + (RESTART_FAULT_PLANS if restarts else []))
+        # Under --partitions the crash seeds are exactly seed % 4 == 2
+        # (odd seeds partition instead): indexing by the raw seed would
+        # stride the plan list by 4, and whenever gcd(4, len(plans)) > 1
+        # some plans become unreachable at ANY sweep size — with all
+        # churn flags on, len(plans) is 14 and the two odd-indexed
+        # restart plans would never fire. Index by the crash-seed
+        # ordinal (seed // 4) there so the rotation covers every plan.
+        # Elsewhere the raw seed keeps existing seed->plan mappings
+        # (and the pinned regression seeds) byte-stable.
+        plan_idx = (seed // 4) if (partitions and restarts) else seed
+        label, op, phase = plans[plan_idx % len(plans)]
+        if label == "node-mid-wal-append":
+            # The write itself is the crash point: the nth workload-time
+            # WAL append tears and the node dies with it (§11).
+            target = f"node{n_nodes - 1}"
+            net.inject_wal_crash(target, nth=1 + (seed // len(plans)) % 4,
+                                 label=label)
+            restart_targets.append(target)
+        elif label == "restart-mid-catchup":
+            # Crash, restart, crash AGAIN while the rejoin protocol is
+            # mid-probe/catch-up, then heal for good via the scheduled
+            # restart retries below.
+            target = f"node{n_nodes - 1}"
+            net.crash_node_at(target, rng.uniform(0.002, 0.008))
+            net.restart_node_at(target, 0.02)
+            net.crash_node_at(target, 0.02 + rng.uniform(0.0005, 0.004))
+            restart_targets.append(target)
+        elif label == "double-fault-then-restart":
+            # On 2-node seeds this kills the entire deployment: recovery
+            # runs from WAL images alone and must re-establish exactly
+            # one primary per object.
+            a, b = f"node{n_nodes - 1}", f"node{max(n_nodes - 2, 0)}"
+            t1, t2 = sorted((rng.uniform(0.002, 0.010),
+                             rng.uniform(0.002, 0.010)))
+            net.crash_node_at(a, t1)
+            net.crash_node_at(b, t2)
+            restart_targets += [a, b]
+        elif op is None:
             target = f"node{n_nodes - 1}"
             net.crash_node_at(target, rng.uniform(0.001, 0.008))
+            if restarts:
+                restart_targets.append(target)
         elif op == "migrate_in" and not moves:
             label = None
         else:
@@ -241,6 +324,8 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
                 nth = 1
             net.inject_node_crash(target, op, nth=nth, phase=phase,
                                   label=label)
+            if restarts:
+                restart_targets.append(target)
         node_fault = label
     elif faults and seed % 3 != 0:
         label, op, phase = INJECTION_POINTS[seed % len(INJECTION_POINTS)]
@@ -249,6 +334,21 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
             nth = 1     # c0 runs exactly one write-only transaction
         net.inject_crash("c0", op, nth=nth, phase=phase, label=label)
         injected = label
+
+    pre_restart_nodes = {}
+    if restart_targets:
+        # Restart every crashed node under its old identity (§11), well
+        # after the crash window. restart_node_at is a no-op on a live
+        # node, so the later attempts only matter for crashes that fire
+        # late in the schedule (delivery-triggered plans) or for the
+        # second fault of restart-mid-catchup. The original node objects
+        # are kept so the invariants below can tell an actual restart (a
+        # fresh SimNode replayed the disk) from a crash that never fired.
+        pre_restart_nodes = {t: net._nodes[t]
+                             for t in dict.fromkeys(restart_targets)}
+        for i, tgt in enumerate(dict.fromkeys(restart_targets)):
+            for at in (0.05, 0.2, 0.5):
+                net.restart_node_at(tgt, at + 0.002 * i)
 
     # -- workload ------------------------------------------------------------
     committed_transfers: List[Tuple[List[str], int]] = []
@@ -503,6 +603,50 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
             failures.append(f"ledger: {node.node_name} holds {held} "
                             f"decisions > LEDGER_CAP={LEDGER_CAP}")
 
+    # -- §11 invariants: durability across restart + chain-width heal -------
+    # (a) No committed-and-WAL'd write lost: the readback above already
+    #     went through the healed chains — an account that is unreadable
+    #     or off its all-or-nothing balance set has failed those checks.
+    #     Here we pin down that durability was actually exercised: every
+    #     restarted node came back, and came back by REPLAYING a
+    #     non-empty WAL image (not as a blank node).
+    # (b) Chain width recovers after heal: once every node is back, each
+    #     object has exactly one primary and its chain has regrown to
+    #     the configured one-follower bound.
+    if restart_targets:
+        for tgt, orig in pre_restart_nodes.items():
+            node = net._nodes.get(tgt)
+            if node is None or not node.alive:
+                failures.append(f"restart: {tgt} never came back "
+                                f"({node_fault})")
+            elif node is not orig and (node._recovered is None
+                                       or not node._recovered.objects):
+                # A crash that never fired leaves the ORIGINAL node (and
+                # its empty first-boot image) in place — only an actual
+                # restart must have replayed a non-empty WAL.
+                failures.append(f"restart: {tgt} came back without a "
+                                f"WAL image to replay ({node_fault})")
+        if all(node.alive for node in net._nodes.values()):
+            for name in account_names:
+                # A stale binding behind a §10 redirect tombstone is not
+                # a primary — every access through it redirects.
+                prims = [node for node in net._nodes.values()
+                         if node.has_binding(name)
+                         and name not in node.leases.moved]
+                if len(prims) != 1:
+                    failures.append(
+                        f"chain heal: {name} bound on "
+                        f"{sorted(n.node_name for n in prims)} "
+                        f"({node_fault})")
+                    continue
+                prim = prims[0]
+                live_fl = [a for a in prim.replication.followers_of(name)
+                           if a not in prim.leases.departed]
+                if not live_fl:
+                    failures.append(f"chain heal: {name} has no live "
+                                    f"follower after restart "
+                                    f"({node_fault})")
+
     out = {
         "seed": seed, "failures": failures, "trace": net.trace_text(),
         "commits": stats["commits"], "aborts": stats["aborts"],
@@ -523,7 +667,8 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
 
 def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
                              node_faults: bool, partitions: bool = False,
-                             migrations: bool = False) -> None:
+                             migrations: bool = False,
+                             restarts: bool = False) -> None:
     """Replay a failing seed with txtrace enabled and export the merged
     Perfetto span trace next to its schedule trace. The schedule is a
     pure function of the seed, so the replay reproduces the failure and
@@ -536,7 +681,8 @@ def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
     txtrace.enable()
     try:
         run_seed(seed, faults=faults, node_faults=node_faults,
-                 partitions=partitions, migrations=migrations)
+                 partitions=partitions, migrations=migrations,
+                 restarts=restarts)
     finally:
         if not was_enabled:
             txtrace.disable()
@@ -547,6 +693,7 @@ def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
 
 def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
           partitions: bool = False, migrations: bool = False,
+          restarts: bool = False,
           replay_check: int = 10,
           trace_dir: Optional[str] = None,
           trace_failing: bool = False) -> int:
@@ -556,7 +703,8 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
     replayed = 0
     for seed in seeds:
         res = run_seed(seed, faults=faults, node_faults=node_faults,
-                       partitions=partitions, migrations=migrations)
+                       partitions=partitions, migrations=migrations,
+                       restarts=restarts)
         if res["injected"]:
             coverage[res["injected"]] = coverage.get(res["injected"], 0) + 1
         for _name, _target, ok in res.get("migrated", ()):
@@ -564,7 +712,8 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
             n_refused += 0 if ok else 1
         if res["failures"] or replayed < replay_check:
             res2 = run_seed(seed, faults=faults, node_faults=node_faults,
-                            partitions=partitions, migrations=migrations)
+                            partitions=partitions, migrations=migrations,
+                            restarts=restarts)
             replayed += 1
             if res2["trace"] != res["trace"]:
                 res["failures"].append(
@@ -577,11 +726,26 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
                 d.mkdir(parents=True, exist_ok=True)
                 (d / f"seed-{seed}.trace").write_text(res["trace"])
                 print(f"  trace -> {d / f'seed-{seed}.trace'}")
+                if restarts:
+                    # §11 forensics: dump every node's virtual-disk WAL
+                    # image so a failing restart seed can be dissected
+                    # offline (repro.net.wal.replay reads these bytes)
+                    res_w = run_seed(seed, faults=faults,
+                                     node_faults=node_faults,
+                                     partitions=partitions,
+                                     migrations=migrations,
+                                     restarts=restarts, keep_net=True)
+                    for nn, disk in res_w["net"]._disks.items():
+                        p = d / f"seed-{seed}-{nn}.wal"
+                        p.write_bytes(disk.data)
+                        print(f"  wal image -> {p}")
+                    res_w["net"].shutdown()
                 if trace_failing:
                     _span_trace_failing_seed(
                         seed, d / f"seed-{seed}.trace.json",
                         faults=faults, node_faults=node_faults,
-                        partitions=partitions, migrations=migrations)
+                        partitions=partitions, migrations=migrations,
+                        restarts=restarts)
             else:
                 print("  --- replayable schedule (tail) ---")
                 for line in res["trace"].splitlines()[-40:]:
@@ -607,6 +771,22 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
             print(f"FAIL: only {distinct} distinct §3.4 injection points "
                   f"exercised (need >= 4)")
             rc = 1
+        if restarts:
+            # Only enforce full restart-label coverage when the sweep
+            # had enough crash seeds to walk the whole plan rotation:
+            # partitions consume odd seeds and seed % 4 == 0 never
+            # crashes, so the plan-drawing seeds are n/4 (partitions)
+            # or 3n/4 of the sweep.
+            plen = (len(NODE_FAULT_PLANS)
+                    + (len(MEMBERSHIP_FAULT_PLANS) if migrations else 0)
+                    + len(RESTART_FAULT_PLANS))
+            crash_seeds = n // 4 if partitions else (3 * n) // 4
+            if crash_seeds >= plen:
+                missing = sorted(RESTART_LABELS - set(coverage))
+                if missing:
+                    print(f"FAIL: restart plans never exercised: "
+                          f"{missing}")
+                    rc = 1
     return rc
 
 
@@ -629,6 +809,11 @@ def main() -> None:
                     help="force lease handoffs mid-workload, enable "
                          "affinity auto-migration, and add the §10 "
                          "membership crash plans")
+    ap.add_argument("--restarts", action="store_true",
+                    help="restart every crashed node under its old "
+                         "identity (§11 WAL replay + chain rejoin) and "
+                         "add the durability crash plans; implies "
+                         "--node-faults")
     ap.add_argument("--replay-check", type=int, default=10,
                     help="re-run this many seeds and require "
                          "byte-identical traces")
@@ -642,11 +827,13 @@ def main() -> None:
                     help="with --seed: print the full schedule trace")
     args = ap.parse_args()
 
+    node_faults = args.node_faults or args.restarts
     if args.seed is not None:
         res = run_seed(args.seed, faults=not args.no_faults,
-                       node_faults=args.node_faults,
+                       node_faults=node_faults,
                        partitions=args.partitions,
-                       migrations=args.migrations)
+                       migrations=args.migrations,
+                       restarts=args.restarts)
         if args.print_trace:
             sys.stdout.write(res["trace"])
         print(f"seed {args.seed}: commits={res['commits']} "
@@ -656,9 +843,10 @@ def main() -> None:
 
     sys.exit(sweep(range(args.start, args.start + args.seeds),
                    faults=not args.no_faults,
-                   node_faults=args.node_faults,
+                   node_faults=node_faults,
                    partitions=args.partitions,
                    migrations=args.migrations,
+                   restarts=args.restarts,
                    replay_check=args.replay_check,
                    trace_dir=args.trace_dir,
                    trace_failing=args.trace_failing))

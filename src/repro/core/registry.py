@@ -187,6 +187,10 @@ class Registry:
                 node = self._nodes.get(address)
             if node is None:
                 node = RemoteNode(address, **client_kw)
+            elif not (node.alive and getattr(node.client, "alive", True)):
+                # same address, reborn process (§11 restart): re-dial the
+                # cached handle instead of leaving it crash-stopped forever
+                node.reconnect()
             bindings = node.fetch_bindings()
             with self._lock:
                 self._nodes.setdefault(address, node)

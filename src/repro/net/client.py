@@ -614,6 +614,23 @@ class NodeClient(Transport):
             except OSError:
                 pass
 
+    def reconnect(self) -> bool:
+        """Re-dial a crash-stopped server that restarted at the same
+        address (§11). ``_mark_dead`` is final for every in-flight future
+        — those stay failed; this only re-opens the transport for NEW
+        work once the reborn process is listening. Returns ``True`` iff a
+        fresh connection (and mux hello) succeeded."""
+        if self._closed.is_set():
+            return False
+        with self._lock:
+            self.alive = True
+            self._hb_thread = None   # old loop exited on death; re-armable
+        try:
+            self._mux_for_thread()
+        except RemoteObjectFailure:
+            return False             # still down: _establish re-marked dead
+        return True
+
     # -- transaction liveness ------------------------------------------------
     def register_txn(self, txn_uid: str) -> None:
         """Track a live transaction: liveness (hello + heartbeat) rides the

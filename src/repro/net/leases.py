@@ -21,10 +21,12 @@ Safety argument, in the model's terms:
   unreplicated commits nor serve stale state while a promoted follower
   moves on. Fencing requires *evidence of refusal* (an unanswered renewal
   round); a lease that merely lapsed while the node was idle (the reaper
-  disarms with no sessions) is re-armed optimistically on the next grant —
-  sound here because promotion is always client-driven and clients only
-  leave a primary that errored or died, which an idle healthy primary has
-  not.
+  disarms with no sessions) re-arms by a **quorum-of-chain
+  re-acknowledgement**: the first grant after an idle lapse starts a
+  renewal round and *refuses to serve* (``LeaseRearming`` — the op
+  handler parks outside the locks and retries) until every live follower
+  re-acks the epoch, so a primary that was superseded while idle learns
+  the successor's higher epoch *before* acting, not after.
 * **Promise = promotion refusal.** A follower holding a live promise
   answers ``lease_acquire``/``promote`` with *busy* until the promise
   lapses; by construction the old primary fenced before that, so no two
@@ -99,6 +101,21 @@ class ObjectMovedError(RemoteObjectFailure):
                 (self.name, self.target, self.epoch, tuple(self.followers)))
 
 
+class LeaseRearming(Exception):
+    """Internal (never crosses the wire): an idle-lapsed lease is
+    re-arming and must not serve until the quorum-of-chain
+    re-acknowledgement round completes. The op handler waits on
+    ``event`` OUTSIDE the header/lease locks, then retries
+    ``check_grant`` — which either serves (round completed), raises the
+    fence (round refused/unanswered), or re-raises this (still in
+    flight)."""
+
+    def __init__(self, name: str, event: threading.Event):
+        super().__init__(f"lease for {name!r} is re-arming")
+        self.name = name
+        self.event = event
+
+
 # -- split-brain auditor (sweep invariant hook) ------------------------------
 _auditor: Optional[Callable[[str, int, str], None]] = None
 
@@ -122,7 +139,8 @@ def _audit(name: str, epoch: int, node: str) -> None:
 class _Owned:
     """Primary-side lease state for one object."""
 
-    __slots__ = ("epoch", "expires", "awaiting", "renew_sent", "fenced")
+    __slots__ = ("epoch", "expires", "awaiting", "renew_sent", "fenced",
+                 "rearm")
 
     def __init__(self, epoch: int, expires: float):
         self.epoch = epoch
@@ -130,6 +148,9 @@ class _Owned:
         self.awaiting: Set[str] = set()   # followers whose ack is pending
         self.renew_sent: float = -1.0     # -1: no renewal round in flight
         self.fenced = False
+        #: idle-lapse re-arm barrier: set when the quorum re-ack round
+        #: resolves (completed, self-renewed, or fenced); None otherwise
+        self.rearm: Optional[threading.Event] = None
 
 
 class LeaseManager:
@@ -167,6 +188,9 @@ class LeaseManager:
             self.owned[name] = _Owned(epoch, now + self.ttl)
             self.promises.pop(name, None)
             self.moved.pop(name, None)
+        wal = getattr(self.core, "wal", None)
+        if wal is not None:
+            wal.lease(name, epoch)
         _audit(name, epoch, self.core.node_name)
 
     def drop_local(self, name: str, target: str, epoch: int,
@@ -175,6 +199,9 @@ class LeaseManager:
         with self.lock:
             self.owned.pop(name, None)
             self.moved[name] = (target, epoch, list(followers))
+        wal = getattr(self.core, "wal", None)
+        if wal is not None:
+            wal.tombstone(name, target, epoch, list(followers))
 
     def epoch_of(self, name: str) -> int:
         with self.lock:
@@ -184,6 +211,14 @@ class LeaseManager:
     def _followers(self, name: str) -> List[str]:
         chain = self.core.replication.followers.get(name, ())
         return [a for a in chain if a not in self.departed]
+
+    @staticmethod
+    def _rearm_done(o: _Owned) -> None:
+        """The idle-lapse re-ack round resolved (quorum ack, self-renew,
+        or fence): wake the parked grant attempts so they retry."""
+        if o.rearm is not None:
+            o.rearm.set()
+            o.rearm = None
 
     def _send_renewals(self, name: str, o: _Owned, now: float) -> None:
         """One renewal round: one-way ``lease_renew`` to every live
@@ -196,6 +231,7 @@ class LeaseManager:
             o.renew_sent = -1.0
             o.awaiting.clear()
             o.fenced = False
+            self._rearm_done(o)
             return
         o.renew_sent = now
         o.awaiting = set(targets)
@@ -212,6 +248,7 @@ class LeaseManager:
             o.expires = now + self.ttl
             o.renew_sent = -1.0
             o.fenced = False
+            self._rearm_done(o)
 
     def tick(self, now: float) -> None:
         """Renewal/fencing pass, riding ``reap_stale`` (the reaper thread
@@ -228,6 +265,7 @@ class LeaseManager:
                         o.fenced = True
                         self.n_fences += 1
                         self._trace_fence(name, o.epoch)
+                        self._rearm_done(o)   # waiters retry → fence
                     self._send_renewals(name, o, now)
                 elif o.renew_sent < 0 and now >= o.expires - self.ttl / 2:
                     self._send_renewals(name, o, now)
@@ -257,6 +295,7 @@ class LeaseManager:
     def on_ack(self, name: str, epoch: int, ok: bool, cur_epoch: int,
                node: str) -> None:
         """Primary side of ``lease_ack``."""
+        deposed = False
         with self.lock:
             o = self.owned.get(name)
             if o is None or o.epoch != epoch:
@@ -269,12 +308,27 @@ class LeaseManager:
                 self.owned.pop(name, None)
                 self.moved[name] = (node, cur_epoch, [])
                 self._trace_fence(name, o.epoch, permanent=True)
-                return
-            o.awaiting.discard(node)
-            if not o.awaiting and o.renew_sent >= 0:
-                o.expires = o.renew_sent + self.ttl
-                o.renew_sent = -1.0
-                o.fenced = False      # quorum re-confirmed this epoch
+                self._rearm_done(o)   # waiters retry → redirect
+                wal = getattr(self.core, "wal", None)
+                if wal is not None:
+                    wal.tombstone(name, node, cur_epoch, [])
+                deposed = True
+            else:
+                o.awaiting.discard(node)
+                if not o.awaiting and o.renew_sent >= 0:
+                    o.expires = o.renew_sent + self.ttl
+                    o.renew_sent = -1.0
+                    o.fenced = False      # quorum re-confirmed this epoch
+                    self._rearm_done(o)
+        if deposed:
+            # Demote into the successor's chain (§11): a deposed primary
+            # that only redirects forever leaves the chain one follower
+            # short — rejoin it as the tail instead. Runs in the
+            # background: the ack handler must not block on the drain.
+            demote = getattr(self.core, "_demote_to_follower", None)
+            spawn = getattr(self.core, "_spawn_bg", None)
+            if demote is not None and spawn is not None:
+                spawn(lambda: demote(name, node), name=f"demote-{name}")
 
     def check_grant(self, name: str) -> None:
         """Primary-side act-as-primary check: called before granting a
@@ -305,6 +359,7 @@ class LeaseManager:
                     o.fenced = True   # unanswered round: fence lazily
                     self.n_fences += 1
                     self._trace_fence(name, o.epoch)
+                    self._rearm_done(o)
                     # Same healing round as the fenced branch above: if
                     # the silence was a follower that has since crash-
                     # stopped (refused send), it departs and we self-renew
@@ -315,10 +370,19 @@ class LeaseManager:
                         raise LeaseFencedError(name, o.epoch,
                                                self.core.node_name)
                 else:
-                    # idle lapse (reaper was disarmed): re-arm
-                    # optimistically and start a renewal round now
+                    # idle lapse (reaper was disarmed): start a renewal
+                    # round and refuse to serve until the chain re-acks
+                    # this epoch (quorum-of-chain re-acknowledgement —
+                    # a successor elected while we idled answers with
+                    # its higher epoch, turning this into a redirect
+                    # instead of a stale grant)
                     o.expires = now + self.ttl
                     self._send_renewals(name, o, now)
+                    if o.renew_sent >= 0 and o.rearm is None:
+                        o.rearm = threading.Event()
+            if o.rearm is not None:
+                # a re-ack round is still in flight: not serving yet
+                raise LeaseRearming(name, o.rearm)
             epoch = o.epoch
         _audit(name, epoch, self.core.node_name)
 

@@ -174,6 +174,17 @@ class RemoteNode:
         self.network_delay = 0.0     # the wire is honest now
         self.registry = None         # set by Registry.connect (federation)
 
+    def reconnect(self) -> bool:
+        """Re-dial a node that crash-stopped and restarted at the same
+        address (§11 durable identity). Transport-blind: transports
+        without a ``reconnect`` (simnet routes by address and survives
+        restarts natively) just report their liveness."""
+        rc = getattr(self.client, "reconnect", None)
+        ok = rc() if rc is not None else bool(self.client.alive)
+        if ok:
+            self.alive = True
+        return ok
+
     def fetch_bindings(self) -> List["RemoteSharedObject"]:
         info = self.client.call("list_bindings")
         self.name = info["node"]
@@ -260,10 +271,13 @@ class RemoteSharedObject:
         reg = self.node.registry
         if reg is not None:
             try:
-                return reg.node(addr)    # pre-connected (sim / federation)
+                node = reg.node(addr)    # pre-connected (sim / federation)
             except KeyError:
-                pass
-            return reg.connect(addr)
+                return reg.connect(addr)
+            client = getattr(node, "client", None)
+            if client is not None and not (node.alive and client.alive):
+                node.reconnect()         # §11: same address, reborn process
+            return node
         return RemoteNode(addr)
 
     def follow_move(self, e: ObjectMovedError) -> None:

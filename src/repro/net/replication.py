@@ -67,7 +67,7 @@ class ReplicaRecord:
     """Follower-side state of one replicated object."""
 
     __slots__ = ("name", "primary", "order", "epoch", "payload",
-                 "applied", "tentative", "promoted")
+                 "applied", "tentative", "promoted", "recovering")
 
     def __init__(self, name: str, primary: str, order: List[str],
                  epoch: int, payload: bytes, applied: Tuple[int, int]):
@@ -80,6 +80,11 @@ class ReplicaRecord:
         #: buffered tentatives: txn uid -> (epoch, seq, payload, head addr)
         self.tentative: Dict[str, Tuple[int, int, bytes, str]] = {}
         self.promoted = False
+        #: True for a record rebuilt from a WAL replay (§11): the image
+        #: may be missing commits that landed while this node was dead
+        #: and departed from the quorum, so it must NOT be promotable
+        #: until the anti-entropy rejoin replaces it with a live snapshot.
+        self.recovering = False
 
 
 class ReplicationManager:
@@ -131,6 +136,18 @@ class ReplicationManager:
             log.debug("replication one-way %s -> %s failed: %r",
                       op, address, e)
 
+    @property
+    def _wal(self):
+        """The hosting node's write-ahead ledger (§11), or None. Every
+        durable fact is appended *before* the network send that announces
+        it (WAL-before-network), so a crash between the two replays the
+        fact instead of losing it."""
+        return getattr(self.core, "wal", None)
+
+    def _wal_decision(self, txn: str, decision: str, first: bool) -> None:
+        if first and self._wal is not None:
+            self._wal.decision(txn, decision)
+
     # ------------------------------------------------------------------ #
     # primary side                                                       #
     # ------------------------------------------------------------------ #
@@ -142,9 +159,11 @@ class ReplicationManager:
         with self.lock:
             self.followers[name] = followers
             self.epochs.setdefault(name, 0)
-        if not followers:
+        if not followers and self._wal is None:
             return
         payload = pickle.dumps(obj)
+        if self._wal is not None:
+            self._wal.bind(name, payload, followers, self.epochs[name])
         for f in followers:
             self._notify(f, "repl_init", count=False, name=name,
                          primary=self.core.address, order=list(followers),
@@ -160,13 +179,15 @@ class ReplicationManager:
         state (caller holds the header lock — the snapshot must precede the
         release that wakes successors) and forward it to every follower."""
         fl = self.followers_of(name)
-        if not fl:
+        if not fl and self._wal is None:
             return
         with self.lock:
             epoch = self.epochs.get(name, 0)
             self.pending[(txn, name)] = (epoch, seq)
         payload = pickle.dumps(obj)
         head = origin or self.core.address
+        if self._wal is not None:
+            self._wal.tentative(txn, name, epoch, seq, payload, head)
         for f in fl:
             self._notify(f, "repl_apply", name=name, txn=txn, epoch=epoch,
                          seq=seq, payload=payload, head=head)
@@ -178,6 +199,10 @@ class ReplicationManager:
         if key is None:
             return
         epoch, seq = key
+        if self._wal is not None:
+            # Durability point: the committed write is WAL'd (and the
+            # batch fsynced) before the finals go out / the op returns.
+            self._wal.final(txn, name, epoch, seq)
         for f in self.followers_of(name):
             self._notify(f, "repl_final", name=name, txn=txn, epoch=epoch,
                          seq=seq)
@@ -188,6 +213,8 @@ class ReplicationManager:
             key = self.pending.pop((txn, name), None)
         if key is None:
             return
+        if self._wal is not None:
+            self._wal.drop(txn, name)
         for f in self.followers_of(name):
             self._notify(f, "repl_drop", name=name, txn=txn)
 
@@ -201,6 +228,7 @@ class ReplicationManager:
         with self.lock:
             first = txn not in self.decisions
             d = self.decisions.setdefault(txn, decision)
+            self._wal_decision(txn, d, first)
             if chain is not None and d == decision:
                 self.chains.setdefault(txn, list(chain))
             if d == "commit":
@@ -273,6 +301,8 @@ class ReplicationManager:
                 return   # stale (re)init from an older generation
             self.replicas[name] = ReplicaRecord(
                 name, primary, order, epoch, payload, (epoch, seq))
+        if self._wal is not None:
+            self._wal.init(name, primary, list(order), epoch, seq, payload)
         leases = getattr(self.core, "leases", None)
         if leases is not None:
             # Implicit promise (§10): accepting a chain seat IS a promise
@@ -289,11 +319,14 @@ class ReplicationManager:
             if rec is None or rec.promoted or epoch < rec.epoch:
                 return   # stale primary generation
             d = self.decisions.get(txn)
+            if d == "abort":
+                return   # drop on the floor
+            if self._wal is not None:
+                self._wal.tentative(txn, name, epoch, seq, payload, head)
             if d == "commit":
                 self._apply(rec, epoch, seq, payload)
-            elif d is None:
+            else:
                 rec.tentative[txn] = (epoch, seq, payload, head)
-            # d == "abort": drop on the floor
 
     def repl_final(self, name: str, txn: str, epoch: int, seq: int) -> None:
         with self.lock:
@@ -302,6 +335,10 @@ class ReplicationManager:
                 return   # fenced-out primary generation (§10): reject
             self.decisions.setdefault(txn, "commit")
             self._trim_ledger()
+            if self._wal is not None:
+                # the final record doubles as the commit decision at
+                # replay (recover() folds it into the decision ledger)
+                self._wal.final(txn, name, epoch, seq)
             if rec is None or rec.promoted:
                 return
             t = rec.tentative.pop(txn, None)
@@ -405,15 +442,28 @@ class ReplicationManager:
     # ------------------------------------------------------------------ #
     # promotion                                                          #
     # ------------------------------------------------------------------ #
+    def head_of(self, txn: str) -> Optional[str]:
+        """Coordinator address recorded on any buffered tentative of
+        ``txn``, or ``None`` if no replica here holds one."""
+        with self.lock:
+            for rec in self.replicas.values():
+                t = rec.tentative.get(txn)
+                if t is not None:
+                    return t[3]
+        return None
+
     def _query_head(self, head: str, txn: str) -> str:
         """Ask a tentative's coordinator for the transaction's fate.
-        An unreachable coordinator reads as ``none`` (no decision can ever
-        arrive from it; dooming the tentative is then safe — see the
-        first-writer-wins argument in DESIGN.md §8)."""
+        An unreachable coordinator answers ``unreachable`` — under §11 it
+        may be mid-restart holding a durable ``commit``, so only callers
+        protected by epoch fencing (promotion: a returning rival's
+        contradicting fold is discarded when it defers to the successor
+        chain) may doom on it immediately; resurrection must poll it out
+        first (no rival chain exists to fence the disagreement away)."""
         try:
             return self.core._peer(head).call("txn_status", txn=txn)
-        except Exception:  # noqa: BLE001 - dead coordinator
-            return "none"
+        except Exception:  # noqa: BLE001 - dead (or restarting) coordinator
+            return "unreachable"
 
     def promote(self, names: List[str]) -> Dict[str, List[str]]:
         """Attempt to take over as primary for ``names``.
@@ -427,7 +477,9 @@ class ReplicationManager:
         promoted: List[str] = []
         busy: List[str] = []
         for name in names:
-            if self.core.has_binding(name):
+            lm = getattr(self.core, "leases", None)
+            moved = lm is not None and name in lm.moved
+            if self.core.has_binding(name) and not moved:
                 promoted.append(name)    # already primary here: idempotent
                 continue
             with self.lock:
@@ -436,6 +488,13 @@ class ReplicationManager:
                     continue
                 if rec.promoted:
                     promoted.append(name)
+                    continue
+                if rec.recovering:
+                    # A replayed image may be missing commits that landed
+                    # while we were dead (§11): promoting it would serve
+                    # stale state — refuse retryably until the rejoin
+                    # catch-up replaces the record.
+                    busy.append(name)
                     continue
                 pending_txns = [
                     (txn, t) for txn, t in rec.tentative.items()
@@ -448,8 +507,10 @@ class ReplicationManager:
                     break
                 with self.lock:
                     # first-writer-wins: a racing repl_decision beats us
-                    self.decisions.setdefault(
+                    first = txn not in self.decisions
+                    d = self.decisions.setdefault(
                         txn, "commit" if status == "commit" else "abort")
+                    self._wal_decision(txn, d, first)
             if wait:
                 busy.append(name)
                 continue
@@ -474,6 +535,8 @@ class ReplicationManager:
         self.followers[name] = tail
         self.epochs[name] = epoch
         rec.promoted = True
+        if self._wal is not None:
+            self._wal.bind(name, rec.payload, tail, epoch)
         leases = getattr(self.core, "leases", None)
         if leases is not None:
             # Ownership is lease-based (§10): the promotion IS a lease
@@ -503,6 +566,8 @@ class ReplicationManager:
             rec = self.replicas.get(name)
             if rec is not None:
                 rec.promoted = True
+        if self._wal is not None:
+            self._wal.bind(name, payload, list(followers), epoch)
         for f in followers:
             self._notify(f, "repl_init", count=False, name=name,
                          primary=self.core.address, order=list(followers),
@@ -512,6 +577,47 @@ class ReplicationManager:
         """Old primary after a successful handoff: stop replicating."""
         with self.lock:
             self.followers.pop(name, None)
+
+    # ------------------------------------------------------------------ #
+    # restart + chain rejoin (§11)                                       #
+    # ------------------------------------------------------------------ #
+    def rejoin_accept(self, name: str, addr: str,
+                      payload: bytes) -> Dict[str, Any]:
+        """Primary side of a restarted node's chain rejoin: grow the
+        chain back by appending ``addr`` as the tail follower and hand it
+        the quiesced committed snapshot (anti-entropy catch-up, snapshot
+        form — the chain's native replication unit is the full state, so
+        one snapshot IS the delta). The caller (``_op_repl_rejoin``) has
+        already drained the object, so ``payload`` is the whole truth:
+        no in-flight versions, no pending tentatives. The surviving
+        followers learn the grown order via ``repl_chain`` one-ways."""
+        me = self.core.address
+        with self.lock:
+            fl = list(self.followers.get(name, ()))
+            if addr != me and addr not in fl:
+                fl.append(addr)
+            self.followers[name] = fl
+            epoch = self.epochs.get(name, 0)
+        if self._wal is not None:
+            self._wal.membership(name, list(fl), list(fl))
+        for f in fl:
+            if f != addr:
+                self._notify(f, "repl_chain", count=False, name=name,
+                             order=list(fl), epoch=epoch)
+        return {"name": name, "primary": me, "order": list(fl),
+                "epoch": epoch, "seq": 0, "payload": payload}
+
+    def repl_chain(self, name: str, order: List[str], epoch: int) -> None:
+        """Chain-membership update (a restarted node rejoined as tail):
+        adopt the grown order so a future promotion replicates to — and a
+        future rejoin probes — the full healed chain."""
+        with self.lock:
+            rec = self.replicas.get(name)
+            if rec is None or rec.promoted or epoch < rec.epoch:
+                return
+            rec.order = list(order)
+        if self._wal is not None:
+            self._wal.membership(name, list(order), [])
 
     # ------------------------------------------------------------------ #
     # client recovery                                                    #
@@ -530,7 +636,9 @@ class ReplicationManager:
         with self.lock:
             if txn not in self.decisions and txn in self._retired_commits:
                 return "commit", []
+            first = txn not in self.decisions
             d = self.decisions.setdefault(txn, "abort")
+            self._wal_decision(txn, d, first)
             if d == "abort":
                 self._resolve_tentatives_abort(txn)
                 return d, []

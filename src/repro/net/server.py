@@ -69,6 +69,7 @@ from __future__ import annotations
 
 import argparse
 import logging
+import os
 import pickle
 import queue
 import socket
@@ -90,8 +91,9 @@ from repro.core.versioning import blocking_wait, skip_version, wait_quiescent
 from repro.obs import metrics as _metrics
 from repro.obs import txtrace as _txtrace
 
-from .leases import LeaseManager, ObjectMovedError
-from .replication import ReplicationManager
+from .leases import LeaseManager, LeaseRearming, ObjectMovedError
+from .replication import ReplicaRecord, ReplicationManager
+from .wal import FileStorage, Wal
 from .wire import (ConnectionClosed, ERR, FrameReader, NOTE, OK,
                    PIGGYBACK_MAX, WireError, encode_error,
                    frame as wire_frame, oob, send_frames, send_msg)
@@ -460,7 +462,8 @@ class NodeCore:
                  registry: Optional[Registry] = None,
                  monitor_timeout: float = 2.0, monitor_poll: float = 0.05,
                  executor_workers: int = 1,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 wal: Optional[Wal] = None):
         self.registry = registry if registry is not None else Registry()
         self.node_name = node_name
         self._clock = clock
@@ -497,6 +500,42 @@ class NodeCore:
         for shared in self.registry.all_objects().values():
             if shared.node is self.node:
                 self._obs_stamp(shared)
+        #: write-ahead ledger (§11): None keeps durability entirely off —
+        #: the TCP server opts in via --wal-dir, simnet always wires a
+        #: seeded VirtualDisk so restart schedules are deterministic.
+        self.wal = wal
+        self._recovered = wal.recover() if wal is not None else None
+        if self._recovered is not None:
+            self._apply_wal_recovery(self._recovered)
+
+    def _apply_wal_recovery(self, rec) -> None:
+        """Offline half of the §11 restart: rebuild this node's pre-crash
+        roles from the replayed ledger. Tombstones and follower replica
+        records come back verbatim; the decision ledger is restored so we
+        can answer ``txn_status``/``txn_decision`` for transactions we
+        coordinated before the crash. Primaries are NOT rebound here —
+        whether this node still owns them is decided against the live
+        chain in :meth:`rejoin_chains` (epoch monotonicity: a successor's
+        higher epoch wins and our fenced state is discarded)."""
+        repl = self.replication
+        with repl.lock:
+            repl.decisions.update(rec.decisions)
+        for name, (target, epoch, followers) in rec.tombstones.items():
+            self.leases.moved[name] = (target, epoch, list(followers))
+        for name, info in rec.objects.items():
+            if info["role"] != "follower":
+                continue
+            r = ReplicaRecord(name, info["primary"], list(info["order"]),
+                              info["epoch"], info["payload"],
+                              (info["epoch"], info["seq"]))
+            r.recovering = True     # not promotable until caught up (§11)
+            repl.replicas[name] = r
+        # undecided tentatives we buffered as a follower go back into the
+        # record so promotion resolves them against the coordinator
+        for (txn, name), (epoch, seq, payload, head) in rec.pending.items():
+            r = repl.replicas.get(name)
+            if r is not None and txn not in repl.decisions:
+                r.tentative[txn] = (epoch, seq, payload, head)
 
     def _obs_stamp(self, shared: SharedObject) -> None:
         """Point the object's version header at this node's obs sinks, so
@@ -727,6 +766,18 @@ class NodeCore:
             # than a bare KeyError no transport can act on. Never-bound
             # names still get the KeyError.
             self.leases.check_grant(name)
+            rec = self._recovered
+            if (rec is not None and name in rec.objects
+                    and rec.objects[name].get("role") == "primary"):
+                # Restarted primary mid-rejoin (§11): the WAL proves the
+                # object was served here, but recovery hasn't written
+                # the redirect tombstone (or resurrected the binding)
+                # yet — refuse service retryably instead of claiming the
+                # name never existed. Restarted followers keep the bare
+                # KeyError: they never served it.
+                raise RemoteObjectFailure(
+                    f"{name!r} is recovering on this node after a "
+                    f"restart; retry") from None
             raise
 
     def _session(self, txn: str) -> _Session:
@@ -855,6 +906,8 @@ class NodeCore:
                 self.leases.check_grant(name)
             except RemoteObjectFailure:
                 return False        # fenced or already moved: nothing to do
+            except LeaseRearming:
+                return False        # re-ack round in flight: retry later
             self._migrating[name] = ev
         t0 = self.obs_tracer.now() if _txtrace.enabled else 0.0
         ok = False
@@ -890,6 +943,235 @@ class NodeCore:
                     detail=f"{name}->{target}"
                            f"{'' if ok else ' (failed)'}")
 
+    # -- restart + chain rejoin (§11) -----------------------------------------
+    def _check_grant_blocking(self, name: str) -> None:
+        """``check_grant`` that waits out an idle-lapse re-ack round: a
+        :class:`LeaseRearming` parks the handler OUTSIDE the lease/header
+        locks on the round's event, then re-checks — the round resolves
+        into serving (chain re-acked the epoch), a fence, or a redirect,
+        and the re-check surfaces whichever it was."""
+        while True:
+            try:
+                self.leases.check_grant(name)
+                return
+            except LeaseRearming as e:
+                blocking_wait(e.event, self.leases.ttl)
+
+    def _demote_to_follower(self, name: str, successor: str) -> None:
+        """A permanently fenced primary demotes itself into the
+        successor's chain (§11): drain what's left in flight (every new
+        grant already redirects), drop the stale local copy, and rejoin
+        as the tail follower so the chain regrows to its bound width.
+        Spawned by the lease layer's permanent-fence handler."""
+        try:
+            shared = self.registry.locate(name)
+        except KeyError:
+            shared = None
+        if shared is not None and shared.node is self.node:
+            wait_quiescent(shared.header, timeout=5 * self.leases.ttl)
+            self.replication.drop_primary(name)
+            try:
+                self.registry.unbind(name)
+            except KeyError:
+                pass
+        backoff = max(self.leases.ttl / 2, 4 * self.monitor.poll_interval)
+        for _ in range(5):
+            if self._rejoin_as_follower(name, successor):
+                return
+            blocking_wait(threading.Event(), backoff)
+        log.warning("deposed primary of %r could not rejoin %s",
+                    name, successor)
+
+    def rejoin_chains(self) -> None:
+        """Networked half of the §11 restart protocol, run once per boot
+        after transports are up. For each object the replayed ledger says
+        we participated in:
+
+        1. **Probe** the last known chain members (``chain_probe``).
+        2. A live primary at our epoch or higher → we are stale: discard
+           fenced local state per epoch monotonicity, rehydrate a redirect
+           tombstone at its epoch, and **rejoin** its chain as the tail
+           follower via anti-entropy catch-up (``repl_rejoin``).
+        3. No primary but a live chain member → drive promotion there
+           (first-alive-in-order — the same deterministic failover order
+           clients use), then rejoin the winner.
+        4. Nobody reachable and the ledger says the object was ours with
+           **no followers** → resurrect immediately: nobody else could
+           have promoted, so the WAL image is the whole truth. With
+           followers we keep probing (they hold the later-epoch evidence)
+           and only resurrect as a last resort after the retry window —
+           the one residual stale-serve window left open (DESIGN.md §11).
+        """
+        rec = self._recovered
+        if rec is None:
+            return
+        for name, info in rec.objects.items():
+            try:
+                self._recover_object(name, info, rec)
+            except Exception as e:  # noqa: BLE001 - recovery best-effort
+                log.warning("restart recovery of %r failed: %r", name, e)
+
+    def _probe_chain(self, addr: str, name: str) -> Optional[Dict[str, Any]]:
+        try:
+            p = self._peer(addr).call("chain_probe", name=name,
+                                      rpc_timeout=5 * self.leases.ttl)
+            return p if isinstance(p, dict) else None
+        except Exception:  # noqa: BLE001 - dead peers read as no answer
+            return None
+
+    def _recover_object(self, name: str, info: Dict[str, Any],
+                        rec: Any, attempts: int = 25) -> None:
+        me = self.address
+        peers: List[str] = []
+        for a in ([info.get("primary")] + list(info.get("order") or ())
+                  + list(info.get("followers") or ())):
+            if a and a != me and a not in peers:
+                peers.append(a)
+        backoff = max(self.leases.ttl / 2, 4 * self.monitor.poll_interval)
+        for attempt in range(attempts):
+            best = None              # (epoch, addr, probe) of live primary
+            candidates: List[str] = []   # live followers, failover order
+            recovering: List[Dict[str, Any]] = []   # §11 replayed images
+            rival = None             # (epoch, addr) of best rival claim
+            for addr in peers:
+                p = self._probe_chain(addr, name)
+                if p is None:
+                    continue
+                role = p.get("role")
+                if role == "moved":
+                    t = p.get("target")
+                    if t and t != me and t not in peers:
+                        peers.append(t)   # chase the redirect next pass
+                elif role == "primary":
+                    if best is None or p["epoch"] > best[0]:
+                        best = (p["epoch"], addr, p)
+                elif role == "recovering-primary":
+                    # another replayed image also claims the object:
+                    # reconcile by (epoch, address) — the greater claim
+                    # resurrects, the lesser waits and rejoins it
+                    if rival is None or (p["epoch"], addr) > rival:
+                        rival = (p["epoch"], addr)
+                elif role == "follower" and not p.get("promoted"):
+                    if p.get("recovering"):
+                        # a replayed, not-yet-caught-up image: refuses
+                        # promotion, but its ledger may hold later-epoch
+                        # evidence — chase ITS primary too
+                        recovering.append(p)
+                        pr = p.get("primary")
+                        if pr and pr != me and pr not in peers:
+                            peers.append(pr)
+                    else:
+                        candidates.append(addr)
+            deferred = (info["role"] == "primary" and rival is not None
+                        and rival > (info["epoch"], me))
+            if best is not None:
+                epoch, addr, p = best
+                if info["role"] == "primary":
+                    # superseded while down: epoch monotonicity — drop our
+                    # fenced image, leave a redirect for stale bindings
+                    order = [a for a in p.get("order", ()) if a != addr]
+                    self.leases.moved[name] = (addr, epoch, list(order))
+                    if self.wal is not None:
+                        self.wal.tombstone(name, addr, epoch, list(order))
+                if self._rejoin_as_follower(name, addr):
+                    return
+            elif candidates:
+                # headless chain: drive promotion at the first live
+                # follower, then rejoin whoever won on the next pass
+                try:
+                    self._peer(candidates[0]).call(
+                        "lease_acquire", names=[name],
+                        rpc_timeout=5 * self.leases.ttl)
+                except Exception:  # noqa: BLE001 - busy/dead: retry
+                    pass
+            elif (info["role"] == "primary" and not deferred
+                  and recovering and all(
+                      p.get("primary") == me
+                      and p.get("epoch", 0) <= info["epoch"]
+                      for p in recovering)):
+                # Every reachable chain member is a recovering follower of
+                # OUR epoch (a whole-chain outage, §11): none of them can
+                # promote (the recovering guard refuses), so no write has
+                # landed since our crash and our own synced ledger — every
+                # commit is final'd before the client ack — is the
+                # authoritative image. Resurrect; they rejoin us next pass.
+                self._resurrect_primary(name, info, rec)
+                return
+            elif info["role"] == "primary" and not deferred and (
+                    not peers or attempt == attempts - 1):
+                if peers:
+                    log.warning("resurrecting %r with chain %r dark: "
+                                "last-resort, state may be stale", name,
+                                peers)
+                self._resurrect_primary(name, info, rec)
+                return
+            elif info["role"] == "follower" and attempt == attempts - 1:
+                # whole chain dark: keep the replayed replica record —
+                # promotion stays client-driven, later restarts rejoin us
+                return
+            blocking_wait(threading.Event(), backoff)
+        log.warning("gave up rejoining chain for %r after %d attempts",
+                    name, attempts)
+
+    def _rejoin_as_follower(self, name: str, primary: str) -> bool:
+        """Anti-entropy catch-up (§11): ask the live primary to splice us
+        back in as the tail follower. The reply is a quiesced snapshot —
+        the chain's native replication unit — which replaces whatever
+        stale image we replayed (the stale record is popped first so the
+        ``repl_init`` staleness guard cannot reject the fresh epoch)."""
+        try:
+            r = self._peer(primary).call(
+                "repl_rejoin", name=name, addr=self.address,
+                rpc_timeout=10 * self.leases.ttl)
+        except Exception:  # noqa: BLE001 - primary died mid-rejoin: retry
+            return False
+        if not isinstance(r, dict) or r.get("busy") or "payload" not in r:
+            return False
+        with self.replication.lock:
+            self.replication.replicas.pop(name, None)
+        self.replication.repl_init(
+            name=name, primary=r["primary"], order=list(r["order"]),
+            epoch=r["epoch"], seq=r["seq"], payload=r["payload"])
+        return True
+
+    def _resurrect_primary(self, name: str, info: Dict[str, Any],
+                           rec: Any) -> None:
+        """Rebind a WAL-recovered primary at ``epoch + 1``. Undecided
+        tentatives (we crashed between prep and terminate) are resolved
+        against their coordinator's decision ledger first. Unlike the
+        promotion path (where epoch fencing discards a returning rival's
+        contradicting fold), resurrection has no rival chain to defer to
+        — so an *unreachable* coordinator here may itself be mid-restart
+        holding a durable ``commit``, and dooming on first contact would
+        split the decision (§11). Poll through unreachability for the
+        full horizon; only a coordinator that stays dark past it (or one
+        that is reachable with no record) dooms the tentative to abort."""
+        epoch, seq = info["epoch"], info["seq"]
+        payload = info["payload"]
+        for (txn, n), t in sorted(rec.pending.items()):
+            if n != name:
+                continue
+            head = t[3]
+            status = "none"
+            if head and head != self.address:
+                # a live coordinator still "pending" must eventually abort
+                # (its commit wave cannot succeed against our dead
+                # sessions) — poll it out briefly, then doom
+                for _ in range(10):
+                    status = self.replication._query_head(head, txn)
+                    if status not in ("pending", "unreachable"):
+                        break
+                    blocking_wait(threading.Event(), self.leases.ttl / 2)
+            d = self.replication.record_decision(
+                txn, "commit" if status == "commit" else "abort")
+            if d == "commit" and (t[0], t[1]) >= (epoch, seq):
+                epoch, seq, payload = t[0], t[1], t[2]
+        new_epoch = epoch + 1
+        self.bind_local(name, pickle.loads(payload))
+        followers = [f for f in info.get("followers", ()) if f != self.address]
+        self.replication.adopt(name, followers, new_epoch, payload)
+        self.leases.grant_local(name, new_epoch)
+
     # -- directory ----------------------------------------------------------
     def _op_ping(self) -> Dict[str, Any]:
         return {"node": self.node_name, "time": time.time(),
@@ -923,8 +1205,9 @@ class NodeCore:
         self._obs_stamp(self.registry.bind(name, obj, self.node))
         with self._lock:
             self._gates[name] = threading.Lock()
-        if followers:
-            self.replication.set_followers(name, list(followers), obj)
+        # unconditional: follower-less binds still hit the WAL (when one
+        # is configured) so the object is resurrectable after a crash
+        self.replication.set_followers(name, list(followers), obj)
         # Ownership starts as a lease (§10): granted at the binding epoch,
         # renewed over the chain. Follower-less binds self-renew trivially.
         self.leases.grant_local(name, self.replication.epochs.get(name, 0))
@@ -936,7 +1219,7 @@ class NodeCore:
     def _op_raw_call(self, name: str, method: str, args: tuple,
                      kwargs: dict) -> Any:
         """Non-transactional direct invocation (Registry-level access)."""
-        self.leases.check_grant(name)
+        self._check_grant_blocking(name)
         return self._shared(name).raw_call(method, args, kwargs)
 
     # -- header surface (RemoteHeader duck type) -----------------------------
@@ -1004,13 +1287,22 @@ class NodeCore:
                 # under the same lock — so a grant and a drain snapshot
                 # can never interleave.
                 while True:
+                    rearm = None
                     with shared.header.lock:
                         ev = self._migrating.get(name)
                         if ev is None:
-                            self.leases.check_grant(name)
-                            pv = shared.header.dispense()
-                            break
-                    blocking_wait(ev, None)  # drain in progress: park, redo
+                            try:
+                                self.leases.check_grant(name)
+                                pv = shared.header.dispense()
+                                break
+                            except LeaseRearming as e:
+                                # idle-lapse re-ack round (§10): park
+                                # OUTSIDE the header lock until the chain
+                                # re-acks (or fences) the epoch, then redo
+                                rearm = e.event
+                    blocking_wait(rearm if rearm is not None else ev,
+                                  self.leases.ttl if rearm is not None
+                                  else None)
                 self._affinity_vote(name, affinity)
                 with session.lock:   # heartbeats iterate _accesses live
                     session._accesses[shared] = _ServerAccess(
@@ -1292,7 +1584,7 @@ class NodeCore:
         # abort/rollback paths deliberately stay fence-free (converging
         # versions must always work, or survivors wedge).
         for name, _entries in items:
-            self.leases.check_grant(name)
+            self._check_grant_blocking(name)
         blocked = 0
         for name, _entries in items:
             if self._acc(txn, name).wait_termination(timeout):
@@ -1597,6 +1889,82 @@ class NodeCore:
         (idempotent). See :meth:`ReplicationManager.promote`."""
         return self.replication.promote(list(names))
 
+    # -- restart protocol (§11) ----------------------------------------------
+    def _op_chain_probe(self, name: str) -> Dict[str, Any]:
+        """A restarting node asks: what is ``name`` to you, right now?
+        Pure read — primaries report their chain, followers their record,
+        tombstones their redirect. The prober folds the answers into the
+        §11 recovery decision (rejoin / drive promotion / resurrect)."""
+        # tombstone first: a deposed primary may briefly keep its stale
+        # binding while the demotion drain runs — it is NOT the primary
+        m = self.leases.moved.get(name)
+        if m is not None:
+            return {"role": "moved", "target": m[0], "epoch": m[1]}
+        if self.has_binding(name):
+            return {"role": "primary",
+                    "epoch": self.replication.epochs.get(name, 0),
+                    "order": self.replication.followers_of(name)}
+        rec = self.replication.replicas.get(name)
+        if rec is not None:
+            return {"role": "follower", "epoch": rec.applied[0],
+                    "primary": rec.primary, "order": list(rec.order),
+                    "promoted": rec.promoted,
+                    "recovering": rec.recovering}
+        w = self._recovered
+        if w is not None and name in w.objects \
+                and w.objects[name].get("role") == "primary":
+            # Restarted, not yet rebound, but the ledger says the object
+            # was served HERE: answer with the claim + epoch so two
+            # recovering images reconcile by epoch instead of both
+            # resurrecting (§11).
+            return {"role": "recovering-primary",
+                    "epoch": w.objects[name]["epoch"]}
+        return {"role": "none"}
+
+    def _op_repl_rejoin(self, name: str, addr: str) -> Dict[str, Any]:
+        """Primary side of a restarted node's chain rejoin (§11): run the
+        same drain-barrier as a migration — after quiescence there are no
+        in-flight versions and no undecided tentatives, so the snapshot
+        handed to the rejoiner is exactly the committed state (a live
+        object may hold uncommitted in-place writes; snapshotting without
+        the drain would bake aborted writes into the new tail)."""
+        try:
+            shared = self._shared(name)
+        except KeyError:
+            return {"busy": False}      # not primary here: re-probe
+        if shared.node is not self.node:
+            return {"busy": False}
+        # An idle primary's lease re-arms on first touch (§10): wait the
+        # re-ack round out here — every retry would lapse it afresh and
+        # bounce busy forever on a quiet chain.
+        self._check_grant_blocking(name)
+        h = shared.header
+        ev = threading.Event()
+        with h.lock:
+            if name in self._migrating:
+                return {"busy": True}
+            try:
+                self.leases.check_grant(name)
+            except LeaseRearming:
+                return {"busy": True}   # raced a fresh lapse: retry
+            self._migrating[name] = ev
+        try:
+            if not wait_quiescent(h, timeout=5 * self.leases.ttl):
+                return {"busy": True}   # drain never settled: retry later
+            payload = pickle.dumps(shared.holder.obj,
+                                   protocol=pickle.HIGHEST_PROTOCOL)
+            # the rejoiner may have been written off mid-outage: renewal
+            # rounds must start reaching it again
+            self.leases.departed.discard(addr)
+            return self.replication.rejoin_accept(name, addr, payload)
+        finally:
+            with h.lock:
+                self._migrating.pop(name, None)
+            ev.set()
+
+    def _op_repl_chain(self, **kw: Any) -> None:
+        self.replication.repl_chain(**kw)
+
     # -- leases + ownership migration (§10) -----------------------------------
     def _op_lease_renew(self, name: str, epoch: int, ttl: float,
                         primary: str) -> None:
@@ -1713,7 +2081,25 @@ class NodeCore:
         follower of the coordinator for the transaction's fate. ``commit``
         additionally re-drives the recorded decision chain so every
         surviving participant terminates; no recorded decision dooms the
-        transaction to abort (first-writer-wins)."""
+        transaction to abort (first-writer-wins). Before dooming, consult
+        the coordinator's own ledger if we can still name it (§11): the
+        coordinator may have restarted since the client's RPC failed, and
+        its replayed WAL is then the only durable copy of a ``commit``
+        that was never broadcast — seeding an abort here without looking
+        would split the decision across ledgers."""
+        if self.replication.decision_of(txn) is None:
+            head = self.replication.head_of(txn)
+            if head is None and self._recovered is not None:
+                # live replica buffers may already have been replaced by
+                # the restarted chain's repl_init (which clears them) —
+                # our own replayed WAL image still names the coordinator
+                for (t, _n), tt in self._recovered.pending.items():
+                    if t == txn:
+                        head = tt[3]
+                        break
+            if head and head != self.address and \
+                    self.replication._query_head(head, txn) == "commit":
+                self.replication.record_decision(txn, "commit")
         d, chain = self.replication.txn_decision(txn)
         if d == "commit" and chain:
             self._drive_decision(txn, chain)
@@ -1729,6 +2115,8 @@ class NodeCore:
                 "leases": self.leases.stats(),
                 "ledger": self.replication.ledger_stats(),
                 "migrations": self.n_migrations,
+                "wal_appends": 0 if self.wal is None else self.wal.n_appends,
+                "wal_syncs": 0 if self.wal is None else self.wal.n_syncs,
                 "metrics": self.obs_metrics.snapshot()}
 
     def _op_trace_dump(self, reset: bool = False) -> List[dict]:
@@ -1765,6 +2153,7 @@ class NodeServer(NodeCore):
         "lw_apply", "repl_init", "repl_apply", "repl_final", "repl_drop",
         "repl_decision", "repl_decision_ack", "repl_retire", "txn_status",
         "lease_renew", "lease_ack", "lease_grant", "migrate_in",
+        "chain_probe", "repl_chain",
     })
 
     #: wire v3 ships bulk payloads as out-of-band segments.
@@ -1773,11 +2162,15 @@ class NodeServer(NodeCore):
     def __init__(self, node_name: str = "node0", host: str = "127.0.0.1",
                  port: int = 0, *, registry: Optional[Registry] = None,
                  monitor_timeout: float = 2.0, monitor_poll: float = 0.05,
-                 executor_workers: int = 1):
+                 executor_workers: int = 1, wal_dir: Optional[str] = None):
+        # durability is strictly opt-in over TCP (--wal-dir): without it
+        # the hot path is byte-for-byte the pre-§11 one
+        wal = (Wal(FileStorage(os.path.join(wal_dir, f"{node_name}.wal")))
+               if wal_dir else None)
         super().__init__(node_name, registry=registry,
                          monitor_timeout=monitor_timeout,
                          monitor_poll=monitor_poll,
-                         executor_workers=executor_workers)
+                         executor_workers=executor_workers, wal=wal)
         self._pool = _WorkerPool(name=f"op-{node_name}")
         self._note_q: "queue.SimpleQueue" = queue.SimpleQueue()
         threading.Thread(target=self._pusher_loop,
@@ -1808,6 +2201,12 @@ class NodeServer(NodeCore):
         self._accept_thread.start()
         threading.Thread(target=self._reaper_loop, name="session-reaper",
                          daemon=True).start()
+        if self._recovered is not None and self._recovered.objects:
+            # networked half of the restart (§11): probe, rejoin, or
+            # resurrect — off the accept path, once the listener is up
+            threading.Thread(target=self.rejoin_chains,
+                             name=f"rejoin-{self.node_name}",
+                             daemon=True).start()
         return self
 
     def stop(self) -> None:
@@ -2170,6 +2569,9 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--monitor-timeout", type=float, default=2.0)
     ap.add_argument("--monitor-poll", type=float, default=0.05)
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--wal-dir", default=None,
+                    help="directory for this node's write-ahead ledger "
+                         "(§11); enables crash-restart recovery")
     ap.add_argument("--path", action="append", default=[],
                     help="extra sys.path entries (for unpickling bound "
                          "object classes); repeatable")
@@ -2187,7 +2589,8 @@ def main(argv: Optional[List[str]] = None) -> None:
     server = NodeServer(args.name, args.host, args.port,
                         monitor_timeout=args.monitor_timeout,
                         monitor_poll=args.monitor_poll,
-                        executor_workers=args.workers)
+                        executor_workers=args.workers,
+                        wal_dir=args.wal_dir)
     # start (and in particular listen()) BEFORE announcing: the parent
     # connects the moment it reads the line, and must not race the accept
     # loop into a connection refusal.

@@ -94,6 +94,7 @@ from repro.obs import txtrace as _txtrace
 
 from .server import ERR, NodeCore, OK, _WouldBlock, encode_error
 from .transport import Transport
+from .wal import VirtualDisk, Wal
 
 __all__ = ["SimCrash", "SimDeadlock", "SimNet", "SimNode", "SimTransport",
            "build_simnet"]
@@ -340,10 +341,15 @@ class SimNode(NodeCore):
 
     def __init__(self, simnet: "SimNet", node_name: str, *,
                  monitor_timeout: float, monitor_poll: float):
+        # Durability is always on under simnet: the node's ledger lives on
+        # the net's per-name VirtualDisk, which survives a simulated
+        # restart — appends are local (zero messages), so fault-free
+        # message plans are byte-identical with and without it.
         super().__init__(node_name, registry=Registry(),
                          monitor_timeout=monitor_timeout,
                          monitor_poll=monitor_poll,
-                         clock=simnet.now)
+                         clock=simnet.now,
+                         wal=Wal(simnet._disk(node_name)))
         self.simnet = simnet
         self.alive = True
         self._reaper_armed = False
@@ -386,7 +392,12 @@ class SimNode(NodeCore):
     def _spawn_bg(self, fn: Callable[[], None], name: str = "bg") -> None:
         """Background jobs (migration drains) run on a handler actor: they
         may block at virtual-time waits, and must never block the
-        scheduler loop itself."""
+        scheduler loop itself. Outside a run (setup/teardown execute in
+        ``_immediate`` mode) there is no scheduler to resume an actor —
+        run the job inline on the caller like every other immediate op."""
+        if not self.simnet._running:
+            fn()
+            return
         self.simnet._spawn_handler(fn, self)
 
     # -- tracing hooks --------------------------------------------------------
@@ -423,6 +434,7 @@ class SimNet:
         self._trace_lines: List[str] = []
         self._txn_labels: Dict[str, str] = {}
         self._nodes: Dict[str, SimNode] = {}
+        self._disks: Dict[str, VirtualDisk] = {}   # survive node restarts
         self._transports: Dict[Tuple[str, str], SimTransport] = {}
         self._clients: List[_Actor] = []
         self._idle_handlers: List[_Actor] = []
@@ -465,6 +477,17 @@ class SimNet:
     def node_by_address(self, address: str) -> SimNode:
         name = address.split("://", 1)[1] if "://" in address else address
         return self._nodes[name]
+
+    def _disk(self, name: str) -> VirtualDisk:
+        """The node's durable device (§11): keyed by *name*, not node
+        object, so a restarted node replays the image its predecessor
+        wrote. Re-opening un-halts a device parked by a crash."""
+        d = self._disks.get(name)
+        if d is None:
+            d = self._disks[name] = VirtualDisk()
+        else:
+            d.halt = False
+        return d
 
     def _register_transport(self, t: SimTransport) -> None:
         self._transports[(t.client_id, t.node.node_name)] = t
@@ -529,6 +552,38 @@ class SimNet:
     def crash_node_at(self, node_name: str, at: float) -> None:
         """Crash-stop a home node at virtual time ``at``."""
         self._push(at, "node_crash", node_name)
+
+    def restart_node_at(self, node_name: str, at: float) -> None:
+        """Restart a crashed home node at virtual time ``at`` under its
+        old identity (§11): a fresh process replays the surviving disk
+        image and runs the rejoin protocol against the live chains."""
+        self._push(at, "node_restart", node_name)
+
+    def inject_wal_crash(self, node_name: str, nth: int = 1,
+                         label: Optional[str] = None) -> None:
+        """Crash-stop a node at its ``nth`` WAL frame append, tearing
+        that frame (the ``node-mid-wal-append`` label): the write itself
+        is the crash point, so the frame can never land whole — replay
+        must truncate it."""
+        disk = self._disk(node_name)
+        spec = {"node": node_name, "nth": nth, "n": 0, "fired": False,
+                "label": label or f"{node_name}:node-mid-wal-append#{nth}"}
+
+        def hook(d: VirtualDisk, spec: dict = spec) -> None:
+            if not self._running:
+                return      # setup binds don't count: fire mid-schedule
+            spec["n"] += 1
+            if spec["fired"] or spec["n"] != spec["nth"]:
+                return
+            spec["fired"] = True
+            self.fired_injections.append(spec["label"])
+            d.tear_tail(self.rng)
+            d.halt = True
+            # never raise mid-handler: the crash lands right after the
+            # writer's synchronous slice, like an after_deliver injection
+            self._push(self._now, "node_crash", spec["node"])
+
+        disk.on_append = hook
 
     def inject_node_crash(self, node_name: str, op: str, nth: int = 1,
                           phase: str = "before_deliver",
@@ -603,6 +658,11 @@ class SimNet:
             return
         node.alive = False
         self._trace(f"node-crash {node_name}")
+        disk = self._disks.get(node_name)
+        if disk is not None:
+            # settle unsynced WAL frames with ordered-device semantics
+            # (seeded: a prefix lands, one frame may land torn)
+            disk.crash(self.rng)
         for (cid, nname), t in list(self._transports.items()):
             if nname != node_name:
                 continue
@@ -621,6 +681,35 @@ class SimNet:
                 self._watchers.remove(entry)
                 actor.poisoned = True
                 self._resume(actor)
+
+    def _do_node_restart(self, node_name: str) -> None:
+        """§11 restart: a fresh SimNode under the old identity replays
+        the surviving disk image (``SimNode.__init__`` builds its Wal
+        over the same VirtualDisk) and rejoins its chains on a handler
+        actor. Every transport keyed to the name is re-pointed at the
+        reborn process and revived — the sim analogue of reconnecting to
+        the same host:port."""
+        old = self._nodes.get(node_name)
+        if old is None or old.alive:
+            return
+        node = SimNode(self, node_name, monitor_timeout=self.monitor_timeout,
+                       monitor_poll=self.monitor_poll)
+        # The reborn process reads the same "config" the old one ran
+        # with — a restarted node with a mismatched lease TTL would ack
+        # renewals and compute promise windows on a different clock than
+        # the rest of the deployment.
+        node.leases.ttl = old.leases.ttl
+        node.migrate_auto = old.migrate_auto
+        self._nodes[node_name] = node
+        self._trace(f"node-restart {node_name}")
+        for (cid, nname), t in list(self._transports.items()):
+            if nname != node_name:
+                continue
+            with t._lock:
+                t.node = node
+                t.alive = True
+        if node._recovered is not None and node._recovered.objects:
+            node._spawn_bg(node.rejoin_chains, name="rejoin")
 
     # -- sending --------------------------------------------------------------
     def _send(self, t: SimTransport, req_id: Optional[int], op: str,
@@ -864,6 +953,8 @@ class SimNet:
             self._fire_reaper(payload)
         elif kind == "node_crash":
             self._do_node_crash(payload)
+        elif kind == "node_restart":
+            self._do_node_restart(payload)
         elif kind == "partition_on":
             self._partitions.append(payload)
             self._trace(f"partition-on {payload['label']}")

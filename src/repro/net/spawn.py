@@ -73,22 +73,31 @@ class ServerHandle:
 
 
 def spawn_server(name: str = "node0", *, host: str = "127.0.0.1",
+                 port: int = 0,
                  monitor_timeout: float = 2.0, monitor_poll: float = 0.05,
                  workers: int = 1, extra_paths: Sequence[str] = (),
+                 wal_dir: Optional[str] = None,
                  startup_timeout: float = 20.0) -> ServerHandle:
     """Spawn one node-server process and wait for its announcement.
 
     ``extra_paths`` are appended to the server's ``sys.path`` so that
     classes of objects bound over the wire (pickled by reference) can be
     imported on the home node.
+
+    ``port=0`` (the default) lets the OS pick; a fixed port plus a
+    ``wal_dir`` is the §11 restart recipe — SIGKILL the process, spawn it
+    again under the same name/port/wal_dir, and it replays its ledger and
+    rejoins its chains under the old identity.
     """
     cmd: List[str] = [
         sys.executable, "-u", "-m", "repro.net.server",
-        "--name", name, "--host", host, "--port", "0", "--announce",
+        "--name", name, "--host", host, "--port", str(port), "--announce",
         "--monitor-timeout", str(monitor_timeout),
         "--monitor-poll", str(monitor_poll),
         "--workers", str(workers),
     ]
+    if wal_dir is not None:
+        cmd += ["--wal-dir", str(wal_dir)]
     for p in extra_paths:
         cmd += ["--path", str(p)]
     env = dict(os.environ)
