@@ -114,7 +114,8 @@ def check(baseline: dict, fresh: dict, max_regress: float) -> int:
                        "replication_oneways_per_txn", "commits",
                        "migrations_per_txn", "lease_renews_per_txn",
                        "wal_appends_per_txn", "fsync_batches_per_txn",
-                       "migrations"):
+                       "migrations", "commute_oneways_per_txn",
+                       "merged_deltas_per_txn"):
             if metric not in base:
                 continue
             b, f_ = base[metric], row.get(metric)
@@ -173,7 +174,9 @@ def check(baseline: dict, fresh: dict, max_regress: float) -> int:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("paths", nargs="*",
-                    help="legacy positional form: BASELINE FRESH")
+                    help="FRESH results file (positional shorthand for "
+                         "--fresh; the old BASELINE FRESH pair is gone — "
+                         "baselines auto-select, or pass --baseline)")
     ap.add_argument("--baseline", default=None,
                     help="checked-in BENCH_PR<n>.json (default: the "
                          "newest one with gate-able rows under "
@@ -188,13 +191,12 @@ def main() -> None:
     args = ap.parse_args()
     baseline_path, fresh_path = args.baseline, args.fresh
     if args.paths:
-        if len(args.paths) == 2 and not (baseline_path or fresh_path):
-            baseline_path, fresh_path = args.paths
-        elif len(args.paths) == 1 and not fresh_path:
+        if len(args.paths) == 1 and not fresh_path:
             fresh_path = args.paths[0]
         else:
-            ap.error("pass either BASELINE FRESH positionally or "
-                     "--baseline/--fresh")
+            ap.error("pass one FRESH file (or --fresh); the legacy "
+                     "positional BASELINE FRESH form was removed — "
+                     "baselines auto-select, or use --baseline")
     if fresh_path is None:
         ap.error("a fresh results file is required")
     if baseline_path is None:

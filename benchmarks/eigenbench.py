@@ -71,6 +71,21 @@ class RefCell:
         return RefCell(self.value, self.op_time or None)
 
 
+class HotCell(RefCell):
+    """A reference cell whose increments form a commuting method class
+    (DESIGN.md §12): ``add`` deltas merge at the home node without
+    version-gated dispensing — the hot-key workload's primitive."""
+
+    @access(Mode.WRITE, commutes="add")
+    def add(self, d: int) -> None:
+        if self.op_time:
+            time.sleep(self.op_time)
+        self.value += d
+
+    def __tx_snapshot__(self) -> "HotCell":
+        return HotCell(self.value, self.op_time or None)
+
+
 @dataclass
 class EigenConfig:
     nodes: int = 4
@@ -88,9 +103,16 @@ class EigenConfig:
     #: ``mix`` — the classic ratio-mix plans; ``bank`` — long-chain bank
     #: transfers: each transaction walks ``chain_len`` accounts moving a
     #: balance along the chain (read-modify-write per hop, consecutive
-    #: ops per object — the operation-fusion hot path).
+    #: ops per object — the operation-fusion hot path); ``hotkey`` —
+    #: Zipfian hot-key increments: every transaction bumps one
+    #: Zipf-picked hot cell ``hot_ops`` times (the commute workload:
+    #: ``commute=True`` declares the bumps commute-restricted and they
+    #: merge as deltas, ``commute=False`` runs the identical plan through
+    #: exact version-gated accesses — the pre-§12 message plan).
     workload: str = "mix"
     chain_len: int = 4
+    commute: bool = True               # hotkey workload only
+    zipf_s: float = 1.5                # hotkey skew exponent
 
 
 @dataclass
@@ -114,6 +136,9 @@ class Result:
     # -- durability metrics (sim transport only; 0.0 elsewhere) --------------
     wal_appends_per_txn: float = 0.0   # §11 ledger records per committed txn
     fsync_batches_per_txn: float = 0.0 # §11 group-commit flushes per txn
+    # -- commute metrics (sim transport only; 0.0 elsewhere) ------------------
+    commute_oneways_per_txn: float = 0.0  # §12 deltas shipped one-way
+    merged_deltas_per_txn: float = 0.0    # §12 deltas folded under merge lock
 
 
 Step = Tuple[Any, str, Optional[int]]  # (shared_obj, "read"/"write", value)
@@ -190,6 +215,31 @@ def _gen_bank_plan(rng: random.Random, cfg: EigenConfig, hot: List,
     return steps
 
 
+def _zipf_weights(n: int, s: float) -> List[float]:
+    return [1.0 / (i + 1) ** s for i in range(n)]
+
+
+def _gen_hotkey_plan(rng: random.Random, cfg: EigenConfig, hot: List
+                     ) -> List[Step]:
+    """Zipfian hot-key increments: pick ONE hot cell (Zipf over the pool,
+    so the head cell draws most transactions across all clients) and bump
+    it ``hot_ops`` times. Every step is an ``add`` — a declared commuting
+    WRITE — so the commute-restricted execution ships the whole
+    transaction as mergeable deltas; the exact execution runs the same
+    plan through version-gated dispensing."""
+    weights = _zipf_weights(len(hot), cfg.zipf_s)
+    total = sum(weights)
+    x = rng.random() * total
+    idx = len(hot) - 1
+    for i, w in enumerate(weights):
+        x -= w
+        if x <= 0:
+            idx = i
+            break
+    obj = hot[idx]
+    return [(obj, "add", rng.randrange(1, 100)) for _ in range(cfg.hot_ops)]
+
+
 def _plan_counts(steps: Sequence[Step]) -> Dict[Any, Tuple[int, int]]:
     counts: Dict[Any, Tuple[int, int]] = {}
     for obj, op, _ in steps:
@@ -227,13 +277,31 @@ def run_optsva(reg: Registry, steps: List[Step], stats: Dict) -> None:
             if j - i == 1:
                 _o, op, val = steps[i]
                 p = proxies[obj]
-                p.read() if op == "read" else p.write(val)
+                p.read() if op == "read" else getattr(p, op)(val)
             else:
                 t.invoke_many(proxies[obj],
                               [("read", (), {}) if op == "read"
-                               else ("write", (val,), {})
+                               else (op, (val,), {})
                                for _o, op, val in steps[i:j]])
             i = j
+
+    _run_pessimistic(t, body, stats)
+
+
+def run_optsva_commute(reg: Registry, steps: List[Step], stats: Dict) -> None:
+    """The §12 commute-restricted execution of an all-``add`` plan: the
+    transaction promises to touch each object only through its commuting
+    class, skips version-gated dispensing, and its invocations merge as
+    deltas at the home node."""
+    t = Transaction(reg)
+    counts: Dict[Any, int] = {}
+    for obj, _op, _v in steps:
+        counts[obj] = counts.get(obj, 0) + 1
+    proxies = {obj: t.commutes(obj, n) for obj, n in counts.items()}
+
+    def body(t):
+        for obj, _op, val in steps:
+            proxies[obj].add(val)
 
     _run_pessimistic(t, body, stats)
 
@@ -312,6 +380,15 @@ FRAMEWORKS: Dict[str, Callable] = {
 }
 
 
+def _pick_runner(framework: str, cfg: EigenConfig) -> Callable:
+    """The per-framework executor, with the §12 commute-restricted variant
+    substituted when the hotkey workload runs with ``commute=True``."""
+    if (cfg.workload == "hotkey" and cfg.commute
+            and framework == "optsva-cf"):
+        return run_optsva_commute
+    return FRAMEWORKS[framework]
+
+
 # --------------------------------------------------------------------------- #
 # Harness                                                                      #
 # --------------------------------------------------------------------------- #
@@ -329,6 +406,7 @@ _TRACE_EXTRA: List[dict] = []
 def _build_inproc(cfg: EigenConfig):
     """In-process topology: Registry nodes with simulated network delay."""
     RefCell.op_time = cfg.op_time_ms / 1e3
+    hot_cls = HotCell if cfg.workload == "hotkey" else RefCell
     reg = Registry()
     nodes = [reg.add_node(f"n{i}", network_delay=cfg.network_delay_ms / 1e3)
              for i in range(cfg.nodes)]
@@ -337,11 +415,11 @@ def _build_inproc(cfg: EigenConfig):
     mild_by_client: Dict[int, List] = {}
     for ni, node in enumerate(nodes):
         for i in range(cfg.arrays_per_node):
-            hot.append(reg.bind(f"hot-{ni}-{i}", RefCell(), node))
+            hot.append(node.bind(f"hot-{ni}-{i}", hot_cls()))
     for ci in range(n_clients):
         node = nodes[ci % cfg.nodes]
         mild_by_client[ci] = [
-            reg.bind(f"mild-{ci}-{i}", RefCell(), node)
+            node.bind(f"mild-{ci}-{i}", RefCell())
             for i in range(cfg.arrays_per_node)]
     return reg, hot, mild_by_client, lambda: reg.shutdown()
 
@@ -371,7 +449,8 @@ def _build_tcp(cfg: EigenConfig):
     # repo root on sys.path — add it so the package import resolves.
     if repo_root not in sys.path:
         sys.path.insert(0, repo_root)
-    from benchmarks.eigenbench import RefCell as Cell
+    from benchmarks.eigenbench import HotCell, RefCell
+    Cell = HotCell if cfg.workload == "hotkey" else RefCell
     handles = spawn_cluster(cfg.nodes, extra_paths=[repo_root])
     reg = Registry()
     remote_nodes = [reg.connect(h.address) for h in handles]
@@ -385,7 +464,7 @@ def _build_tcp(cfg: EigenConfig):
     for ci in range(n_clients):
         rn = remote_nodes[ci % cfg.nodes]
         mild_by_client[ci] = [
-            rn.bind(f"mild-{ci}-{i}", Cell(0, op_time or None))
+            rn.bind(f"mild-{ci}-{i}", RefCell(0, op_time or None))
             for i in range(cfg.arrays_per_node)]
 
     def teardown() -> None:
@@ -425,9 +504,11 @@ def _build_sim(cfg: EigenConfig):
         # proves correct. Single-node topologies have nowhere to replicate.
         return [addrs[(ni + 1) % cfg.nodes]] if cfg.nodes > 1 else []
 
+    hot_cls = HotCell if cfg.workload == "hotkey" else RefCell
     for ni, rn in enumerate(remote_nodes):
         for i in range(cfg.arrays_per_node):
-            hot.append(rn.bind(f"hot-{ni}-{i}", RefCell(0, op_time or None),
+            hot.append(rn.bind(f"hot-{ni}-{i}",
+                               hot_cls(0, op_time or None),
                                followers=_followers(ni)))
     for ci in range(n_clients):
         ni = ci % cfg.nodes
@@ -446,7 +527,7 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
     the deterministic primary signal of the CI bench gate."""
     net, setup, hot, mild_by_client = _build_sim(cfg)
     n_clients = cfg.nodes * cfg.clients_per_node
-    runner = FRAMEWORKS[framework]
+    runner = _pick_runner(framework, cfg)
     stats_per_client = [dict(commits=0, aborts=0, retries=0, ops=0, waits=0)
                         for _ in range(n_clients)]
 
@@ -457,6 +538,9 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
             hist: List[Any] = []
             plans.append([_gen_bank_plan(rng, cfg, hot, mild_by_client[ci],
                                          hist)
+                          for _ in range(cfg.txns_per_client)])
+        elif cfg.workload == "hotkey":
+            plans.append([_gen_hotkey_plan(rng, cfg, hot)
                           for _ in range(cfg.txns_per_client)])
         else:
             plans.append([_gen_plan(rng, cfg, hot, mild_by_client[ci])
@@ -501,6 +585,11 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
                    if node.wal is not None)
     n_walsync = sum(node.wal.n_syncs for node in net._nodes.values()
                     if node.wal is not None)
+    # §12 commute metrics: one-way delta messages received and deltas
+    # folded under the per-class merge lock, node-side. Exact under
+    # simnet, gate-able like the rest of the message plan.
+    n_cmw = sum(node.n_commute_oneways for node in net._nodes.values())
+    n_merged = sum(node.n_merged_deltas for node in net._nodes.values())
     net.shutdown()
 
     commits = sum(s["commits"] for s in stats_per_client)
@@ -521,7 +610,9 @@ def _run_benchmark_sim(framework: str, cfg: EigenConfig) -> Result:
                   migrations_per_txn=round(n_migr / max(commits, 1), 3),
                   lease_renews_per_txn=round(n_renew / max(commits, 1), 3),
                   wal_appends_per_txn=round(n_walapp / max(commits, 1), 2),
-                  fsync_batches_per_txn=round(n_walsync / max(commits, 1), 2))
+                  fsync_batches_per_txn=round(n_walsync / max(commits, 1), 2),
+                  commute_oneways_per_txn=round(n_cmw / max(commits, 1), 2),
+                  merged_deltas_per_txn=round(n_merged / max(commits, 1), 2))
 
 
 def run_benchmark(framework: str, cfg: EigenConfig,
@@ -544,7 +635,7 @@ def run_benchmark(framework: str, cfg: EigenConfig,
             if c is not None:
                 c.n_rpc = c.n_oneway = c.n_inline = c.n_handoff = 0
 
-    runner = FRAMEWORKS[framework]
+    runner = _pick_runner(framework, cfg)
     stats_per_client = [dict(commits=0, aborts=0, retries=0, ops=0, waits=0)
                         for _ in range(n_clients)]
     # generate all plans up front (a-priori access sets)
@@ -555,6 +646,9 @@ def run_benchmark(framework: str, cfg: EigenConfig,
             hist: List[Any] = []    # locality window spans the client's txns
             plans.append([_gen_bank_plan(rng, cfg, hot, mild_by_client[ci],
                                          hist)
+                          for _ in range(cfg.txns_per_client)])
+        elif cfg.workload == "hotkey":
+            plans.append([_gen_hotkey_plan(rng, cfg, hot)
                           for _ in range(cfg.txns_per_client)])
         else:
             plans.append([_gen_plan(rng, cfg, hot, mild_by_client[ci])
@@ -644,10 +738,16 @@ def main() -> None:
                     help="schedule seed (plans + the sim scheduler)")
     ap.add_argument("--sweep", default="none",
                     choices=["none", "clients", "nodes", "nodes-mild"])
-    ap.add_argument("--workload", default="mix", choices=["mix", "bank"],
+    ap.add_argument("--workload", default="mix",
+                    choices=["mix", "bank", "hotkey"],
                     help="mix: classic ratio plans; bank: long-chain "
                          "transfers (read-modify-write per account — the "
-                         "operation-fusion hot path)")
+                         "operation-fusion hot path); hotkey: Zipfian "
+                         "hot-key increments (the §12 commute workload)")
+    ap.add_argument("--no-commute", action="store_true",
+                    help="hotkey workload: run the identical plan through "
+                         "exact version-gated accesses (the pre-§12 plan) "
+                         "instead of commute-restricted delta merging")
     ap.add_argument("--chain-len", type=int, default=4,
                     help="accounts per bank-transfer chain")
     ap.add_argument("--clients-per-node", type=int, default=4)
@@ -682,11 +782,13 @@ def main() -> None:
                       txns_per_client=args.txns,
                       read_pct=read_pct,
                       op_time_ms=args.op_ms, seed=args.seed,
-                      workload=args.workload, chain_len=args.chain_len)
+                      workload=args.workload, chain_len=args.chain_len,
+                      commute=not args.no_commute)
     if args.full:
         cfg = EigenConfig(nodes=16, clients_per_node=16, txns_per_client=10,
                           read_pct=read_pct, op_time_ms=3.0, seed=args.seed,
-                          workload=args.workload, chain_len=args.chain_len)
+                          workload=args.workload, chain_len=args.chain_len,
+                          commute=not args.no_commute)
 
     print("framework,value,throughput_ops_s,abort_rate_pct,commits,aborts,"
           "retries,waits,rpcs_per_txn,handoffs_per_txn")

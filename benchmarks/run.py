@@ -170,7 +170,7 @@ def bench_scheduler_overhead(full: bool = False,
 # Transport-overhead bench (PR2, re-measured per PR): in-proc vs real TCP wire #
 # --------------------------------------------------------------------------- #
 def bench_transport_overhead(full: bool = False,
-                             out: str = "BENCH_PR9.json") -> None:
+                             out: str = "BENCH_PR10.json") -> None:
     """Per-transaction cost of the real wire (``repro.net``), honestly.
 
     The same Eigenbench schedule (read-dominated 9:1 — the paper's
@@ -296,9 +296,10 @@ def bench_transport_overhead(full: bool = False,
             "fsync_batches_per_txn": r_sim.fsync_batches_per_txn,
             "gate_wait_p50_us": gate_p50,
             "handoff_p50_us": handoff_p50})
+    json_rows.extend(_bench_hotkey_rows())
     json_rows.extend(_bench_migration_rows())
     write_bench_json(out, json_rows, meta={
-        "bench": "transport_overhead", "pr": 9, "op_time_ms": 0.0,
+        "bench": "transport_overhead", "pr": 10, "op_time_ms": 0.0,
         "txns_per_client": txns, "repeats": repeats,
         "note": ("tcp = one node-server subprocess per registry node "
                  "(repro.net), honest wire over the multiplexed pipelined "
@@ -319,7 +320,15 @@ def bench_transport_overhead(full: bool = False,
                  "transport/migration rows are the Zipfian hot-key "
                  "scenario: affinity-driven auto-migration must move the "
                  "hot object to its dominant accessor and strictly lower "
-                 "rpcs_per_txn post-migration.")})
+                 "rpcs_per_txn post-migration. The transport/hotkey-* rows "
+                 "are the §12 commute gate: the identical Zipfian hot-key "
+                 "increment plan run exact (version-gated, the pre-§12 "
+                 "message plan) and commute-restricted (delta merging) — "
+                 "commute must strictly lower rpcs_per_txn and gate-wait "
+                 "with equal commits and zero aborts; "
+                 "commute_oneways_per_txn / merged_deltas_per_txn count "
+                 "deltas shipped one-way and deltas folded under the "
+                 "per-class merge lock, node-side, exact per seed.")})
 
 
 def _bench_migration_rows() -> list:
@@ -441,6 +450,98 @@ def _bench_migration_rows() -> list:
     return rows
 
 
+def _bench_hotkey_rows() -> list:
+    """Commute-vs-exact hot-key scenario (DESIGN.md §12), sim transport.
+
+    The same Zipfian hot-key increment plan runs twice on the sim
+    transport: once *exact* (``commute=False`` — every ``add`` is a
+    version-gated remote invocation, the pre-§12 message plan) and once
+    *commute-restricted* (``add`` declared as a commuting method class —
+    invocations ship as one-way deltas and fold under the per-class merge
+    lock at commit). Both runs are deterministic per seed, so every
+    metric is recorded for the exact-equality gate; the directional check
+    is hard: commute must strictly lower ``rpcs_per_txn`` while keeping
+    commits equal and aborts zero, and the exact run must report zero
+    commute traffic (proving the default path is untouched).
+    """
+    import benchmarks.eigenbench as eb
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import txtrace
+
+    cfg_kw = dict(nodes=2, clients_per_node=4, arrays_per_node=4,
+                  txns_per_client=4, hot_ops=10, op_time_ms=0.0,
+                  workload="hotkey")
+    rows = []
+    results = {}
+    for label, commute in (("exact", False), ("commute", True)):
+        cfg = eb.EigenConfig(commute=commute, **cfg_kw)
+        was_on = txtrace.enabled
+        txtrace.reset()
+        obs_metrics.reset()
+        txtrace.enable()
+        try:
+            r = eb.run_benchmark("optsva-cf", cfg, transport="sim")
+        finally:
+            if not was_on:
+                txtrace.disable()
+        gate_p50 = obs_metrics.merged_percentile("gate_wait_us", 0.5)
+        txtrace.reset()
+        obs_metrics.reset()
+        results[label] = (r, gate_p50)
+        derived = (f"rpcs_per_txn={r.rpcs_per_txn};"
+                   f"oneways_per_txn={r.oneways_per_txn};"
+                   f"replication_oneways_per_txn="
+                   f"{r.replication_oneways_per_txn};"
+                   f"commute_oneways_per_txn={r.commute_oneways_per_txn};"
+                   f"merged_deltas_per_txn={r.merged_deltas_per_txn};"
+                   f"wal_appends_per_txn={r.wal_appends_per_txn};"
+                   f"fsync_batches_per_txn={r.fsync_batches_per_txn};"
+                   f"commits={r.commits};aborts={r.aborts};"
+                   f"waits={r.waits};gate_wait_p50_us={gate_p50}")
+        emit(f"transport/hotkey-{label}/sim", 0.0, derived)
+        rows.append({
+            "name": f"transport/hotkey-{label}/sim", "transport": "sim",
+            "us_per_call": 0.0, "derived": derived,
+            "commits": r.commits, "aborts": r.aborts, "waits": r.waits,
+            "seed": cfg.seed,
+            "rpcs_per_txn": r.rpcs_per_txn,
+            "oneways_per_txn": r.oneways_per_txn,
+            "replication_oneways_per_txn": r.replication_oneways_per_txn,
+            "commute_oneways_per_txn": r.commute_oneways_per_txn,
+            "merged_deltas_per_txn": r.merged_deltas_per_txn,
+            "wal_appends_per_txn": r.wal_appends_per_txn,
+            "fsync_batches_per_txn": r.fsync_batches_per_txn,
+            "gate_wait_p50_us": gate_p50})
+    r_ex, _ = results["exact"]
+    r_cm, _ = results["commute"]
+    if r_cm.aborts or r_ex.aborts:
+        raise RuntimeError(
+            f"hotkey bench: aborts (exact={r_ex.aborts}, "
+            f"commute={r_cm.aborts}) — expected a clean pessimistic run")
+    if r_cm.commits != r_ex.commits:
+        raise RuntimeError(
+            f"hotkey bench: commit counts diverge (exact={r_ex.commits}, "
+            f"commute={r_cm.commits}) — commute mode lost transactions")
+    if r_cm.rpcs_per_txn >= r_ex.rpcs_per_txn:
+        raise RuntimeError(
+            f"hotkey bench: commute rpcs_per_txn={r_cm.rpcs_per_txn} not "
+            f"below exact {r_ex.rpcs_per_txn} — §12 coordination "
+            f"avoidance is not avoiding coordination")
+    if r_cm.commute_oneways_per_txn <= 0 or r_cm.merged_deltas_per_txn <= 0:
+        raise RuntimeError(
+            f"hotkey bench: commute run shipped no deltas "
+            f"(oneways={r_cm.commute_oneways_per_txn}, "
+            f"merged={r_cm.merged_deltas_per_txn}) — the commute path "
+            f"silently fell back to exact dispatch")
+    if r_ex.commute_oneways_per_txn or r_ex.merged_deltas_per_txn:
+        raise RuntimeError(
+            f"hotkey bench: exact run reports commute traffic "
+            f"(oneways={r_ex.commute_oneways_per_txn}, "
+            f"merged={r_ex.merged_deltas_per_txn}) — the default path "
+            f"is contaminated")
+    return rows
+
+
 # --------------------------------------------------------------------------- #
 # Roofline tables from the dry-run artifacts (deliverable g)                   #
 # --------------------------------------------------------------------------- #
@@ -503,7 +604,7 @@ def main() -> None:
                          "fig13,roofline,step")
     ap.add_argument("--bench-out", default="BENCH_PR1.json",
                     help="JSON trajectory point for the sched table")
-    ap.add_argument("--transport-out", default="BENCH_PR9.json",
+    ap.add_argument("--transport-out", default="BENCH_PR10.json",
                     help="JSON trajectory point for the transport table "
                          "(per-PR: pass BENCH_PR<n>.json for PR n)")
     args = ap.parse_args()

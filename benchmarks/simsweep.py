@@ -71,6 +71,7 @@ primary and a live follower again.
 Usage::
 
     python -m benchmarks.simsweep --seeds 200                  # PR gate
+    python -m benchmarks.simsweep --seeds 200 --commute        # §12 gate
     python -m benchmarks.simsweep --seeds 100 --node-faults    # failover gate
     python -m benchmarks.simsweep --seeds 100 --node-faults \
         --partitions --migrations          # membership-churn gate (§10)
@@ -92,7 +93,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core import AbortError, Transaction
 from repro.core.api import TransactionError
 from repro.net import leases as _leases
-from repro.net.demo import LedgerAccount
+from repro.net.demo import HotLedgerAccount, LedgerAccount
 from repro.net.replication import LEDGER_CAP
 from repro.net.simnet import SimDeadlock, build_simnet
 
@@ -180,7 +181,7 @@ def _topology(rng: random.Random) -> Tuple[int, int, int, int]:
 
 def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
              partitions: bool = False, migrations: bool = False,
-             restarts: bool = False,
+             restarts: bool = False, commute: bool = False,
              keep_net: bool = False) -> Dict[str, Any]:
     """Run one seeded schedule; returns the result record (see keys below).
 
@@ -224,11 +225,18 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
                         for ni in range(n_nodes)}
     if churn_part:
         follower_of_node[n_nodes - 1] = addrs[1]
+    # Commute sweeps (§12) bind accounts whose ``deposit`` is a declared
+    # commuting method class: commute-restricted transfers ship both legs
+    # as mergeable deltas, while the exact transfers / marks / audits in
+    # the same schedule force snap-backs mid-merge. Everything downstream
+    # (conservation, all-or-nothing, audits) is unchanged — the sum must
+    # be conserved even when the deltas fold under the merge lock.
+    acct_cls = HotLedgerAccount if commute else LedgerAccount
     account_names: List[str] = []
     for ni, rn in enumerate(nodes):
         for ai in range(accts_per_node):
             name = f"acct-{ni}-{ai}"
-            rn.bind(name, LedgerAccount(initial),
+            rn.bind(name, acct_cls(initial),
                     followers=[follower_of_node[ni]])
             account_names.append(name)
     node_of = {f"acct-{ni}-{ai}": ni for ni in range(n_nodes)
@@ -376,8 +384,18 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
         t = Transaction(reg)
         proxies = {}
         for i, name in enumerate(chain):
-            ups = 1 if i in (0, len(chain) - 1) else 2
-            proxies[name] = t.accesses(reg.locate(name), 1, 0, ups)
+            if commute:
+                # HotLedgerAccount's deposit is Mode.WRITE (commute
+                # class): declare the legs by mode — withdraw on every
+                # account but the last, deposit on every one but the
+                # first. These exact accesses snap merging objects back
+                # to full OptSVA ordering (§12).
+                wr = 1 if i > 0 else 0
+                ups = 1 if i < len(chain) - 1 else 0
+                proxies[name] = t.accesses(reg.locate(name), 1, wr, ups)
+            else:
+                ups = 1 if i in (0, len(chain) - 1) else 2
+                proxies[name] = t.accesses(reg.locate(name), 1, 0, ups)
 
         def body(tt):
             for a, b in zip(chain, chain[1:]):
@@ -399,6 +417,49 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
             raise
         pending_transfers.remove(entry)
         committed_transfers.append(entry)
+        stats["commits"] += 1
+
+    def commute_transfer_txn(reg, t_rng) -> None:
+        # §12 commute-restricted transfer: both legs are deposits of the
+        # same commuting class (one negative, one positive), declared via
+        # ``t.commutes`` — they skip version-gated dispensing and ship as
+        # mergeable one-way deltas, yet the global sum is conserved and
+        # the all-or-nothing rule still binds a crashed client's commit.
+        src, dst = t_rng.sample(account_names, 2)
+        amt = t_rng.randrange(1, 50)
+        t = Transaction(reg)
+        ps = t.commutes(reg.locate(src), 1)
+        pd = t.commutes(reg.locate(dst), 1)
+        entry = ([src, dst], amt)
+        pending_transfers.append(entry)
+        try:
+            t.start(lambda tt: (ps.deposit(-amt), pd.deposit(amt)))
+        except Exception:
+            pending_transfers.remove(entry)
+            raise
+        pending_transfers.remove(entry)
+        committed_transfers.append(entry)
+        stats["commits"] += 1
+
+    def commute_burst_txn(reg, t_rng) -> None:
+        # Single-object §12 fast path: the whole access set is one
+        # commute-declared access on one node, so dispensing defers
+        # entirely and the first DELTA_FLUSH deposits ship as a pipelined
+        # ``commute_delta`` one-way (the rest ride the commit). The
+        # amounts pair up to net zero, so the conservation invariant is
+        # indifferent to whether the burst committed.
+        name = t_rng.choice(account_names)
+        amts = [t_rng.randrange(1, 50) for _ in range(5)]
+        t = Transaction(reg)
+        p = t.commutes(reg.locate(name), 2 * len(amts))
+
+        def body(tt):
+            for a in amts:
+                p.deposit(a)
+            for a in amts:
+                p.deposit(-a)
+
+        t.start(body)
         stats["commits"] += 1
 
     def mark_txn(reg, t_rng, cid: str, tag: str) -> None:
@@ -430,15 +491,27 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
         c_rng = random.Random(f"simsweep:{seed}:{cid}")
         # c0 (the injection target) runs a fixed mix that contains every
         # injectable op: transfers (dispense/open/finish), then a
-        # write-only mark (lw_apply), then an audit.
-        kinds = (["transfer", "transfer", "mark", "audit"]
-                 if cid == "c0" else
-                 [c_rng.choice(["transfer", "transfer", "mark", "audit"])
-                  for _ in range(txns_per_client)])
+        # write-only mark (lw_apply), then an audit. Commute sweeps
+        # prepend a commute-restricted transfer — it adds a dispense (so
+        # mid-dispense crashes can hit a delta-holding client) but no
+        # open_call / lw_apply / commit_chain, keeping every original
+        # injection label reachable — and add both commute kinds to the
+        # other clients' draw.
+        pool = ["transfer", "transfer", "mark", "audit"]
+        c0_mix = ["transfer", "transfer", "mark", "audit"]
+        if commute:
+            pool += ["ctransfer", "cburst"]
+            c0_mix = ["ctransfer"] + c0_mix
+        kinds = (c0_mix if cid == "c0" else
+                 [c_rng.choice(pool) for _ in range(txns_per_client)])
         for i, kind in enumerate(kinds):
             try:
                 if kind == "transfer":
                     transfer_txn(reg, c_rng)
+                elif kind == "ctransfer":
+                    commute_transfer_txn(reg, c_rng)
+                elif kind == "cburst":
+                    commute_burst_txn(reg, c_rng)
                 elif kind == "mark":
                     mark_txn(reg, c_rng, cid, f"{cid}.t{i}")
                 else:
@@ -657,6 +730,14 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
                     else (node_fault or partitioned),
         "nodes": n_nodes, "clients": n_clients,
         "partitioned": partitioned, "migrated": migrated,
+        # §12 delta accounting (node-side): deltas received one-way and
+        # deltas folded under the merge lock — the sweep-level check
+        # demands the commute path was actually exercised, not silently
+        # snapped back to exact dispatch everywhere.
+        "commute_oneways": sum(n.n_commute_oneways
+                               for n in net._nodes.values()),
+        "merged_deltas": sum(n.n_merged_deltas
+                             for n in net._nodes.values()),
     }
     if keep_net:
         out["net"] = net
@@ -668,7 +749,8 @@ def run_seed(seed: int, *, faults: bool = True, node_faults: bool = False,
 def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
                              node_faults: bool, partitions: bool = False,
                              migrations: bool = False,
-                             restarts: bool = False) -> None:
+                             restarts: bool = False,
+                             commute: bool = False) -> None:
     """Replay a failing seed with txtrace enabled and export the merged
     Perfetto span trace next to its schedule trace. The schedule is a
     pure function of the seed, so the replay reproduces the failure and
@@ -682,7 +764,7 @@ def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
     try:
         run_seed(seed, faults=faults, node_faults=node_faults,
                  partitions=partitions, migrations=migrations,
-                 restarts=restarts)
+                 restarts=restarts, commute=commute)
     finally:
         if not was_enabled:
             txtrace.disable()
@@ -693,27 +775,30 @@ def _span_trace_failing_seed(seed: int, out: Path, *, faults: bool,
 
 def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
           partitions: bool = False, migrations: bool = False,
-          restarts: bool = False,
+          restarts: bool = False, commute: bool = False,
           replay_check: int = 10,
           trace_dir: Optional[str] = None,
           trace_failing: bool = False) -> int:
     failed: List[Dict[str, Any]] = []
     coverage: Dict[str, int] = {}
     n_migrated = n_refused = 0
+    n_deltas = n_merged = 0
     replayed = 0
     for seed in seeds:
         res = run_seed(seed, faults=faults, node_faults=node_faults,
                        partitions=partitions, migrations=migrations,
-                       restarts=restarts)
+                       restarts=restarts, commute=commute)
         if res["injected"]:
             coverage[res["injected"]] = coverage.get(res["injected"], 0) + 1
         for _name, _target, ok in res.get("migrated", ()):
             n_migrated += 1 if ok else 0
             n_refused += 0 if ok else 1
+        n_deltas += res["commute_oneways"]
+        n_merged += res["merged_deltas"]
         if res["failures"] or replayed < replay_check:
             res2 = run_seed(seed, faults=faults, node_faults=node_faults,
                             partitions=partitions, migrations=migrations,
-                            restarts=restarts)
+                            restarts=restarts, commute=commute)
             replayed += 1
             if res2["trace"] != res["trace"]:
                 res["failures"].append(
@@ -734,7 +819,8 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
                                      node_faults=node_faults,
                                      partitions=partitions,
                                      migrations=migrations,
-                                     restarts=restarts, keep_net=True)
+                                     restarts=restarts, commute=commute,
+                                     keep_net=True)
                     for nn, disk in res_w["net"]._disks.items():
                         p = d / f"seed-{seed}-{nn}.wal"
                         p.write_bytes(disk.data)
@@ -745,7 +831,7 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
                         seed, d / f"seed-{seed}.trace.json",
                         faults=faults, node_faults=node_faults,
                         partitions=partitions, migrations=migrations,
-                        restarts=restarts)
+                        restarts=restarts, commute=commute)
             else:
                 print("  --- replayable schedule (tail) ---")
                 for line in res["trace"].splitlines()[-40:]:
@@ -758,7 +844,17 @@ def sweep(seeds: range, *, faults: bool = True, node_faults: bool = False,
     if migrations:
         print(f"forced migrations: {n_migrated} handed off, "
               f"{n_refused} refused (dead/cut target)")
+    if commute:
+        print(f"commute deltas: {n_deltas} shipped one-way, "
+              f"{n_merged} folded under the merge lock")
     rc = 1 if failed else 0
+    if commute and n >= 50 and n_merged == 0:
+        # Conservation-under-merged-deltas is only meaningful if deltas
+        # actually merged: an all-snap-back sweep silently degrades to
+        # the exact path and proves nothing about §12.
+        print("FAIL: commute sweep folded zero deltas — the commute "
+              "path never engaged")
+        rc = 1
     if faults and n >= 50:
         distinct = len([k for k in coverage if not k.startswith("node-")])
         if node_faults:
@@ -814,6 +910,12 @@ def main() -> None:
                          "identity (§11 WAL replay + chain rejoin) and "
                          "add the durability crash plans; implies "
                          "--node-faults")
+    ap.add_argument("--commute", action="store_true",
+                    help="bind commuting-deposit accounts and mix "
+                         "commute-restricted transfers into the workload "
+                         "(§12): conservation must hold while deltas "
+                         "merge, and the sweep fails if no delta ever "
+                         "folds")
     ap.add_argument("--replay-check", type=int, default=10,
                     help="re-run this many seeds and require "
                          "byte-identical traces")
@@ -833,7 +935,8 @@ def main() -> None:
                        node_faults=node_faults,
                        partitions=args.partitions,
                        migrations=args.migrations,
-                       restarts=args.restarts)
+                       restarts=args.restarts,
+                       commute=args.commute)
         if args.print_trace:
             sys.stdout.write(res["trace"])
         print(f"seed {args.seed}: commits={res['commits']} "
@@ -847,6 +950,7 @@ def main() -> None:
                    partitions=args.partitions,
                    migrations=args.migrations,
                    restarts=args.restarts,
+                   commute=args.commute,
                    replay_check=args.replay_check,
                    trace_dir=args.trace_dir,
                    trace_failing=args.trace_failing))

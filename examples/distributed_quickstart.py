@@ -24,9 +24,8 @@ import threading
 import time
 from pathlib import Path
 
-from repro.core import AbortError, Registry, Transaction
+from repro.dtm import AbortError, Transaction, bind, connect, spawn_server
 from repro.net.demo import Account
-from repro.net.spawn import spawn_server
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
@@ -39,9 +38,9 @@ def main() -> None:
               f"(pid {east.proc.pid}), {west.name}@{west.address} "
               f"(pid {west.proc.pid})")
 
-        reg = Registry()
-        reg.connect(east.address).bind("A", Account(1000))
-        reg.connect(west.address).bind("B", Account(500))
+        reg = connect(east.address, west.address)
+        bind(reg.connect(east.address), "A", Account(1000))
+        bind(reg.connect(west.address), "B", Account(500))
         A, B = reg.locate("A"), reg.locate("B")
 
         # --- the paper's Fig. 9 transaction, now across processes ---------
@@ -99,9 +98,8 @@ def main() -> None:
         victim = subprocess.Popen([sys.executable, "-c", textwrap.dedent(f"""
             import os, sys
             sys.path.insert(0, {SRC!r})
-            from repro.core import Registry, Transaction
-            reg = Registry()
-            reg.connect({east.address!r})
+            from repro.dtm import Transaction, connect
+            reg = connect({east.address!r})
             t = Transaction(reg)
             a = t.accesses(reg.locate("A"), 1, 0, 1)
             t.begin()

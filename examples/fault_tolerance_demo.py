@@ -17,8 +17,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (AbortError, Mode, Registry, RemoteObjectFailure,
-                        Transaction, TransactionMonitor, access)
+from repro.core import TransactionMonitor
+from repro.dtm import (AbortError, Mode, Registry, RemoteObjectFailure,
+                       Transaction, access, bind)
 
 
 class Counter:
@@ -39,8 +40,8 @@ def demo_object_failure() -> None:
     print("=== 1. remote object failure (crash-stop) ===")
     reg = Registry()
     node = reg.add_node("n1")
-    ok = reg.bind("ok", Counter(), node)
-    doomed = reg.bind("doomed", Counter(), node)
+    ok = bind(node, "ok", Counter())
+    doomed = bind(node, "doomed", Counter())
 
     doomed.fail()   # crash-stop
 
@@ -63,7 +64,7 @@ def demo_client_crash() -> None:
     print("=== 2. client crash -> object self-rollback (§3.4) ===")
     reg = Registry()
     node = reg.add_node("n1")
-    shared = reg.bind("x", Counter(), node)
+    shared = bind(node, "x", Counter())
     monitor = TransactionMonitor(reg, timeout=0.5, poll_interval=0.05)
     monitor.start()
 

@@ -15,7 +15,7 @@ run over a *real* wire — node-server subprocesses, TCP RPCs, server-side
 import threading
 import time
 
-from repro.core import AbortError, Mode, Registry, Transaction, access
+from repro.dtm import AbortError, Mode, Registry, Transaction, access, bind
 
 
 class Account:
@@ -43,8 +43,8 @@ def main() -> None:
     reg = Registry()
     server1 = reg.add_node("server-1")
     server2 = reg.add_node("server-2")
-    reg.bind("A", Account(1000), server1)
-    reg.bind("B", Account(500), server2)
+    bind(server1, "A", Account(1000))
+    bind(server2, "B", Account(500))
 
     # --- the paper's Fig. 9 transaction ------------------------------------
     t = Transaction(reg)

@@ -22,9 +22,9 @@ including everything that happened while it was dead.
 import tempfile
 import time
 
-from repro.core import Registry, RemoteObjectFailure, Transaction
+from repro.dtm import (RemoteObjectFailure, Transaction, bind, connect,
+                       spawn_server)
 from repro.net.demo import Account
-from repro.net.spawn import spawn_server
 
 
 def txn_balance(reg, name):
@@ -53,15 +53,11 @@ def main() -> None:
     wal_dir = tempfile.mkdtemp(prefix="bank-wal-")
     with spawn_server("bank-primary", wal_dir=wal_dir) as primary, \
             spawn_server("bank-replica", wal_dir=wal_dir) as replica:
-        reg = Registry()
-        reg.connect(primary.address)
-        reg.connect(replica.address)
-        for node in reg.nodes:
-            if node.address == primary.address:
-                # ordered follower chain: the replica is seeded now and
-                # receives every committed write before the commit acks
-                node.bind("savings", Account(1000),
-                          followers=[replica.address])
+        reg = connect(primary.address, replica.address)
+        # ordered follower chain: the replica is seeded now and
+        # receives every committed write before the commit acks
+        bind(reg.connect(primary.address), "savings", Account(1000),
+             followers=[replica.address])
         print(f"  bound 'savings' on {primary.name}, "
               f"follower chain -> {replica.name}")
 

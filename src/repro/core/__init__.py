@@ -19,7 +19,7 @@ from .locks import GLOBAL_LOCK, LockTransaction, RWLock
 from .registry import Node, Registry, SharedObject
 from .sva import SvaTransaction
 from .tfa import TfaTransaction
-from .transaction import ObjectAccess, Transaction, TxProxy
+from .transaction import CommuteAccess, ObjectAccess, Transaction, TxProxy
 from .versioning import VersionHeader, dispense_versions
 
 __all__ = [
@@ -28,6 +28,6 @@ __all__ = [
     "TransactionError", "access", "CopyBuffer", "LogBuffer", "StateHolder",
     "Executor", "Task", "TransactionMonitor", "GLOBAL_LOCK",
     "LockTransaction", "RWLock", "Node", "Registry", "SharedObject",
-    "SvaTransaction", "TfaTransaction", "ObjectAccess", "Transaction",
-    "TxProxy", "VersionHeader", "dispense_versions",
+    "SvaTransaction", "TfaTransaction", "CommuteAccess", "ObjectAccess",
+    "Transaction", "TxProxy", "VersionHeader", "dispense_versions",
 ]

@@ -8,10 +8,23 @@ from __future__ import annotations
 
 import enum
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
 INF = math.inf
+
+_WARNED: set = set()
+
+
+def warn_deprecated(key: str, msg: str) -> None:
+    """Emit ``msg`` as a DeprecationWarning exactly once per ``key`` per
+    process (the API-migration contract: legacy forms keep working but
+    say so exactly once)."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(msg, DeprecationWarning, stacklevel=3)
 
 
 class Mode(enum.Enum):
@@ -22,7 +35,7 @@ class Mode(enum.Enum):
     UPDATE = "update"  # may both view and modify state
 
 
-def access(mode: Mode) -> Callable:
+def access(mode: Mode, commutes: Optional[str] = None) -> Callable:
     """Method decorator declaring the access mode of a shared-object method.
 
     Mirrors the ``@Access(Mode.READ)`` annotation of Atomic RMI 2 (Fig. 7)::
@@ -30,13 +43,46 @@ def access(mode: Mode) -> Callable:
         class Account:
             @access(Mode.READ)
             def balance(self): ...
+
+    ``commutes`` names a *commuting method class* (DESIGN.md §12): every
+    method sharing the same class label commutes with every other (including
+    itself), so invocations restricted to one class may skip version-gated
+    dispensing and merge as deltas at the home node. Only ``Mode.WRITE``
+    methods may commute — a commuting operation must never view state, or
+    the merge order would be observable.
     """
 
     def deco(fn: Callable) -> Callable:
         fn.__access_mode__ = mode
+        if commutes is not None:
+            if mode is not Mode.WRITE:
+                raise TypeError(
+                    f"commutes={commutes!r} requires Mode.WRITE: a commuting "
+                    f"method must be write-only (got {mode})")
+            fn.__access_commutes__ = commutes
         return fn
 
     return deco
+
+
+#: Per-class cache of {method name: (Mode, commute class | None)}, built
+#: once on first access instead of re-resolving ``getattr(type(obj), name)``
+#: in the hot dispatch path. Unannotated methods are simply absent.
+_CLASS_ACCESS_MAPS: Dict[type, Dict[str, tuple]] = {}
+
+
+def class_access_map(cls: type) -> Dict[str, tuple]:
+    """The cached ``{name: (mode, commute_class)}`` map of ``cls``."""
+    m = _CLASS_ACCESS_MAPS.get(cls)
+    if m is None:
+        m = {}
+        for name in dir(cls):
+            fn = getattr(cls, name, None)
+            mode = getattr(fn, "__access_mode__", None)
+            if mode is not None:
+                m[name] = (mode, getattr(fn, "__access_commutes__", None))
+        _CLASS_ACCESS_MAPS[cls] = m
+    return m
 
 
 def method_mode(obj: Any, name: str) -> Mode:
@@ -45,15 +91,27 @@ def method_mode(obj: Any, name: str) -> Mode:
     Raises ``TypeError`` for unannotated methods: in the CF model every
     remotely callable operation must be classified (paper §2.5).
     """
-    fn = getattr(type(obj), name, None)
-    if fn is None:
-        raise AttributeError(f"{type(obj).__name__} has no method {name!r}")
-    mode = getattr(fn, "__access_mode__", None)
-    if mode is None:
+    ent = class_access_map(type(obj)).get(name)
+    if ent is None:
+        if getattr(type(obj), name, None) is None:
+            raise AttributeError(
+                f"{type(obj).__name__} has no method {name!r}")
         raise TypeError(
             f"method {type(obj).__name__}.{name} lacks an @access(Mode.*) annotation"
         )
-    return mode
+    return ent[0]
+
+
+def method_commutes(obj: Any, name: str) -> Optional[str]:
+    """The commute-class label of ``obj.name``, or ``None``."""
+    ent = class_access_map(type(obj)).get(name)
+    return ent[1] if ent is not None else None
+
+
+def commute_classes(obj: Any) -> Dict[str, str]:
+    """All declared ``{method name: commute class}`` entries of ``obj``."""
+    return {n: c for n, (m, c) in class_access_map(type(obj)).items()
+            if c is not None}
 
 
 @dataclass
@@ -62,11 +120,17 @@ class Suprema:
 
     ``inf`` means "unknown"; the algorithm stays correct but releases the
     object only at commit/abort instead of early.
+
+    ``commutes`` marks a *commute-restricted* declaration (DESIGN.md §12):
+    the transaction promises to touch the object only through methods of
+    the named commuting class. Such accesses are write-only (``writes``
+    bounds them) and may skip version-gated dispensing entirely.
     """
 
     reads: float = INF
     writes: float = INF
     updates: float = INF
+    commutes: Optional[str] = None
 
     @property
     def total(self) -> float:

@@ -16,7 +16,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, Iterable, Optional
 
-from .api import Mode, RemoteObjectFailure, method_mode
+from .api import (IllegalState, Mode, RemoteObjectFailure, commute_classes,
+                  method_commutes, method_mode, warn_deprecated)
 from .buffers import StateHolder
 from .executor import Executor
 from .versioning import VersionHeader
@@ -31,6 +32,19 @@ class Node:
         self.network_delay = network_delay
         self.executor = Executor(name=f"exec-{name}", workers=executor_workers)
         self.alive = True
+        self.registry: Optional["Registry"] = None   # set by Registry.add_node
+
+    def bind(self, name: str, obj: Any, *, followers: tuple = (),
+             wal: Any = None, lease: Any = None) -> "SharedObject":
+        """Publish ``obj`` under ``name`` on this node — the unified
+        keyword-only publish signature (DESIGN.md §12), same shape as
+        ``RemoteNode.bind``. The in-process node has no replication or
+        durability plane, so only the defaults are accepted."""
+        if self.registry is None:
+            raise IllegalState(
+                f"node {self.name!r} is not attached to a registry")
+        return self.registry.bind(name, obj, node=self, followers=followers,
+                                  wal=wal, lease=lease)
 
     def simulate_network(self, from_node: Optional["Node"]) -> None:
         """Sleep for the configured one-way latency on cross-node calls."""
@@ -79,6 +93,14 @@ class SharedObject:
     def mode_of(self, method: str) -> Mode:
         return method_mode(self.holder.obj, method)
 
+    def commute_of(self, method: str) -> Optional[str]:
+        """Declared commute-class label of ``method``, or None (§12)."""
+        return method_commutes(self.holder.obj, method)
+
+    def commute_classes(self) -> Dict[str, str]:
+        """All ``{method: commute class}`` declarations of this object."""
+        return commute_classes(self.holder.obj)
+
     def check_reachable(self) -> None:
         if self.failed or not self.node.alive:
             raise RemoteObjectFailure(f"remote object {self.name!r} is unreachable")
@@ -111,7 +133,9 @@ class SharedObject:
         (``repro.net.remote.RemoteSharedObject``) override this to return an
         access record whose state operations are RPCs to the home node.
         """
-        from .transaction import ObjectAccess
+        from .transaction import CommuteAccess, ObjectAccess
+        if getattr(sup, "commutes", None) is not None:
+            return CommuteAccess(txn, self, sup)
         return ObjectAccess(txn, self, sup)
 
     def __repr__(self) -> str:  # pragma: no cover
@@ -132,6 +156,7 @@ class Registry:
             if name in self._nodes:
                 raise ValueError(f"node {name!r} already exists")
             node = Node(name, **kw)
+            node.registry = self
             self._nodes[name] = node
             return node
 
@@ -144,7 +169,30 @@ class Registry:
         with self._lock:
             return list(self._nodes.values())
 
-    def bind(self, name: str, obj: Any, node: Node) -> SharedObject:
+    def bind(self, name: str, obj: Any, *args: Any,
+             node: Optional[Node] = None, followers: tuple = (),
+             wal: Any = None, lease: Any = None) -> SharedObject:
+        """Publish ``obj`` under ``name`` on ``node``.
+
+        The unified publish signature (DESIGN.md §12): keyword-only
+        ``followers=()``, ``wal=None``, ``lease=None`` mirror the node
+        servers' ``bind`` — the in-process registry has no replication or
+        durability plane, so it accepts only their defaults. The legacy
+        positional ``bind(name, obj, node)`` form still works but warns
+        once; pass ``node=`` instead."""
+        if args:
+            warn_deprecated(
+                "Registry.bind:positional",
+                "Registry.bind(name, obj, node) with positional node is "
+                "deprecated; use bind(name, obj, node=...) — the unified "
+                "keyword-only publish signature")
+            node = args[0]
+        if node is None:
+            raise TypeError("Registry.bind requires node=")
+        if followers or wal is not None or lease is not None:
+            raise ValueError(
+                "followers/wal/lease are node-server publish options; the "
+                "in-process registry supports only their defaults")
         with self._lock:
             if name in self._objects:
                 raise ValueError(f"object {name!r} already bound")

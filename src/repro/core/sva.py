@@ -97,6 +97,12 @@ class SvaTransaction:
     def updates(self, obj, max_updates: float = INF) -> _SvaProxy:
         return self.accesses(obj, max_updates)
 
+    def commutes(self, obj, max_ops: float = INF, cls=None) -> _SvaProxy:
+        """API-compat alias: SVA has no commute groups — a commute-declared
+        access degrades to an ordinary bounded access, so benchmarks can
+        swap algorithms without changing their preamble."""
+        return self.accesses(obj, max_ops)
+
     def begin(self) -> None:
         if self._started:
             raise IllegalState("transaction already started")

@@ -529,6 +529,112 @@ class ObjectAccess:
         """Transport hook: the transaction terminated on every object."""
 
 
+class CommuteAccess(ObjectAccess):
+    """In-process access restricted to one commuting method class
+    (DESIGN.md §12).
+
+    While the object's commute group is *active* (``cg_active``), this
+    access holds the group's shared private version: its deltas live only
+    in the log buffer until terminate, where they fold into live state
+    under the per-class merge lock — no checkpoint, no early release, no
+    version-gate wait. If the group could not be joined (another class
+    active, snapped group, chain not quiescent) the access falls back to
+    exact dispensing and behaves as a plain §2.8.4 log-write access.
+    """
+
+    __slots__ = ("cg_active", "_cg_done", "_cg_aborted")
+
+    def __init__(self, txn: "Transaction", shared: SharedObject,
+                 sup: Suprema):
+        super().__init__(txn, shared, sup)
+        self.cg_active = False
+        self._cg_done = False
+        self._cg_aborted = False
+
+    @property
+    def commute_cls(self) -> str:
+        return self.sup.commutes
+
+    def record_commute(self, method: str, args: tuple, kwargs: dict) -> None:
+        """Buffer one commuting delta (applied at the fold, never before)."""
+        self.log.record(method, args, kwargs)
+
+    def join_group_locked(self) -> None:
+        """Join (or form) the object's commute group — called by
+        :func:`dispense_for` while the header lock is held, inside the 2PL
+        window. Falls back to exact dispensing when joining is refused."""
+        pv = self.shared.header.commute_join(self.commute_cls)
+        if pv:
+            self.pv = pv
+            self.cg_active = True
+        else:
+            self.pv = self.shared.header.dispense()
+
+    # While the group is active the access never touches live state before
+    # the fold: no checkpoint to take, nothing to release or validate.
+    def ensure_checkpoint(self) -> None:
+        if not self.cg_active:
+            super().ensure_checkpoint()
+
+    def commit_prep(self) -> None:
+        if not self.cg_active:
+            super().commit_prep()
+
+    def release(self) -> None:
+        # An early lv advance would open exact successors' gates before
+        # the group's folds finished — release rides the dissolve instead.
+        if not self.cg_active:
+            super().release()
+
+    def wait_termination(self, timeout: Optional[float]) -> bool:
+        if self.cg_active:
+            return False   # ltv == cg_pv - 1 by construction: never blocks
+        return super().wait_termination(timeout)
+
+    def valid(self) -> bool:
+        return True if self.cg_active else super().valid()
+
+    def valid_commit(self) -> bool:
+        return True if self.cg_active else super().valid_commit()
+
+    def rollback(self) -> None:
+        if not self.cg_active:
+            super().rollback()
+            return
+        # Undelivered deltas are simply discarded: live state was never
+        # touched, so there is no restore and no instance bump (§12 —
+        # which is also why aborting a commute member dooms nobody).
+        self._cg_aborted = True
+        self.log.entries.clear()
+
+    def terminate(self) -> None:
+        if not self.cg_active:
+            super().terminate()
+            return
+        if self._cg_done:
+            return
+        self._cg_done = True
+        h = self.shared.header
+        if not self._cg_aborted and len(self.log):
+            with h.commute_merge_lock(self.commute_cls):
+                self.log.apply_to(self.shared.holder.obj)
+                self.modified = True
+        else:
+            self.log.entries.clear()
+        self.shared.clear_holder(self.txn)
+        self.terminated = True
+        h.commute_leave()
+        if _txtrace.enabled:
+            self._obs_instant("terminate", detail=self.shared.name)
+
+    def abandon(self) -> None:
+        if not self.cg_active:
+            super().abandon()
+            return
+        self.rollback()
+        self.terminate()
+
+
 def dispense_for(order: List[ObjectAccess]) -> None:
     """Atomically dispense private versions for a (possibly multi-transport)
     access set (paper §2.10.2).
@@ -548,6 +654,30 @@ def dispense_for(order: List[ObjectAccess]) -> None:
         if a.dispense_domain is not None:
             remote.setdefault(a.dispense_domain, []).append(a)
 
+    # Commute-only fast path (DESIGN.md §12): a transaction touching ONE
+    # object on ONE remote domain through a commute-declared access needs
+    # no start-time coordination at all — the dispense RPC is skipped and
+    # the home node lazily joins the commute group at the first delta (or
+    # at commit). If the server must fall back to exact dispensing there,
+    # the late join is equivalent to a late start on a single node. The
+    # single-OBJECT bound is load-bearing: a transaction that late-joins
+    # two objects acquires their versions non-atomically, so its order
+    # against a concurrent start-time-dispensed transaction can invert
+    # between the objects — a circular wait 2PL start-time dispensing
+    # exists to rule out (found by the commute seed sweep). Multi-object
+    # commute transactions dispense at start like everyone else; their
+    # group joins happen inside the 2PL window (dispense_batch's commute
+    # map / join_group_locked below), which keeps cross-object order
+    # consistent while still merging their deltas.
+    if not local and len(remote) == 1:
+        (accs,) = remote.values()
+        if len(accs) == 1 and all(
+                getattr(a, "can_defer_start", False) for a in accs):
+            accs[0].prepare_start()
+            for a in accs:
+                a.defer_start()
+            return
+
     # Liveness registration first, before any version lock is held —
     # presence setup may block in a TCP connect.
     for accs in remote.values():
@@ -566,7 +696,11 @@ def dispense_for(order: List[ObjectAccess]) -> None:
             remote_domains[0][0].dispense_many(remote_domains)
             dispensed_remote = True
         for a in local:
-            a.pv = a.shared.header.dispense()
+            join = getattr(a, "join_group_locked", None)
+            if join is not None:
+                join()       # commute group join, exact fallback inside
+            else:
+                a.pv = a.shared.header.dispense()
     finally:
         for h in reversed(locked_local):
             h.lock.release()
@@ -682,6 +816,29 @@ class Transaction:
                  max_writes: float = INF, max_updates: float = INF) -> TxProxy:
         return self._declare(obj, Suprema(max_reads, max_writes, max_updates))
 
+    def commutes(self, obj: Union[SharedObject, str], max_ops: float = INF,
+                 cls: Optional[str] = None) -> TxProxy:
+        """Declare a *commute-restricted* access (DESIGN.md §12): the
+        transaction promises to touch ``obj`` only through methods of the
+        commuting class ``cls`` (inferred when the object declares exactly
+        one). Such invocations skip version-gated dispensing and merge as
+        deltas at the home node."""
+        shared = self._resolve(obj)
+        if cls is None:
+            classes = sorted(set(self._commute_classes(shared).values()))
+            if len(classes) != 1:
+                raise IllegalState(
+                    f"object {shared.name!r} declares {len(classes)} commute "
+                    f"classes; pass cls= explicitly")
+            cls = classes[0]
+        return self._declare(
+            shared, Suprema(reads=0, writes=max_ops, updates=0, commutes=cls))
+
+    @staticmethod
+    def _commute_classes(shared: SharedObject) -> Dict[str, str]:
+        fn = getattr(shared, "commute_classes", None)
+        return fn() if fn is not None else {}
+
     # ------------------------------------------------------------------ #
     # Start (§2.8.1)                                                     #
     # ------------------------------------------------------------------ #
@@ -752,6 +909,8 @@ class Transaction:
             raise IllegalState("transaction not started; call begin()/start()")
         shared.check_reachable()
         a = self._accesses[shared]
+        if a.sup.commutes is not None:
+            return self._commute(a, shared, method, args, kwargs)
         mode = shared.mode_of(method)
         self._check_supremum(a, mode)
         try:
@@ -772,6 +931,25 @@ class Transaction:
         # not yet released) counts for the §3.4 failure detector
         a.note_contact()
         return v
+
+    # -- commute-restricted invocation (DESIGN.md §12) -----------------------
+    def _commute(self, a: ObjectAccess, shared: SharedObject, method: str,
+                 args: tuple, kwargs: dict) -> None:
+        """Buffer one commuting delta. Commute methods are write-only by
+        declaration (`@access(Mode.WRITE, commutes=...)`), so the value is
+        always ``None``; only methods of the DECLARED class are legal —
+        anything else would break the no-coordination promise."""
+        ccls = getattr(shared, "commute_of", lambda m: None)(method)
+        if ccls != a.sup.commutes:
+            raise IllegalState(
+                f"method {shared.name}.{method} is not in this access's "
+                f"declared commute class {a.sup.commutes!r} (got {ccls!r})")
+        self._check_supremum(a, Mode.WRITE)
+        a.record_commute(method, args, kwargs)
+        a.wc += 1
+        self.stats.writes += 1
+        a.note_contact()
+        return None
 
     def _check_supremum(self, a: ObjectAccess, mode: Mode) -> None:
         if a.count_for(mode) + 1 > a.sup_for(mode):
@@ -904,8 +1082,9 @@ class Transaction:
         (recorded client-side for free, §2.8.4)."""
         a = self._accesses[shared]
         if (a.dispense_domain is None or a.released
-                or a.release_task is not None or a.sup.read_only):
-            return 1, False
+                or a.release_task is not None or a.sup.read_only
+                or a.sup.commutes is not None):
+            return 1, False   # commute deltas are client-side-free already
         opening = not a.holds_access
         first_mode = shared.mode_of(ops[i][0])
         if opening and first_mode is Mode.WRITE:

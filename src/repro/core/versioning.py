@@ -94,6 +94,7 @@ class VersionHeader:
         "_access_waiters", "_term_waiters", "_listeners", "_restores",
         "cond_evals", "wakeups", "owner_node",
         "obs_tracer", "obs_metrics", "obs_clock", "_handoff_mark",
+        "cg_pv", "cg_class", "cg_members", "cg_snapped", "_cg_merge_locks",
     )
 
     def __init__(self, owner_node: Optional[object] = None):
@@ -129,12 +130,86 @@ class VersionHeader:
         self.obs_metrics = None
         self.obs_clock = None
         self._handoff_mark: Optional[tuple] = None
+        # Commute group (DESIGN.md §12): while active, every member of ONE
+        # commuting method class shares the single private version
+        # ``cg_pv`` — their deltas merge under the class's merge lock
+        # instead of serializing on the version chain. ``cg_snapped``
+        # flips the moment a non-commuting access dispenses past the
+        # group: no further joins, the group drains and dissolves.
+        self.cg_pv: int = 0
+        self.cg_class: Optional[str] = None
+        self.cg_members: int = 0
+        self.cg_snapped: bool = False
+        self._cg_merge_locks: Optional[dict] = None
 
     # -- version dispensing -------------------------------------------------
     def dispense(self) -> int:
         """Take the next private version. Caller must hold ``lock``."""
+        if self.cg_class is not None:
+            # Snap-back (§12): an exact access is entering the chain.
+            # The group stops admitting members; its shared version
+            # ``cg_pv`` precedes this pv, so full OptSVA ordering gates
+            # the newcomer until the last member terminates the group.
+            self.cg_snapped = True
         self.gv += 1
         return self.gv
+
+    # -- commute groups (DESIGN.md §12) -------------------------------------
+    def commute_join(self, cls: str) -> int:
+        """Join (or form) the commute group for method class ``cls``.
+        Caller must hold ``lock``. Returns the group's shared private
+        version, or 0 if the object must fall back to exact dispensing
+        (group of another class, snapped group, or chain not quiescent).
+
+        A group only FORMS at full quiescence (``gv == lv == ltv``): the
+        shared version then satisfies both the access and termination
+        conditions immediately (``cg_pv - 1 == lv == ltv``), and ``ltv``
+        stays at ``cg_pv - 1`` while the group is active — so any exact
+        successor (pv > cg_pv) gates behind the group until it dissolves.
+        """
+        if self.cg_class is not None:
+            if self.cg_class == cls and not self.cg_snapped:
+                self.cg_members += 1
+                return self.cg_pv
+            return 0
+        if not (self.gv == self.lv == self.ltv):
+            return 0
+        self.gv += 1
+        self.cg_pv = self.gv
+        self.cg_class = cls
+        self.cg_members = 1
+        self.cg_snapped = False
+        return self.cg_pv
+
+    def commute_leave(self) -> None:
+        """One member finished (fold applied, or abort discarded its
+        deltas). When the last member leaves, the group dissolves:
+        ``terminate_to(cg_pv)`` advances the chain so gated exact
+        successors proceed. Call WITHOUT holding ``lock``."""
+        with self.lock:
+            self.cg_members -= 1
+            if self.cg_members > 0:
+                return
+            pv = self.cg_pv
+            self.cg_pv = 0
+            self.cg_class = None
+            self.cg_snapped = False
+        # Outside the lock, like every counter advance. A racing fresh
+        # formation cannot slip in between: forming requires
+        # ``gv == lv == ltv``, which cannot hold until this terminate_to
+        # lands (gv is already past lv/ltv while the group exists).
+        self.terminate_to(pv)
+
+    def commute_merge_lock(self, cls: str) -> threading.Lock:
+        """The per-method-class merge lock of this object (lazily made)."""
+        with self.lock:
+            locks = self._cg_merge_locks
+            if locks is None:
+                locks = self._cg_merge_locks = {}
+            lk = locks.get(cls)
+            if lk is None:
+                lk = locks[cls] = threading.Lock()
+            return lk
 
     # -- waiter parking -----------------------------------------------------
     def park(self, kind: str, pv: int, callback: Callable[[], None]) -> bool:

@@ -39,13 +39,28 @@ Trust model: frames carry pickles, so a node server must only be exposed to
 trusted peers (localhost or a private cluster network) — exactly the
 deployment model of Java RMI serialization in the source system.
 """
+from repro.core.api import warn_deprecated
+
 from .client import NodeClient
 from .remote import RemoteNode, RemoteObjectAccess, RemoteSharedObject
 from .server import NodeCore, NodeServer
 from .simnet import SimNet, SimNode, SimTransport, build_simnet
-from .spawn import ServerHandle, spawn_server
+from .spawn import ServerHandle
 from .transport import CLIENT_ID, Transport
 from .wire import ConnectionClosed, WireError
+
+
+def __getattr__(name: str):
+    # Legacy public import path (pre-§12 API): kept working, warns once,
+    # points at the canonical surface.
+    if name == "spawn_server":
+        warn_deprecated(
+            "import:repro.net.spawn_server",
+            "importing spawn_server from repro.net is deprecated; use "
+            "repro.dtm.spawn_server (the unified public API surface)")
+        from .spawn import spawn_server
+        return spawn_server
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "CLIENT_ID", "NodeClient", "RemoteNode", "RemoteObjectAccess",

@@ -83,6 +83,41 @@ class LedgerAccount(Account):
         return c
 
 
+class HotAccount(Account):
+    """Account whose deposits form a commuting method class (DESIGN.md §12).
+
+    ``deposit`` invocations from commute-restricted transactions skip
+    version-gated dispensing and merge as deltas at the home node; exact
+    accesses (``balance``, ``withdraw``) snap the object back to full
+    OptSVA ordering."""
+
+    @access(Mode.WRITE, commutes="deposit")
+    def deposit(self, v: int) -> None:
+        self.bal += v
+
+    def __tx_snapshot__(self) -> "HotAccount":
+        return HotAccount(self.bal)
+
+
+class HotLedgerAccount(LedgerAccount):
+    """LedgerAccount whose deposits form a commuting method class (§12).
+
+    The seed-sweep fuzzer's commute mode binds these: commute-restricted
+    transfers ship both deposit legs as mergeable deltas (one positive,
+    one negative — the sum is conserved even when the deltas fold under
+    the merge lock), while marks, audits, and exact transfers keep the
+    full version-gated path and force snap-backs mid-sweep."""
+
+    @access(Mode.WRITE, commutes="deposit")
+    def deposit(self, v: int) -> None:
+        self.bal += v
+
+    def __tx_snapshot__(self) -> "HotLedgerAccount":
+        c = HotLedgerAccount(self.bal)
+        c.marks = list(self.marks)
+        return c
+
+
 class SlowAccount(Account):
     """Account whose operations take ``op_time`` seconds at the home node —
     makes CF delegation visible in timings."""

@@ -44,7 +44,7 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict, List, Optional
 
-from repro.core.api import RemoteObjectFailure, Suprema
+from repro.core.api import RemoteObjectFailure, Suprema, warn_deprecated
 from repro.core.transaction import Completed, ObjectAccess
 
 from .client import Future, NodeClient
@@ -189,27 +189,52 @@ class RemoteNode:
         info = self.client.call("list_bindings")
         self.name = info["node"]
         followers = info.get("followers", {})
+        commutes = info.get("commutes", {})
         out = []
         for n, modes in info["bindings"].items():
             shared = RemoteSharedObject(n, self)
             shared._modes.update(modes)   # no mode_of round trips later
+            shared._commutes = dict(commutes.get(n, {}))
             shared.followers = list(followers.get(n, ()))
             out.append(shared)
         return out
 
-    def bind(self, name: str, obj: Any,
-             followers: List[str] = ()) -> "RemoteSharedObject":
+    def bind(self, name: str, obj: Any, *args: Any,
+             followers: List[str] = (), wal: Any = None,
+             lease: Any = None) -> "RemoteSharedObject":
         """Bind ``obj`` under ``name`` on the remote server (ships the
         initial object state once; it lives server-side thereafter).
-        ``followers`` configures the object's replica chain (DESIGN.md §8):
-        peer node addresses, in promotion order — the server seeds each
-        replica and forwards committed state along the chain. When this
-        node was obtained via ``Registry.connect``, the new binding is
-        registered there too, so ``locate`` sees it without re-connecting."""
-        modes = self.client.call("bind", name=name, obj=obj,
-                                 followers=list(followers))
+
+        The unified publish signature (DESIGN.md §12): keyword-only
+        ``followers=()`` configures the object's replica chain (peer node
+        addresses, in promotion order — the server seeds each replica and
+        forwards committed state along the chain); ``wal``/``lease`` are
+        node-level planes on the server, so only their defaults are
+        accepted here. The legacy positional ``bind(name, obj, followers)``
+        form still works but warns once. When this node was obtained via
+        ``Registry.connect``, the new binding is registered there too, so
+        ``locate`` sees it without re-connecting."""
+        if args:
+            warn_deprecated(
+                "RemoteNode.bind:positional",
+                "RemoteNode.bind(name, obj, followers) with positional "
+                "followers is deprecated; use bind(name, obj, "
+                "followers=...) — the unified keyword-only publish "
+                "signature")
+            followers = args[0]
+        if wal is not None or lease is not None:
+            raise ValueError(
+                "wal/lease are configured node-wide on the server; "
+                "RemoteNode.bind accepts only their defaults")
+        res = self.client.call("bind", name=name, obj=obj,
+                               followers=list(followers))
+        if isinstance(res, dict) and "modes" in res:
+            modes, commutes = res["modes"], res.get("commutes", {})
+        else:             # legacy reply shape: the bare modes dict
+            modes, commutes = res, {}
         shared = RemoteSharedObject(name, self)
         shared._modes.update(modes or {})
+        shared._commutes = dict(commutes or {})
         shared.followers = list(followers)
         if self.registry is not None:
             self.registry.register_remote(shared)
@@ -240,6 +265,9 @@ class RemoteSharedObject:
         self.header = RemoteHeader(self)
         self.failed = False
         self._modes: Dict[str, Any] = {}
+        #: {method: commute class} as declared at the home node (§12);
+        #: None until fetched (bind/list_bindings ship it for free).
+        self._commutes: Optional[Dict[str, str]] = None
         #: replica chain (DESIGN.md §8): peer addresses in promotion order.
         self.followers: List[str] = []
 
@@ -248,6 +276,8 @@ class RemoteSharedObject:
         return self.node.client
 
     def make_access(self, txn: object, sup: Suprema) -> "RemoteObjectAccess":
+        if getattr(sup, "commutes", None) is not None:
+            return RemoteCommuteAccess(txn, self, sup)
         return RemoteObjectAccess(txn, self, sup)
 
     def mode_of(self, method: str):
@@ -256,6 +286,17 @@ class RemoteSharedObject:
             mode = self.client.call("mode_of", name=self.name, method=method)
             self._modes[method] = mode
         return mode
+
+    def commute_of(self, method: str) -> Optional[str]:
+        """Declared commute-class label of ``method``, or None (§12)."""
+        return self.commute_classes().get(method)
+
+    def commute_classes(self) -> Dict[str, str]:
+        """All ``{method: commute class}`` declarations of this object."""
+        if self._commutes is None:
+            self._commutes = dict(
+                self.client.call("commute_classes", name=self.name))
+        return self._commutes
 
     def check_reachable(self) -> None:
         if self.failed or not self.client.alive or not self.node.alive:
@@ -475,18 +516,32 @@ class RemoteObjectAccess(ObjectAccess):
             for a in ro_accs:
                 a.client.task_wait(uid, a.shared.name)   # pre-register
             metas.append((accs, ro_accs))
+        def commute_map(accs):
+            return {a.shared.name: a.sup.commutes for a in accs
+                    if getattr(a.sup, "commutes", None) is not None}
+
         head_accs, head_ro = metas[0]
-        chain = [{"address": accs[0].shared.node.address,
-                  "names": [a.shared.name for a in accs],
-                  "ro_names": [a.shared.name for a in ro_accs]}
-                 for accs, ro_accs in metas[1:]]
+        chain = []
+        for accs, ro_accs in metas[1:]:
+            ent = {"address": accs[0].shared.node.address,
+                   "names": [a.shared.name for a in accs],
+                   "ro_names": [a.shared.name for a in ro_accs]}
+            cm = commute_map(accs)
+            if cm:
+                ent["commute"] = cm
+            chain.append(ent)
+        head_kw = {}
+        head_cm = commute_map(head_accs)
+        if head_cm:   # non-commute requests stay byte-identical on the wire
+            head_kw["commute"] = head_cm
         try:
             res = self.client.call(
                 "dispense_batch", txn=uid, client_id=self.client.client_id,
                 names=[a.shared.name for a in head_accs],
                 ro_names=[a.shared.name for a in head_ro], kind=kind,
                 chain=chain,
-                affinity=getattr(self.client, "affinity", None) or "")
+                affinity=getattr(self.client, "affinity", None) or "",
+                **head_kw)
         except ObjectMovedError as e:
             # Drop the start-time liveness registrations on the ORIGINAL
             # transports BEFORE any candidate re-pointing: end_txn must
@@ -863,6 +918,23 @@ class RemoteObjectAccess(ObjectAccess):
             entries = list(a.log.entries)
             a.log.entries.clear()
             items.append((a.shared.name, entries))
+        # Commute-restricted accesses (§12) may have deferred dispensing
+        # entirely: ship what the server needs to lazily join/dispense at
+        # commit time. Absent for ordinary commits (byte-identical wire).
+        extra: Dict[str, Any] = {}
+        commute = {a.shared.name: a.sup.commutes for a in accs
+                   if getattr(a.sup, "commutes", None) is not None}
+        if commute:
+            extra = {"client_id": self.client.client_id, "commute": commute}
+            # Torn-delta fence: when one-way flushes preceded this commit,
+            # ship the total delta count — the server refuses to fold a
+            # partial set (an illusory-crash expiry may have discarded the
+            # flushed prefix before the lazy commit re-created the session).
+            counts = {a.shared.name: a.flushed + len(e)
+                      for a, (_n, e) in zip(accs, items)
+                      if getattr(a, "flushed", 0)}
+            if counts:
+                extra["commute_counts"] = counts
 
         def epilogue(res: Dict[str, Any]):
             ok = not res["bad"]
@@ -879,7 +951,7 @@ class RemoteObjectAccess(ObjectAccess):
             return res["blocked"], ok
 
         fut = self.client.call_async("commit_solo", txn=uid, items=items,
-                                     timeout=timeout)
+                                     timeout=timeout, **extra)
 
         def recover(err: BaseException):
             """Home node died mid-RPC: same indeterminacy as a dead chain
@@ -1053,3 +1125,67 @@ class RemoteObjectAccess(ObjectAccess):
 
     def finish_session(self) -> None:
         self.client.finish_txn(self.txn_uid)
+
+
+#: Client-side delta buffer high-water mark (§12): a commute-restricted
+#: access ships its buffered deltas as one ``commute_delta`` one-way per
+#: this many entries; the remainder rides the commit RPC. Low enough to
+#: bound client memory on long hot-key transactions, high enough that
+#: short ones (< DELTA_FLUSH deltas) cost zero extra messages.
+DELTA_FLUSH = 8
+
+
+class RemoteCommuteAccess(RemoteObjectAccess):
+    """Commute-restricted access record for a remotely homed object (§12).
+
+    The transaction promised to touch the object only through methods of
+    one commuting class, so nothing here needs synchronization:
+
+    - **deferred dispensing**: when the whole access set is commute-only
+      on one remote node, ``dispense_for`` skips the dispense RPC entirely
+      (``defer_start``); the home node lazily joins the object's commute
+      group — or falls back to an exact version — at the first delta
+      one-way or at commit, whichever arrives first;
+    - **mergeable deltas**: invocations are recorded locally (a §2.8.4
+      log) and ship as pipelined ``commute_delta`` one-ways past
+      ``DELTA_FLUSH`` entries — FIFO on the same mux connection as the
+      commit RPC that follows, so the server always folds a complete
+      delta set. One-ways are only used on the deferred (single-domain)
+      path: a multi-domain commit forwards its items server-to-server,
+      which would race client-issued one-ways;
+    - whether the server *actually* joined a commute group or fell back
+      to exact dispensing (snap-back, §12) is invisible here: commute
+      methods are write-only, so there is no value to return either way.
+    """
+
+    __slots__ = ("deferred_start", "flushed")
+
+    #: dispense_for may skip the dispense RPC for an all-commute
+    #: single-remote-domain access set (§12 deferred start).
+    can_defer_start = True
+
+    def __init__(self, *args: Any, **kwargs: Any):
+        super().__init__(*args, **kwargs)
+        self.deferred_start = False
+        self.flushed = 0
+
+    @property
+    def commute_cls(self) -> str:
+        return self.sup.commutes
+
+    def defer_start(self) -> None:
+        """Skip dispensing: the home node joins/dispenses lazily."""
+        self.deferred_start = True
+        self.pv = 0
+
+    def record_commute(self, method: str, args: tuple, kwargs: dict) -> None:
+        self.log.record(method, args, kwargs)
+        if self.deferred_start and len(self.log.entries) >= DELTA_FLUSH:
+            entries = list(self.log.entries)
+            self.log.entries.clear()
+            self.flushed += len(entries)
+            self.client.notify(
+                "commute_delta", txn=self.txn_uid,
+                client_id=self.client.client_id, name=self.shared.name,
+                cls=self.commute_cls, entries=entries)
+            self.modified = True

@@ -15,6 +15,13 @@ state* is what ships — direct ``txn_call`` modifications are covered too):
 * **drop** (``repl_drop``): sent on abort/expiry — the tentative is
   discarded.
 
+Commute-group members (§12) keep the same shape with one twist: their
+fold is deferred past the commit decision, so the step-3 tentative ships
+the *delta* (the buffered entry list, ``DELTA_MAGIC``-prefixed) instead
+of a resulting-state snapshot, and the follower folds it into its
+committed snapshot at resolution time. The tentative-before-decision
+invariant therefore covers commute commits too.
+
 The chained commit decision (tentpole part 1) additionally records a
 per-transaction commit/abort *decision ledger* at followers
 (``repl_decision`` / first-writer-wins doom), which is what makes a
@@ -41,6 +48,7 @@ import threading
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.net.wal import encode_delta, fold_payload
 from repro.obs import txtrace as _txtrace
 
 log = logging.getLogger("repro.net.replication")
@@ -192,6 +200,32 @@ class ReplicationManager:
             self._notify(f, "repl_apply", name=name, txn=txn, epoch=epoch,
                          seq=seq, payload=payload, head=head)
 
+    def on_commute_prep(self, txn: str, name: str, entries: List[tuple],
+                        seq: int, origin: Optional[str]) -> None:
+        """Tentative replication for a commute-group member (§12). The
+        fold is deferred past the commit decision (it runs at terminate,
+        under the merge lock), so what ships at step 3 is the *delta* —
+        the member's buffered entry list, marked by :data:`DELTA_MAGIC`.
+        Followers fold it into their committed snapshot on final/decision
+        instead of overwriting (:meth:`_apply`), which keeps the §8
+        invariant — every tentative is in flight before any decision
+        exists — true for commute commits too: a primary crashing between
+        decision and fold no longer takes the only copy of the deltas
+        with it while the promoted follower acks the decide."""
+        fl = self.followers_of(name)
+        if not fl and self._wal is None:
+            return
+        with self.lock:
+            epoch = self.epochs.get(name, 0)
+            self.pending[(txn, name)] = (epoch, seq)
+        payload = encode_delta(entries)
+        head = origin or self.core.address
+        if self._wal is not None:
+            self._wal.tentative(txn, name, epoch, seq, payload, head)
+        for f in fl:
+            self._notify(f, "repl_apply", name=name, txn=txn, epoch=epoch,
+                         seq=seq, payload=payload, head=head)
+
     def on_terminate(self, txn: str, name: str) -> None:
         """Final replication at step 5: promote the pending tentative."""
         with self.lock:
@@ -278,8 +312,20 @@ class ReplicationManager:
     # ------------------------------------------------------------------ #
     def _apply(self, rec: ReplicaRecord, epoch: int, seq: int,
                payload: bytes) -> None:
-        if (epoch, seq) > rec.applied:
-            rec.payload = payload
+        # ``>=``, not ``>``: every member of one commute group (§12) ships
+        # its delta tentative at the group's shared seq ``cg_pv`` — an
+        # equal-seq resolution must still fold, or the follower would keep
+        # only the FIRST member's effect. fold_payload folds a delta into
+        # the committed snapshot and lets a snapshot replace it; each
+        # tentative resolves at most once (pop semantics everywhere), so
+        # equal-seq folds never double-apply. Exact commits are unaffected
+        # (their seqs are distinct, their payloads full snapshots). The
+        # quiescence rule makes the guard safe for deltas too: a group only
+        # forms when every earlier commit's final has been sent on this
+        # same FIFO link, so a delta can never fold over a snapshot that is
+        # missing a predecessor.
+        if (epoch, seq) >= rec.applied:
+            rec.payload = fold_payload(rec.payload, payload)
             rec.applied = (epoch, seq)
 
     def _resolve_tentatives_commit(self, txn: str) -> None:

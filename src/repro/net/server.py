@@ -80,7 +80,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.api import (INF, InstanceInvalidated, Mode,
                             RemoteObjectFailure, Suprema,
-                            TransactionError, method_mode)
+                            TransactionError, commute_classes, method_mode)
 from repro.core.buffers import CopyBuffer
 from repro.core.executor import Task, defer_wake_inline
 from repro.core.faults import TransactionMonitor
@@ -93,7 +93,7 @@ from repro.obs import txtrace as _txtrace
 
 from .leases import LeaseManager, LeaseRearming, ObjectMovedError
 from .replication import ReplicaRecord, ReplicationManager
-from .wal import FileStorage, Wal
+from .wal import FileStorage, Wal, fold_payload
 from .wire import (ConnectionClosed, ERR, FrameReader, NOTE, OK,
                    PIGGYBACK_MAX, WireError, encode_error,
                    frame as wire_frame, oob, send_frames, send_msg)
@@ -190,7 +190,7 @@ class _ServerAccess(ObjectAccess):
 
     __slots__ = ("server", "push_conn", "task_result", "push_done",
                  "inline_tasks", "ship_state", "aborted", "repl_origin",
-                 "repl_done")
+                 "repl_done", "oneway_entries")
 
     def __init__(self, server: "NodeServer", session: "_Session",
                  shared: SharedObject, pv: int):
@@ -220,6 +220,10 @@ class _ServerAccess(ObjectAccess):
         #: so its result rides the reply. False from the conn reader (a
         #: one-way kickoff), where inline work would stall the link.
         self.inline_tasks = False
+        #: §12 commute deltas shipped ahead of commit as ``commute_delta``
+        #: one-ways. They precede whatever entries ride the commit RPC
+        #: (same FIFO connection), so :meth:`absorb_entries` prepends them.
+        self.oneway_entries: List[tuple] = []
 
     @property
     def session(self) -> "_Session":
@@ -336,6 +340,18 @@ class _ServerAccess(ObjectAccess):
         with self.shared.header.lock:
             self.aborted = True
 
+    def absorb_entries(self, entries: list) -> None:
+        """Install the commit-shipped write log, preceded by any deltas
+        that already arrived as ``commute_delta`` one-ways (client-issue
+        order == wire order on the FIFO connection == this concatenation)."""
+        if self.oneway_entries:
+            merged = list(self.oneway_entries)
+            self.oneway_entries = []
+            merged.extend(entries)
+            self.log.entries = merged
+        elif entries:
+            self.log.entries = list(entries)
+
     def _owner_label(self) -> str:
         return self.session.txn_uid
 
@@ -385,6 +401,127 @@ class _ServerAccess(ObjectAccess):
             self.shared.header, kind, self.pv, wrapped,
             name=f"{label}:{name}:{self._owner_label()}",
             inline_ready=self.inline_tasks, wake_inline=True)
+
+
+class _ServerCommuteAccess(_ServerAccess):
+    """Home-node access record for a commute-group member (DESIGN.md §12).
+
+    The server-side mirror of :class:`repro.core.transaction.CommuteAccess`
+    in its group-active state — it only ever EXISTS while active; when
+    :meth:`NodeCore._make_access` cannot join the group it builds a plain
+    :class:`_ServerAccess` instead, and the client-shipped deltas become
+    ordinary §2.8.4 log entries (the fallback is invisible to the client:
+    commute methods are pure writes returning ``None`` either way).
+
+    While the group lives, its deltas touch nothing locally: no
+    checkpoint, no ``lv`` advance at release — the fold happens at
+    *terminate*, strictly after the commit decision, under the object's
+    per-class merge lock. Replication is the one thing that must NOT wait
+    for the decision: ``commit_prep`` ships the member's entry list as a
+    DELTA tentative (step 3, before the wave reply), so the §8
+    tentative-before-decision invariant covers commute commits; the
+    follower folds the delta into its committed snapshot when the final
+    (or the decision) resolves it. All of a group's tentatives share
+    ``seq == cg_pv``, which is why the follower's apply guard accepts
+    equal sequence numbers (deltas fold — resolution order across members
+    is free, because the method class commutes).
+    """
+
+    __slots__ = ("commute_cls", "_cg_left")
+
+    def __init__(self, server: "NodeServer", session: "_Session",
+                 shared: SharedObject, pv: int, commute_cls: str):
+        super().__init__(server, session, shared, pv)
+        self.commute_cls = commute_cls
+        self._cg_left = False
+
+    def commute_depart(self) -> None:
+        """Leave the commute group exactly once. ``commute_leave``
+        decrements the member count (NOT idempotent), and terminate, the
+        §3.4 expiry, and a dispense-time expired re-check can race on the
+        same access — the flag (under ``self.lock``) picks one winner."""
+        with self.lock:
+            if self._cg_left:
+                return
+            self._cg_left = True
+        self.shared.header.commute_leave()
+
+    # No state was touched before the fold: nothing to checkpoint,
+    # validate, restore, or early-release.
+    def ensure_checkpoint(self) -> None:
+        pass
+
+    def wait_termination(self, timeout: Optional[float]) -> bool:
+        return False   # ltv == cg_pv - 1 by construction: never blocks
+
+    def valid_commit(self) -> bool:
+        return True
+
+    def commit_prep(self) -> None:
+        # Staleness check + DELTA tentative replication. The fold itself
+        # must wait for the commit DECISION (terminate) — prepping applies
+        # nothing locally — but the deltas ship to the followers NOW,
+        # before the wave reply that feeds the decision. Without this the
+        # §8 invariant (every tentative is at the followers before any
+        # decision exists) would not cover commute commits: a primary
+        # crashing between decision and fold would take the only copy of
+        # the deltas with it while the promoted follower acks the decide.
+        with self.shared.header.lock:
+            if self.aborted or self.session.expired:
+                raise InstanceInvalidated(
+                    f"commute access on {self.shared.name!r} was rolled "
+                    f"back before commit could run")
+            with self.lock:
+                entries = self.oneway_entries + self.log.entries
+            if entries:
+                self.server.replication.on_commute_prep(
+                    self.session.txn_uid, self.shared.name, entries,
+                    self.pv, self.repl_origin)
+                with self.lock:
+                    self.repl_done = True
+
+    def release(self) -> None:
+        # An lv advance would open exact successors' gates before the
+        # group's folds landed — release rides the dissolve instead.
+        with self.lock:
+            self.released = True
+
+    def rollback(self) -> None:
+        self.mark_aborted()
+        with self.lock:
+            self.log.entries.clear()
+            self.oneway_entries = []
+
+    def terminate(self) -> None:
+        if self.terminated:
+            return
+        self.terminated = True
+        shared, session = self.shared, self.session
+        with self.lock:
+            # Capture the delta list under the access lock: a racing §3.4
+            # expiry clears these same lists, and the fold below iterates
+            # outside this lock.
+            entries = self.oneway_entries + self.log.entries
+            self.oneway_entries = []
+            self.log.entries = []
+            fold = (bool(entries) and not self.aborted
+                    and not session.expired)
+        if fold:
+            h = shared.header
+            with h.commute_merge_lock(self.commute_cls):
+                obj = shared.holder.obj
+                for method, args, kwargs in entries:
+                    getattr(obj, method)(*args, **(kwargs or {}))
+                with self.lock:
+                    self.modified = True
+                self.server.n_merged_deltas += len(entries)
+            # Replication already happened: the DELTA tentative shipped at
+            # commit_prep (step 3, before the decision), and the final
+            # rides the caller's ``on_terminate`` right after this returns
+            # — the follower folds its buffered copy of the same entries
+            # then (or already did, if the decision broadcast beat us).
+        shared.clear_holder(session)
+        self.commute_depart()
 
 
 class _Session:
@@ -491,6 +628,11 @@ class NodeCore:
         self._migrate_queue: List[Tuple[str, str]] = []
         self.migrate_auto = False       # affinity-triggered handoff opt-in
         self.n_migrations = 0
+        #: §12 commute counters: deltas folded into live state at
+        #: terminate, and deltas that arrived as ``commute_delta`` one-ways
+        #: (the coordination-avoidance fraction of the write traffic).
+        self.n_merged_deltas = 0
+        self.n_commute_oneways = 0
         #: observability: one trace track + metric namespace per node,
         #: reading THIS node's clock domain (monotonic vs. sim-virtual).
         #: Created even when tracing is off — a bare Tracer holds no ring
@@ -562,7 +704,7 @@ class NodeCore:
         the dead primary's private versions are meaningless on this node —
         in-flight transactions abort and retry against the new header)."""
         try:
-            shared = self.registry.bind(name, obj, self.node)
+            shared = self.registry.bind(name, obj, node=self.node)
         except ValueError:
             return   # already bound here: promotion is idempotent
         self._obs_stamp(shared)
@@ -715,6 +857,21 @@ class NodeCore:
             accesses = list(session._accesses.items())
         for shared, acc in accesses:
             h = shared.header
+            if isinstance(acc, _ServerCommuteAccess):
+                # §12: a dead commute member's undelivered deltas are simply
+                # discarded — live state was never touched (no restore, no
+                # instance bump, nobody cascades). Its private version is
+                # the GROUP's shared cg_pv: skipping it would terminate the
+                # group under its surviving members, so the member departs
+                # instead (the last departure dissolves the group).
+                with acc.lock:
+                    acc.log.entries.clear()
+                    acc.oneway_entries = []
+                shared.clear_holder(session)
+                acc.commute_depart()
+                self.monitor.rollbacks.append(shared.name)
+                self.replication.on_abort(session.txn_uid, shared.name)
+                continue
             with h.lock:
                 # Read access state under the header lock: an lw-apply task
                 # holding it is either fully applied (its checkpoint is
@@ -1165,7 +1322,10 @@ class NodeCore:
             d = self.replication.record_decision(
                 txn, "commit" if status == "commit" else "abort")
             if d == "commit" and (t[0], t[1]) >= (epoch, seq):
-                epoch, seq, payload = t[0], t[1], t[2]
+                # fold_payload: a §12 commute delta folds into the
+                # recovered snapshot; an exact tentative replaces it.
+                epoch, seq = t[0], t[1]
+                payload = fold_payload(payload, t[2])
         new_epoch = epoch + 1
         self.bind_local(name, pickle.loads(payload))
         followers = [f for f in info.get("followers", ()) if f != self.address]
@@ -1191,18 +1351,32 @@ class NodeCore:
                 modes[n] = mode
         return modes
 
+    @staticmethod
+    def _declared_commutes(obj: Any) -> Dict[str, str]:
+        """All ``@access(..., commutes=)`` declarations of ``obj``'s class
+        — shipped with bindings like the modes, so commute-aware clients
+        build :class:`~repro.net.remote.RemoteCommuteAccess` records
+        without a round trip. Empty for undeclared classes (the common
+        case), keeping the wire byte-identical to the pre-§12 protocol."""
+        return commute_classes(obj)
+
     def _op_list_bindings(self) -> Dict[str, Any]:
         objs = self.registry.all_objects()
         followers = {name: fl for name in objs
                      if (fl := self.replication.followers_of(name))}
-        return {"node": self.node_name,
-                "bindings": {name: self._declared_modes(shared.holder.obj)
-                             for name, shared in sorted(objs.items())},
-                "followers": followers}
+        commutes = {name: cm for name, shared in objs.items()
+                    if (cm := self._declared_commutes(shared.holder.obj))}
+        out = {"node": self.node_name,
+               "bindings": {name: self._declared_modes(shared.holder.obj)
+                            for name, shared in sorted(objs.items())},
+               "followers": followers}
+        if commutes:
+            out["commutes"] = commutes
+        return out
 
     def _op_bind(self, name: str, obj: Any,
-                 followers: List[str] = ()) -> Dict[str, Mode]:
-        self._obs_stamp(self.registry.bind(name, obj, self.node))
+                 followers: List[str] = ()) -> Dict[str, Any]:
+        self._obs_stamp(self.registry.bind(name, obj, node=self.node))
         with self._lock:
             self._gates[name] = threading.Lock()
         # unconditional: follower-less binds still hit the WAL (when one
@@ -1211,7 +1385,11 @@ class NodeCore:
         # Ownership starts as a lease (§10): granted at the binding epoch,
         # renewed over the chain. Follower-less binds self-renew trivially.
         self.leases.grant_local(name, self.replication.epochs.get(name, 0))
-        return self._declared_modes(obj)
+        return {"modes": self._declared_modes(obj),
+                "commutes": self._declared_commutes(obj)}
+
+    def _op_commute_classes(self, name: str) -> Dict[str, str]:
+        return self._declared_commutes(self._shared(name).holder.obj)
 
     def _op_mode_of(self, name: str, method: str) -> Mode:
         return method_mode(self._shared(name).holder.obj, method)
@@ -1246,6 +1424,7 @@ class NodeCore:
     def _op_dispense_batch(self, txn: str, client_id: str, names: List[str],
                            ro_names: List[str] = (), kind: str = "access",
                            chain: List[dict] = (), affinity: str = "",
+                           commute: Optional[Dict[str, str]] = None,
                            _conn: Optional[_Conn] = None,
                            _nb: bool = False) -> Dict[str, Any]:
         """Lock-and-dispense for this node's batch; then *forward the
@@ -1268,6 +1447,7 @@ class NodeCore:
         objs = [(self._shared(n), n) for n in names]
         objs.sort(key=lambda sn: sn[0].header.uid)   # node-local global order
         pvs: Dict[str, int] = {}
+        made: Dict[str, _ServerAccess] = {}
         acquired: List[threading.Lock] = []
         try:
             for shared, name in objs:
@@ -1286,6 +1466,8 @@ class NodeCore:
                 # lock, paired with `_do_migrate` which marks the object
                 # under the same lock — so a grant and a drain snapshot
                 # can never interleave.
+                cls = commute.get(name) if commute else None
+                joined = False
                 while True:
                     rearm = None
                     with shared.header.lock:
@@ -1293,7 +1475,16 @@ class NodeCore:
                         if ev is None:
                             try:
                                 self.leases.check_grant(name)
-                                pv = shared.header.dispense()
+                                # §12: a commute-declared access tries the
+                                # group first; 0 (other class / snapped /
+                                # chain not quiescent) falls back to exact
+                                # dispensing — invisible to the client.
+                                joined = bool(
+                                    cls is not None
+                                    and (pv := shared.header.commute_join(
+                                        cls)))
+                                if not joined:
+                                    pv = shared.header.dispense()
                                 break
                             except LeaseRearming as e:
                                 # idle-lapse re-ack round (§10): park
@@ -1304,9 +1495,12 @@ class NodeCore:
                                   self.leases.ttl if rearm is not None
                                   else None)
                 self._affinity_vote(name, affinity)
+                acc = (_ServerCommuteAccess(self, session, shared, pv, cls)
+                       if joined else
+                       _ServerAccess(self, session, shared, pv))
                 with session.lock:   # heartbeats iterate _accesses live
-                    session._accesses[shared] = _ServerAccess(
-                        self, session, shared, pv)
+                    session._accesses[shared] = acc
+                made[name] = acc
                 pvs[name] = pv
         except BaseException:
             for g in reversed(acquired):
@@ -1325,7 +1519,14 @@ class NodeCore:
         if session.expired:
             self._release_gates(session)
             for name, pv in pvs.items():
-                skip_version(self._shared(name).header, pv)
+                acc = made[name]
+                if isinstance(acc, _ServerCommuteAccess):
+                    # the group's shared version must not be skipped under
+                    # its surviving members — depart instead (idempotent
+                    # against a racing expiry that saw the access)
+                    acc.commute_depart()
+                else:
+                    skip_version(self._shared(name).header, pv)
             raise InstanceInvalidated(
                 f"transaction {txn!r} crash-stopped during dispense "
                 f"(§3.4); dispensed versions skipped")
@@ -1354,10 +1555,13 @@ class NodeCore:
                     ro[name] = None
         if chain:
             head, rest = chain[0], list(chain[1:])
+            fwd: Dict[str, Any] = {}
+            if head.get("commute"):
+                fwd["commute"] = head["commute"]
             sub = self._peer(head["address"]).call(
                 "dispense_batch", txn=txn, client_id=client_id,
                 names=head["names"], ro_names=head["ro_names"], kind=kind,
-                chain=rest)
+                chain=rest, **fwd)
             pvs.update(sub["pvs"])
             ro.update(sub["ro"])
         return {"pvs": pvs, "ro": ro}
@@ -1569,6 +1773,81 @@ class NodeCore:
         """Commit step 4, batched per node: names whose instance moved."""
         return [name for name in names if not self._acc(txn, name).valid()]
 
+    def _lazy_commute_acc(self, txn: str, client_id: Optional[str],
+                          name: str, cls: str) -> _ServerAccess:
+        """Get-or-create the access record for a late commute join (§12).
+
+        A commute-only single-domain transaction skips the dispense RPC
+        entirely (coordination avoidance): its session and access are
+        created lazily at the first ``commute_delta`` one-way or at
+        ``commit_solo``. Joining the group needs no 2PL window — one
+        object, one domain — so the dispense gate is taken only for the
+        join itself (serializing with migration drains) and released
+        immediately. When the group cannot be joined the access falls back
+        to exact dispensing: a late start on a single node, gated like any
+        newcomer behind the chain it joined late."""
+        with self._lock:
+            session = self._sessions.get(txn)
+            if session is None:
+                session = self._sessions[txn] = _Session(
+                    txn, client_id or txn, now=self._clock())
+        session.last_contact = self._clock()
+        shared = self._shared(name)
+        with session.lock:
+            acc = session._accesses.get(shared)
+        if acc is not None:
+            return acc
+        with self._lock:
+            gate = self._gates.setdefault(name, threading.Lock())
+        self._gate_acquire(gate)
+        try:
+            while True:
+                rearm = None
+                with shared.header.lock:
+                    ev = self._migrating.get(name)
+                    if ev is None:
+                        try:
+                            self.leases.check_grant(name)
+                            joined = bool(
+                                pv := shared.header.commute_join(cls))
+                            if not joined:
+                                pv = shared.header.dispense()
+                            break
+                        except LeaseRearming as e:
+                            rearm = e.event
+                blocking_wait(rearm if rearm is not None else ev,
+                              self.leases.ttl if rearm is not None else None)
+        finally:
+            gate.release()
+        acc = (_ServerCommuteAccess(self, session, shared, pv, cls)
+               if joined else
+               _ServerAccess(self, session, shared, pv))
+        with session.lock:
+            session._accesses[shared] = acc
+        # §3.4 re-check, mirroring dispense_batch: a session expired while
+        # we were parked above must not leave a ghost version behind.
+        if session.expired:
+            if isinstance(acc, _ServerCommuteAccess):
+                acc.commute_depart()
+            else:
+                skip_version(shared.header, pv)
+            raise InstanceInvalidated(
+                f"transaction {txn!r} crash-stopped during its late "
+                f"commute join on {name!r} (§3.4)")
+        return acc
+
+    def _op_commute_delta(self, txn: str, client_id: str, name: str,
+                          cls: str, entries: List[tuple]) -> None:
+        """One flushed batch of commuting deltas, shipped as a one-way
+        ahead of commit (§12). Buffered on the access — NEVER applied here:
+        the fold waits for the commit decision (terminate). Arrives on the
+        client's FIFO connection, so buffer order == issue order, and the
+        commit RPC that follows it can never overtake."""
+        acc = self._lazy_commute_acc(txn, client_id, name, cls)
+        with acc.lock:
+            acc.oneway_entries.extend(entries)
+        self.n_commute_oneways += len(entries)
+
     def _op_commit_wave1(self, txn: str, items: List[tuple],
                          timeout: Optional[float],
                          origin: Optional[str] = None) -> Dict[str, Any]:
@@ -1591,8 +1870,7 @@ class NodeCore:
                 blocked += 1
         for name, entries in items:
             acc = self._acc(txn, name)
-            if entries:
-                acc.log.entries = list(entries)
+            acc.absorb_entries(entries)
             acc.repl_origin = origin
             acc.commit_prep()
         bad = [name for name, _e in items
@@ -1600,10 +1878,40 @@ class NodeCore:
         return {"blocked": blocked, "bad": bad}
 
     def _op_commit_solo(self, txn: str, items: List[tuple],
-                        timeout: Optional[float]) -> Dict[str, Any]:
+                        timeout: Optional[float],
+                        client_id: Optional[str] = None,
+                        commute: Optional[Dict[str, str]] = None,
+                        commute_counts: Optional[Dict[str, int]] = None
+                        ) -> Dict[str, Any]:
         """Steps 2-5 of a single-domain commit in one RPC: this node holds
         the whole access set, so its validation verdict alone decides
-        termination, and the session ends with it."""
+        termination, and the session ends with it.
+
+        ``commute`` maps commute-declared access names to their method
+        class (§12): a deferred-start transaction (commute-only, single
+        domain) never dispensed, so its accesses are created here — the
+        late group join IS its start. Names already dispensed come back
+        from :meth:`_lazy_commute_acc` unchanged."""
+        if commute:
+            for name, cls in commute.items():
+                self._lazy_commute_acc(txn, client_id, name, cls)
+        if commute_counts:
+            # Torn-delta fence: every delta the client recorded must be
+            # here (one-way flushes + commit-riding remainder) or the fold
+            # would commit a partial effect set — possible only when an
+            # illusory-crash expiry discarded the flushed prefix before
+            # this commit lazily re-created the session. Abort instead.
+            by_name = dict(items)
+            for name, total in commute_counts.items():
+                acc = self._acc(txn, name)
+                with acc.lock:
+                    got = (len(acc.oneway_entries)
+                           + len(by_name.get(name) or ()))
+                if got != total:
+                    raise InstanceInvalidated(
+                        f"commute delta set on {name!r} is torn "
+                        f"({got}/{total} deltas reached the home node); "
+                        f"transaction {txn!r} must abort")
         res = self._op_commit_wave1(txn, items, timeout)
         if not res["bad"]:
             self._op_finish_batch(txn, [n for n, _e in items], end=True)
@@ -2117,6 +2425,8 @@ class NodeCore:
                 "migrations": self.n_migrations,
                 "wal_appends": 0 if self.wal is None else self.wal.n_appends,
                 "wal_syncs": 0 if self.wal is None else self.wal.n_syncs,
+                "merged_deltas": self.n_merged_deltas,
+                "commute_oneways": self.n_commute_oneways,
                 "metrics": self.obs_metrics.snapshot()}
 
     def _op_trace_dump(self, reset: bool = False) -> List[dict]:
@@ -2153,7 +2463,7 @@ class NodeServer(NodeCore):
         "lw_apply", "repl_init", "repl_apply", "repl_final", "repl_drop",
         "repl_decision", "repl_decision_ack", "repl_retire", "txn_status",
         "lease_renew", "lease_ack", "lease_grant", "migrate_in",
-        "chain_probe", "repl_chain",
+        "chain_probe", "repl_chain", "commute_classes",
     })
 
     #: wire v3 ships bulk payloads as out-of-band segments.
@@ -2458,6 +2768,8 @@ class NodeServer(NodeCore):
                 if entries:
                     return False
                 acc = self._acc(txn, name)
+                if acc.oneway_entries:
+                    return False   # §12 deltas pending: fold needs a worker
                 h = acc.shared.header
                 with h.lock:
                     if h.ltv < acc.pv - 1:

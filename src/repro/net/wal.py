@@ -34,9 +34,37 @@ import struct
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
-__all__ = ["Wal", "FileStorage", "VirtualDisk", "Recovered", "replay"]
+__all__ = ["Wal", "FileStorage", "VirtualDisk", "Recovered", "replay",
+           "DELTA_MAGIC", "encode_delta", "fold_payload"]
 
 _HDR = struct.Struct("<II")
+
+#: Prefix marking a replication payload as a §12 commute *delta* — a
+#: pickled entry list to fold into the committed snapshot — rather than a
+#: full state snapshot that replaces it. No pickle protocol starts with a
+#: NUL byte, so the prefix test can never misfire on a snapshot payload.
+DELTA_MAGIC = b"\x00\xc6\x12"
+
+
+def encode_delta(entries) -> bytes:
+    """Wrap a commute-group member's buffered ``(method, args, kwargs)``
+    entries as a replication payload (tentative delta, DESIGN.md §12)."""
+    return DELTA_MAGIC + pickle.dumps(
+        list(entries), protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def fold_payload(base: bytes, payload: bytes) -> bytes:
+    """Resolve a replication payload against the committed snapshot
+    ``base``: a snapshot payload replaces it, a commute delta folds into
+    it (replay the entries against the unpickled state — the §12 contract
+    is that entries of one method class commute, so fold order across
+    group members is free)."""
+    if not payload.startswith(DELTA_MAGIC):
+        return payload
+    obj = pickle.loads(base)
+    for method, args, kwargs in pickle.loads(payload[len(DELTA_MAGIC):]):
+        getattr(obj, method)(*args, **(kwargs or {}))
+    return pickle.dumps(obj)
 
 
 def _frame(record: Dict[str, Any]) -> bytes:
@@ -345,7 +373,11 @@ class Wal:
             return
         epoch, seq, payload, _head = t
         if (epoch, seq) >= (o["epoch"], o["seq"]):
-            o["payload"], o["epoch"], o["seq"] = payload, epoch, seq
+            # fold_payload: a §12 commute delta folds into the replayed
+            # snapshot instead of replacing it (same rule as the live
+            # follower's apply — replay must converge to the same state).
+            o["payload"] = fold_payload(o["payload"], payload)
+            o["epoch"], o["seq"] = epoch, seq
 
     def close(self) -> None:
         self.storage.close()

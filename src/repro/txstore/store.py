@@ -84,7 +84,7 @@ class VersionedStateStore:
         self.cells: Dict[str, SharedObject] = {}
         for name in self.CELLS:
             self.cells[name] = self.registry.bind(
-                name, StateCell(), self.node)
+                name, StateCell(), node=self.node)
         self.monitor = TransactionMonitor(self.registry,
                                           timeout=monitor_timeout)
         self.monitor.start()

@@ -34,7 +34,7 @@ def reg():
 
 
 def test_sva_basic_and_early_release(reg):
-    c = reg.bind("c", Cell(0), reg.node("n"))
+    c = reg.bind("c", Cell(0), node=reg.node("n"))
     events = []
     gate = threading.Event()
 
@@ -66,7 +66,7 @@ def test_sva_basic_and_early_release(reg):
 
 
 def test_sva_manual_abort_cascades(reg):
-    c = reg.bind("c", Cell(10), reg.node("n"))
+    c = reg.bind("c", Cell(10), node=reg.node("n"))
     res = {}
     sync = threading.Event()
 
@@ -103,7 +103,7 @@ def test_sva_manual_abort_cascades(reg):
                                          ("rw", True), ("rw", False),
                                          ("glock", True)])
 def test_lock_frameworks_serialize_correctly(reg, kind, strict):
-    cells = [reg.bind(f"c{kind}{strict}{i}", Cell(0), reg.node("n"))
+    cells = [reg.bind(f"c{kind}{strict}{i}", Cell(0), node=reg.node("n"))
              for i in range(3)]
 
     def worker(i):
@@ -130,7 +130,7 @@ def test_lock_frameworks_serialize_correctly(reg, kind, strict):
 
 
 def test_rw_lock_allows_parallel_readers(reg):
-    c = reg.bind("rwc", Cell(7), reg.node("n"))
+    c = reg.bind("rwc", Cell(7), node=reg.node("n"))
     inside = []
     lock = threading.Lock()
     peak = []
@@ -158,7 +158,7 @@ def test_rw_lock_allows_parallel_readers(reg):
 
 
 def test_tfa_conflict_abort_and_retry(reg):
-    c = reg.bind("tfa-c", Cell(0), reg.node("n"))
+    c = reg.bind("tfa-c", Cell(0), node=reg.node("n"))
 
     def worker():
         for _ in range(10):
@@ -176,8 +176,8 @@ def test_tfa_conflict_abort_and_retry(reg):
 
 
 def test_tfa_read_snapshot_consistency(reg):
-    a = reg.bind("tfa-a", Cell(1), reg.node("n"))
-    b = reg.bind("tfa-b", Cell(-1), reg.node("n"))
+    a = reg.bind("tfa-a", Cell(1), node=reg.node("n"))
+    b = reg.bind("tfa-b", Cell(-1), node=reg.node("n"))
     stop = threading.Event()
     bad = []
 

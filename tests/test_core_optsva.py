@@ -39,7 +39,7 @@ def reg():
 
 
 def bind(reg, name, bal=0, node="n1"):
-    return reg.bind(name, Account(bal), reg.node(node))
+    return reg.bind(name, Account(bal), node=reg.node(node))
 
 
 # --------------------------------------------------------------------------- #

@@ -46,7 +46,7 @@ class Cell:
 def test_conservation_under_concurrent_transfers(transfers):
     reg = Registry()
     node = reg.add_node("n")
-    cells = [reg.bind(f"c{i}", Cell(100), node) for i in range(4)]
+    cells = [reg.bind(f"c{i}", Cell(100), node=node) for i in range(4)]
 
     def run_transfer(src, dst, amt):
         if src == dst:
@@ -74,7 +74,7 @@ def test_conservation_under_concurrent_transfers(transfers):
 def test_abort_freedom_random_schedules(txn_plans):
     reg = Registry()
     node = reg.add_node("n")
-    cells = [reg.bind(f"c{i}", Cell(0), node) for i in range(3)]
+    cells = [reg.bind(f"c{i}", Cell(0), node=node) for i in range(3)]
     failures = []
 
     def run_one(plan):
@@ -122,7 +122,7 @@ def test_serialization_matches_version_order(writes):
     """Concurrent single-object writers end with the last-versioned value."""
     reg = Registry()
     node = reg.add_node("n")
-    cell = reg.bind("c", Cell(0), node)
+    cell = reg.bind("c", Cell(0), node=node)
     order = []
     lock = threading.Lock()
 
@@ -149,7 +149,7 @@ def test_serialization_matches_version_order(writes):
 def test_version_counters_monotonic():
     reg = Registry()
     node = reg.add_node("n")
-    cell = reg.bind("c", Cell(0), node)
+    cell = reg.bind("c", Cell(0), node=node)
     samples = []
     stop = threading.Event()
 

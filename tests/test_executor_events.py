@@ -146,7 +146,7 @@ def test_transaction_wakeup_latency_under_old_backstop():
     not after the seed's 50 ms poll tick."""
     reg = Registry()
     node = reg.add_node("n")
-    c = reg.bind("c", Cell(0), node)
+    c = reg.bind("c", Cell(0), node=node)
     holder_in = threading.Event()
     release_holder = threading.Event()
 

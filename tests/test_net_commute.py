@@ -1,0 +1,379 @@
+"""Commutativity-aware coordination avoidance (DESIGN.md §12; ISSUE 10).
+
+* three-way transport equivalence (inproc / TCP / sim) of a schedule
+  mixing commute-restricted and exact transactions: identical observable
+  traces and final state, and the commute spelling commits the same state
+  as the exact spelling of the same deposits;
+* supremum × commute: the declared op bound gates commute deltas like any
+  other supremum, and only methods of the DECLARED class are legal;
+* snap-back ordering: an exact reader concurrent with commute writers
+  observes only whole-transaction folds (never a torn group);
+* the crash-mid-merge replication fault: the home node dies between the
+  commit decision and the delta fold — the promoted follower must still
+  apply the committed deltas, because delta tentatives ship at commit
+  step 3, *before* any decision exists (the §8 invariant);
+* unit-level delta-tentative semantics on ``ReplicationManager``: fold on
+  final, fold on decision, equal-seq group members each fold exactly
+  once, stale re-forwards never double-apply;
+* the ``repro.dtm`` surface and the exactly-once deprecation warnings of
+  the legacy publish/import forms.
+"""
+import pickle
+import warnings
+
+import pytest
+
+from repro.core import (IllegalState, Registry, SupremumViolation,
+                        Transaction)
+from repro.core.api import RemoteObjectFailure
+from repro.net.demo import HotAccount
+from repro.net.replication import ReplicationManager
+from repro.net.server import NodeServer
+from repro.net.simnet import build_simnet
+from repro.net.wal import encode_delta
+
+
+# --------------------------------------------------------------------------- #
+# three-way transport equivalence                                             #
+# --------------------------------------------------------------------------- #
+
+def _run_commute_schedule(reg):
+    """A fixed single-client schedule over one hot object ``H``; returns
+    the observable trace and the final balance."""
+    trace = []
+
+    def record(tag, declare, body):
+        t = Transaction(reg)
+        proxies = declare(t)
+        try:
+            out = t.start(lambda tt: body(tt, *proxies))
+            trace.append((tag, "commit", out, t.stats.waits))
+        except SupremumViolation:
+            trace.append((tag, "supremum-abort", None, t.stats.waits))
+        except IllegalState as e:
+            trace.append((tag, "illegal", None, t.stats.waits))
+
+    # 1. exact seed: deposit through the plain write path (same method,
+    # no commute declaration -> full version-gated dispensing)
+    record("exact-seed",
+           lambda t: (t.writes(reg.locate("H"), 1),),
+           lambda t, h: h.deposit(10))
+
+    # 2-3. two commute-restricted transactions form one merge group
+    record("commute-a",
+           lambda t: (t.commutes(reg.locate("H"), 3),),
+           lambda t, h: (h.deposit(1), h.deposit(2), h.deposit(3)))
+    record("commute-b",
+           lambda t: (t.commutes(reg.locate("H"), 2),),
+           lambda t, h: (h.deposit(4), h.deposit(5)))
+
+    # 4. exact reader: snaps the object back to full OptSVA ordering and
+    # must observe every fold above
+    record("reader",
+           lambda t: (t.reads(reg.locate("H"), 1),),
+           lambda t, h: h.balance())
+
+    # 5. a fresh group forms after the snap-back
+    record("commute-c",
+           lambda t: (t.commutes(reg.locate("H"), 1),),
+           lambda t, h: h.deposit(7))
+
+    # 6. supremum violation: the declared op bound gates deltas too
+    record("violate",
+           lambda t: (t.commutes(reg.locate("H"), 1),),
+           lambda t, h: (h.deposit(1), h.deposit(1)))
+
+    # 7. a method outside the declared commute class is illegal — it
+    # would break the no-coordination promise
+    record("wrong-method",
+           lambda t: (t.commutes(reg.locate("H"), 1),),
+           lambda t, h: h.balance())
+
+    state = reg.locate("H").raw_call("balance")
+    return trace, state
+
+
+def _schedule_inproc():
+    reg = Registry()
+    n0 = reg.add_node("n0")
+    n0.bind("H", HotAccount(100))
+    try:
+        return _run_commute_schedule(reg)
+    finally:
+        reg.shutdown()
+
+
+def _schedule_tcp():
+    server = NodeServer("h0", monitor_timeout=5.0).start()
+    try:
+        reg = Registry()
+        node = reg.connect(server.address)
+        node.bind("H", HotAccount(100))
+        try:
+            return _run_commute_schedule(reg)
+        finally:
+            reg.shutdown()
+    finally:
+        server.stop()
+
+
+def _schedule_sim(seed=42):
+    net = build_simnet(seed, 1)
+    setup = net.client_registry("setup")
+    setup.nodes[0].bind("H", HotAccount(100))
+    out = {}
+
+    def client():
+        reg = net.client_registry("c0")
+        out["trace"], out["state"] = _run_commute_schedule(reg)
+
+    net.spawn(client, "c0")
+    net.run()
+    net.shutdown()
+    return out["trace"], out["state"]
+
+
+def test_transport_equivalence_commute():
+    trace_i, state_i = _schedule_inproc()
+    trace_t, state_t = _schedule_tcp()
+    trace_s, state_s = _schedule_sim()
+    assert trace_i == trace_t, (
+        f"semantics diverged:\n inproc={trace_i}\n tcp={trace_t}")
+    assert trace_i == trace_s, (
+        f"semantics diverged:\n inproc={trace_i}\n sim={trace_s}")
+    # 100 + 10 (exact) + 1+2+3 + 4+5 (merged groups) + 7 (post-snap group)
+    assert state_i == state_t == state_s == 132
+    # the reader snapped the groups back and observed every fold
+    assert [e for e in trace_i if e[0] == "reader"][0][2] == 125
+
+
+def test_commute_commits_same_state_as_exact_spelling():
+    """The commute declaration changes coordination, never semantics: the
+    same deposits spelled exactly commit the same final state."""
+    deposits = [1, 2, 3, 4, 5, 7, 10]
+
+    def run(declare):
+        reg = Registry()
+        reg.add_node("n0").bind("H", HotAccount(100))
+        for v in deposits:
+            t = Transaction(reg)
+            p = declare(t, reg)
+            t.start(lambda tt: p.deposit(v))
+        state = reg.locate("H").raw_call("balance")
+        reg.shutdown()
+        return state
+
+    exact = run(lambda t, reg: t.writes(reg.locate("H"), 1))
+    commute = run(lambda t, reg: t.commutes(reg.locate("H"), 1))
+    assert exact == commute == 100 + sum(deposits)
+
+
+# --------------------------------------------------------------------------- #
+# snap-back under a concurrent exact reader (deterministic sim)               #
+# --------------------------------------------------------------------------- #
+
+def test_commute_snapback_concurrent_reader_sim():
+    """Two commute transactions of 3 deposits each race one exact reader:
+    the reader only ever observes whole-transaction folds (a multiple of
+    3 — never a torn group), and the final state has every delta."""
+    net = build_simnet(seed=5, n_nodes=1)
+    setup = net.client_registry("setup")
+    setup.nodes[0].bind("H", HotAccount(0))
+    out = {}
+
+    def writer():
+        reg = net.client_registry("w")
+        for _ in range(2):
+            t = Transaction(reg)
+            p = t.commutes(reg.locate("H"), 3)
+            t.start(lambda tt: (p.deposit(1), p.deposit(1), p.deposit(1)))
+
+    def reader():
+        reg = net.client_registry("r")
+        t = Transaction(reg)
+        p = t.reads(reg.locate("H"), 1)
+        out["seen"] = t.start(lambda tt: p.balance())
+
+    net.spawn(writer, "w")
+    net.spawn(reader, "r")
+    net.run()
+    final = setup.locate("H").raw_call("balance")
+    net.shutdown()
+    assert final == 6
+    assert out["seen"] in (0, 3, 6), out["seen"]
+    assert out["seen"] % 3 == 0
+
+
+# --------------------------------------------------------------------------- #
+# node crash mid delta-merge: the seed-22 shape                               #
+# --------------------------------------------------------------------------- #
+
+def test_commute_crash_before_fold_promoted_follower_keeps_deltas():
+    """A two-domain commute transaction commits; the non-coordinator home
+    node crashes with the ``commit_decide`` in flight — after the
+    decision, before its fold. The redirect delivers the decision to the
+    follower, which must apply the buffered DELTA tentative (shipped at
+    commit step 3): the committed deposit survives the home node."""
+    net = build_simnet(seed=3, n_nodes=3)
+    setup = net.client_registry("setup")
+    n0, n1, n2 = sorted(setup.nodes, key=lambda n: n.name)
+    n0.bind("A", HotAccount(100))
+    n1.bind("H", HotAccount(1000), followers=[n2.address])
+    out = {}
+
+    # node1 dies at the delivery of its commit_decide hop: the decision
+    # exists (coordinator node0 recorded and broadcast it), node1 applied
+    # the wave, but its fold never runs and its repl one-ways are lost.
+    net.inject_node_crash("node1", "commit_decide", nth=1,
+                          phase="before_deliver", label="decide-pre-fold")
+
+    def client():
+        reg = net.client_registry("c0")
+        t = Transaction(reg)
+        pa = t.commutes(reg.locate("A"), 1)
+        ph = t.commutes(reg.locate("H"), 1)
+        t.start(lambda tt: (pa.deposit(5), ph.deposit(7)))
+        out["committed"] = True
+
+        # read H back through the failover path (retry across the §3.4
+        # crash-stop detection gap, as a programmer would)
+        for _ in range(40):
+            try:
+                t2 = Transaction(reg)
+                p2 = t2.reads(reg.locate("H"), 1)
+                out["h"] = t2.start(lambda tt: p2.balance())
+                break
+            except RemoteObjectFailure:
+                reg.nodes[0].client.sleep(0.05)
+
+    net.spawn(client, "c0")
+    net.run()
+    a = setup.locate("A").raw_call("balance")
+    net.shutdown()
+    assert out.get("committed"), "the commit itself must succeed"
+    assert a == 105, "coordinator-side delta applied"
+    assert out.get("h") == 1007, (
+        f"committed delta lost with the crashed home node: {out.get('h')}")
+
+
+# --------------------------------------------------------------------------- #
+# unit-level delta-tentative semantics                                        #
+# --------------------------------------------------------------------------- #
+
+class _StubCore:
+    address = "stub://follower"
+
+    def __init__(self):
+        self.bound = {}
+
+    def has_binding(self, name):
+        return name in self.bound
+
+    def bind_local(self, name, obj):
+        self.bound[name] = obj
+
+    def _peer(self, address):
+        raise ConnectionError(f"peer {address} unreachable")
+
+
+def _bal(mgr, name):
+    return pickle.loads(mgr.replicas[name].payload).balance()
+
+
+def _delta(*amounts):
+    return encode_delta([("deposit", (v,), {}) for v in amounts])
+
+
+def test_delta_tentative_folds_on_final_exactly_once():
+    m = ReplicationManager(_StubCore())
+    m.repl_init("R", primary="dead://primary", order=[_StubCore.address],
+                epoch=0, payload=pickle.dumps(HotAccount(1000)), seq=0)
+    m.repl_apply("R", "T1", 0, 5, _delta(7), head="dead://coord")
+    assert _bal(m, "R") == 1000          # buffered, not applied
+    m.repl_final("R", "T1", 0, 5)
+    assert _bal(m, "R") == 1007          # folded into the snapshot
+    m.repl_final("R", "T1", 0, 5)        # duplicate final: no-op
+    assert _bal(m, "R") == 1007
+
+
+def test_delta_tentatives_equal_seq_members_each_fold_once():
+    """All members of one commute group ship at the shared seq cg_pv —
+    the ``>=`` apply guard must fold each of them, in any resolution
+    order, exactly once."""
+    m = ReplicationManager(_StubCore())
+    m.repl_init("R", primary="dead://primary", order=[_StubCore.address],
+                epoch=0, payload=pickle.dumps(HotAccount(0)), seq=0)
+    m.repl_apply("R", "T1", 0, 4, _delta(1, 2), head="dead://coord")
+    m.repl_apply("R", "T2", 0, 4, _delta(10), head="dead://coord")
+    # T2 resolves by DECISION (the redirect path: the primary died before
+    # its fold), T1 later by final — both must land
+    m.record_decision("T2", "commit")
+    assert _bal(m, "R") == 10
+    m.repl_final("R", "T1", 0, 4)
+    assert _bal(m, "R") == 13
+    assert m.replicas["R"].applied == (0, 4)
+    # a stale snapshot re-forward below the applied seq never regresses
+    m.repl_apply("R", "T0", 0, 3, pickle.dumps(HotAccount(999)),
+                 head="dead://coord")
+    m.repl_final("R", "T0", 0, 3)
+    assert _bal(m, "R") == 13
+
+
+def test_delta_tentative_aborted_is_discarded():
+    m = ReplicationManager(_StubCore())
+    m.repl_init("R", primary="dead://primary", order=[_StubCore.address],
+                epoch=0, payload=pickle.dumps(HotAccount(50)), seq=0)
+    m.repl_apply("R", "T1", 0, 2, _delta(100), head="dead://coord")
+    m.repl_drop("R", "T1")
+    m.record_decision("T1", "abort")
+    assert _bal(m, "R") == 50
+    assert not m.replicas["R"].tentative
+
+
+# --------------------------------------------------------------------------- #
+# the repro.dtm surface + exactly-once deprecations                           #
+# --------------------------------------------------------------------------- #
+
+def test_dtm_surface_is_complete():
+    import repro.dtm as dtm
+    for name in dtm.__all__:
+        assert getattr(dtm, name, None) is not None, name
+    # the quickstart spelling works end-to-end in-process
+    reg = dtm.Registry()
+    node = reg.add_node("n0")
+    dtm.bind(node, "H", HotAccount(3))
+    t = dtm.Transaction(reg)
+    p = t.commutes(reg.locate("H"), 1)
+    t.start(lambda tt: p.deposit(4))
+    assert reg.locate("H").raw_call("balance") == 7
+    reg.shutdown()
+
+
+def test_positional_bind_warns_exactly_once():
+    from repro.core import api as core_api
+    core_api._WARNED.discard("Registry.bind:positional")
+    reg = Registry()
+    node = reg.add_node("n0")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        reg.bind("X", HotAccount(0), node)
+        reg.bind("Y", HotAccount(0), node)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(x.message) for x in w]
+    assert "keyword-only" in str(dep[0].message)
+    reg.shutdown()
+
+
+def test_spawn_server_import_shim_warns_exactly_once():
+    import repro.net as net_pkg
+    from repro.core import api as core_api
+    from repro.net.spawn import spawn_server as canonical
+    core_api._WARNED.discard("import:repro.net.spawn_server")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        first = net_pkg.spawn_server
+        second = net_pkg.spawn_server
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(x.message) for x in w]
+    assert "repro.dtm" in str(dep[0].message)
+    assert first is canonical and second is canonical

@@ -18,9 +18,9 @@ def _topology_inproc():
     reg = Registry()
     n0 = reg.add_node("n0")
     n1 = reg.add_node("n1")
-    reg.bind("A", Account(1000), n0)
-    reg.bind("B", Account(500), n1)
-    reg.bind("C", Account(0), n0)
+    reg.bind("A", Account(1000), node=n0)
+    reg.bind("B", Account(500), node=n1)
+    reg.bind("C", Account(0), node=n0)
     return reg, lambda: reg.shutdown()
 
 

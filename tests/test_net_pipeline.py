@@ -242,7 +242,7 @@ def test_large_buffer_stays_home_and_reads_still_work(server):
     # Bind server-side directly (the class is test-local and cannot be
     # pickled by reference into a subprocess — NodeServer here is
     # in-process, so the embedded registry can hold it).
-    server.registry.bind("FAT", FatCell(), server.node)
+    server.registry.bind("FAT", FatCell(), node=server.node)
     with server._lock:
         server._gates["FAT"] = threading.Lock()
 

@@ -422,8 +422,8 @@ def _run_inproc():
     reg = Registry()
     n0 = reg.add_node("n0")
     n1 = reg.add_node("n1")
-    reg.bind("A", Account(1000), n0)
-    reg.bind("B", Account(500), n1)
+    reg.bind("A", Account(1000), node=n0)
+    reg.bind("B", Account(500), node=n1)
     trace = _schedule(reg, crash=lambda: None)
     reg.shutdown()
     return trace

@@ -90,7 +90,7 @@ def test_restore_state_defaults_to_snapshot_protocol():
 def test_abort_restores_protocol_object_end_to_end():
     reg = Registry()
     node = reg.add_node("n")
-    shared = reg.bind("c", ProtoCell(10), node)
+    shared = reg.bind("c", ProtoCell(10), node=node)
     t = Transaction(reg)
     p = t.updates(shared, 2)
 
